@@ -1,0 +1,77 @@
+"""Render EXPERIMENTS.md tables from dry-run artifacts.
+
+    PYTHONPATH=src python -m benchmarks.emit_tables \
+        --final experiments/dryrun_final --old experiments/dryrun_old
+
+Splices the §Roofline table and the baseline→final per-cell delta table
+into EXPERIMENTS.md at the <!-- ROOFLINE_TABLE --> / <!-- PERF_DELTA_TABLE -->
+markers.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+
+def _rows(dryrun_dir):
+    from .roofline import full_table
+    return full_table(dryrun_dir)
+
+
+def roofline_md(dryrun_dir: str) -> str:
+    rows = _rows(dryrun_dir)
+    out = ["| mesh | arch | shape | dominant | mfu | compute_s | memory_s "
+           "| collective_s | useful | temp GiB/dev |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(
+            f"| {r['mesh']} | {r['arch']} | {r['shape']} | "
+            f"{r['dominant'][:-2]} | {r['roofline_fraction_mfu']:.3f} | "
+            f"{r['compute_s']:.2e} | {r['memory_s']:.2e} | "
+            f"{r['collective_s']:.2e} | {r['useful_fraction']:.2f} | "
+            f"{r['temp_bytes_per_device']/2**30:.1f} |")
+    return "\n".join(out)
+
+
+def delta_md(old_dir: str, new_dir: str) -> str:
+    out = ["| mesh | arch | shape | temp GiB old→new | coll GiB/dev old→new |",
+           "|---|---|---|---|---|"]
+    for mesh in ("pod16x16", "pod2x16x16"):
+        od = os.path.join(old_dir, mesh)
+        nd = os.path.join(new_dir, mesh)
+        if not (os.path.isdir(od) and os.path.isdir(nd)):
+            continue
+        for f in sorted(os.listdir(nd)):
+            if not f.endswith(".json") or not os.path.exists(
+                    os.path.join(od, f)):
+                continue
+            o = json.load(open(os.path.join(od, f)))
+            n = json.load(open(os.path.join(nd, f)))
+            to = o["memory_analysis"].get("temp_size_in_bytes", 0) / 2**30
+            tn = n["memory_analysis"].get("temp_size_in_bytes", 0) / 2**30
+            co = o["collectives_per_device"]["operand_bytes"] / 2**30
+            cn = n["collectives_per_device"]["operand_bytes"] / 2**30
+            out.append(f"| {mesh} | {n['arch']} | {n['shape']} | "
+                       f"{to:.1f} → {tn:.1f} | {co:.2f} → {cn:.2f} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--final", default="experiments/dryrun_final")
+    ap.add_argument("--old", default="experiments/dryrun_old")
+    ap.add_argument("--doc", default="EXPERIMENTS.md")
+    args = ap.parse_args()
+
+    doc = open(args.doc).read()
+    doc = doc.replace("<!-- ROOFLINE_TABLE -->",
+                      roofline_md(args.final))
+    doc = doc.replace("<!-- PERF_DELTA_TABLE -->",
+                      delta_md(args.old, args.final))
+    open(args.doc, "w").write(doc)
+    print("EXPERIMENTS.md tables written")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Kernel micro-benchmarks: Pallas (interpret on CPU) vs jnp reference.
+
+On this container the Pallas kernels execute in interpret mode, so the
+*performance* numbers that matter are the ref-path (XLA-fused) timings and
+the kernels' structural properties (VMEM working set per BlockSpec tile);
+the interpret runs validate numerics only. Derived column reports achieved
+GFLOP/s of the reference path.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+
+def _t(fn, *args, reps=3):
+    fn(*args)
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def run():
+    """Yields (name, us_per_call, derived)."""
+    rng = np.random.default_rng(0)
+    for n, m, d in [(100_000, 256, 2), (100_000, 256, 64),
+                    (20_000, 1024, 128)]:
+        x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+        c = jnp.asarray(rng.normal(size=(m, d)).astype(np.float32))
+        md = jnp.asarray(rng.uniform(1, 9, size=(n,)).astype(np.float32))
+        t = _t(lambda a, b: ops.pairwise_dist2(a, b, impl="ref"), x, c)
+        gflops = 2 * n * m * d / t / 1e9
+        yield f"pairwise_dist2_n{n}_m{m}_d{d}", t * 1e6, f"{gflops:.1f}GFLOP/s"
+        t = _t(lambda a, b, mm: ops.fused_min_argmax(a, b, mm, impl="ref"),
+               x, c[0], md)
+        gbs = (n * d * 4 + n * 8) / t / 1e9
+        yield f"fused_min_argmax_n{n}_d{d}", t * 1e6, f"{gbs:.1f}GB/s"
+        t = _t(lambda a, b: ops.assign_nearest(a, b, impl="ref"), x, c)
+        yield f"assign_nearest_n{n}_m{m}_d{d}", t * 1e6, \
+            f"{2 * n * m * d / t / 1e9:.1f}GFLOP/s"
+    # VMEM working sets for the documented BlockSpecs (structural check)
+    from repro.kernels.pairwise import DEFAULT_BM, DEFAULT_BN
+    for d in (64, 1024, 4096):
+        ws = (DEFAULT_BN + DEFAULT_BM) * d * 4 + DEFAULT_BN * DEFAULT_BM * 4
+        yield f"pairwise_vmem_ws_d{d}", 0.0, f"{ws / 2 ** 20:.1f}MiB<16MiB"

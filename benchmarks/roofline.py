@@ -1,0 +1,199 @@
+"""Roofline analysis (EXPERIMENTS.md §Roofline).
+
+Three terms per (arch × shape × mesh):
+
+  compute_s    = FLOPS_global    / (chips × 197e12)
+  memory_s     = BYTES_global    / (chips × 819e9)
+  collective_s = COLL_global     / (chips × 50e9)
+
+COLL comes from the dry-run JSON (post-SPMD HLO parse with while-trip
+expansion). FLOPS/BYTES use the **analytic model below** because XLA's
+``cost_analysis()`` counts while-loop (=lax.scan) bodies once — a 61-layer
+scanned stack under-counts ~61× (verified empirically; the raw
+cost_analysis numbers are kept in the JSON for reference).
+
+Analytic model (documented assumptions; global per step):
+  FLOPS:
+    matmul fwd              = 2 · N_active · T
+    attention fwd           = Σ_layers 4·B·S_q·S_visible·H·hd  (causal ⇒
+                              S_vis = S/2 for global, min(W,S) for window;
+                              decode: S_vis = S_cache)
+    SSD fwd                 = B·S·nh·(4·Q·N_state + 2·Q·P + 6·N_state·P)/…
+                              per layer (chunk Q — intra-chunk quadratic +
+                              state update/emit)
+    train                   = fwd × (2 backward + 1 forward) + fwd × refwd
+                              (refwd = 1 with full remat; remat_block adds
+                              +1/k, folded into ×(4))
+    prefill                 = fwd ;   decode = fwd(T=B, S_vis=S_cache)
+  BYTES:
+    params traffic          = N_bytes × (reads: fwd+bwd+refwd = 3; +2
+                              writes param+grad) (train) / 1 read (serve)
+    optimizer               = adam 16 B/param r/w ; adafactor ~0 (factored)
+    activations             = L · T · (8·D + 4·F_eff) · 2 B × passes
+    CE logits               = T · V · 4 B × (fwd + recompute) × 2 (r+w)
+    KV cache (decode)       = full cache read + 1-token write
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict
+
+from repro.configs import SHAPES, get_config
+from repro.models.config import ModelConfig
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def _attn_flops_fwd(cfg: ModelConfig, B, S_q, S_cache=None):
+    """Global attention flops (fwd) across layers."""
+    if cfg.num_heads == 0:
+        return 0.0
+    H, hd, L = cfg.num_heads, cfg.resolved_head_dim, cfg.num_layers
+    total = 0.0
+    for layer in range(L):
+        is_global = (not cfg.window) or (
+            cfg.global_every and layer % cfg.global_every == 0)
+        if S_cache is not None:  # decode
+            vis = S_cache if is_global else min(cfg.window or S_cache, S_cache)
+            total += 4.0 * B * vis * H * hd
+        else:
+            vis = S_q / 2 if is_global else min(cfg.window or S_q, S_q)
+            total += 4.0 * B * S_q * vis * H * hd
+    if cfg.family == "encdec" and S_cache is None:
+        # encoder (bidir over enc_seq) + decoder cross-attention
+        total += cfg.enc_layers * 4.0 * B * cfg.enc_seq * cfg.enc_seq \
+            * H * hd / 1.0
+        total += cfg.num_layers * 4.0 * B * S_q * cfg.enc_seq * H * hd
+    if cfg.family == "encdec" and S_cache is not None:
+        total += cfg.num_layers * 4.0 * B * cfg.enc_seq * H * hd
+    return total
+
+
+def _ssd_flops_fwd(cfg: ModelConfig, B, S):
+    if cfg.family not in ("ssm", "hybrid"):
+        return 0.0
+    nh, N, P, Q = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim, cfg.ssm_chunk
+    L = cfg.num_layers
+    Q = min(Q, S)
+    per_tok = nh * (2 * Q * N + 2 * Q * P + 6 * N * P) / 2
+    return L * B * S * per_tok
+
+
+def analytic_flops(cfg: ModelConfig, shape) -> float:
+    B, S = shape.global_batch, shape.seq_len
+    n_active = cfg.param_counts()["active"]
+    if shape.kind == "decode":
+        fwd = 2.0 * n_active * B + _attn_flops_fwd(cfg, B, 1, S_cache=S) \
+            + _ssd_flops_fwd(cfg, B, 1)
+        return fwd
+    T = B * S
+    fwd = 2.0 * n_active * T + _attn_flops_fwd(cfg, B, S) \
+        + _ssd_flops_fwd(cfg, B, S)
+    if shape.kind == "train":
+        refwd = 1.0 if cfg.remat in ("full", "dots") else 0.0
+        if cfg.remat_block and cfg.remat_block > 1:
+            refwd += 1.0  # two-level: block refwd + per-layer refwd
+        return fwd * (3.0 + refwd)
+    return fwd  # prefill
+
+
+def analytic_bytes(cfg: ModelConfig, shape) -> float:
+    B, S = shape.global_batch, shape.seq_len
+    counts = cfg.param_counts()
+    pbytes = counts["total"] * 2.0  # bf16
+    D, Fd, L, V = cfg.d_model, cfg.d_ff, cfg.num_layers, cfg.vocab_size
+    F_eff = Fd * (cfg.top_k if cfg.family == "moe" else 1)
+    if cfg.family == "moe":
+        # params touched per step: attention etc. + routed experts actually
+        # hit; at train batch sizes every expert is hit — full read.
+        pass
+    if shape.kind == "decode":
+        cache = 0.0
+        if cfg.num_heads:
+            KV, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+            for layer in range(L):
+                is_global = (not cfg.window) or (
+                    cfg.global_every and layer % cfg.global_every == 0)
+                vis = S if is_global else min(cfg.window or S, S)
+                cache += 2.0 * B * vis * KV * hd * 2
+        if cfg.family in ("ssm", "hybrid"):
+            cache += L * B * cfg.ssm_heads * cfg.ssm_state \
+                * cfg.ssm_head_dim * 4
+        # MoE decode touches <= B*top_k experts per layer
+        if cfg.family == "moe":
+            expert_bytes = 3 * D * Fd * 2
+            touched = min(B * cfg.top_k, cfg.num_experts)
+            pbytes = (counts["total"]
+                      - cfg.num_experts * expert_bytes / 2 * L) * 2
+            pbytes = counts["total"] * 2.0 \
+                - L * (cfg.num_experts - touched) * expert_bytes
+        act = L * B * (8 * D + 4 * F_eff) * 2
+        return pbytes + cache + act
+    T = B * S
+    act_passes = 1.0
+    if shape.kind == "train":
+        act_passes = 3.0 + (1.0 if cfg.remat != "none" else 0.0)
+    act = L * T * (8 * D + 4 * F_eff) * 2.0 * act_passes
+    ce = T * V * 4.0 * (2 if shape.kind == "train" else 1) * 2
+    if shape.kind == "train":
+        opt = counts["total"] * (16.0 if cfg.optimizer == "adamw" else 1.0)
+        return pbytes * 3 + counts["total"] * 2 * 2 + opt + act + ce
+    return pbytes + act + ce
+
+
+def load_cell(dryrun_dir: str, mesh_name: str, arch: str, shape: str):
+    path = os.path.join(dryrun_dir, mesh_name, f"{arch}__{shape}.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def roofline_row(dryrun_dir: str, mesh_name: str, arch: str,
+                 shape_name: str) -> Dict:
+    rec = load_cell(dryrun_dir, mesh_name, arch, shape_name)
+    if rec is None:
+        return None
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    chips = rec["chips"]
+    flops = analytic_flops(cfg, shape)
+    bytes_ = analytic_bytes(cfg, shape)
+    coll = rec["collective_bytes_global"]
+    terms = {
+        "compute_s": flops / (chips * PEAK_FLOPS),
+        "memory_s": bytes_ / (chips * HBM_BW),
+        "collective_s": coll / (chips * ICI_BW),
+    }
+    dominant = max(terms, key=terms.get)
+    mf = rec["model_flops_global"]
+    step_time = max(terms.values())
+    mfu = mf / (step_time * chips * PEAK_FLOPS) if step_time > 0 else 0.0
+    return {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "chips": chips,
+        "flops_global": flops, "bytes_global": bytes_,
+        "collective_bytes_global": coll,
+        **{k: v for k, v in terms.items()},
+        "dominant": dominant,
+        "model_flops": mf,
+        "useful_fraction": mf / flops if flops else 0.0,
+        "roofline_fraction_mfu": mfu,
+        "temp_bytes_per_device":
+            rec["memory_analysis"].get("temp_size_in_bytes", 0),
+        "raw_cost_flops_per_device": rec["cost_per_device"]["flops"],
+    }
+
+
+def full_table(dryrun_dir: str = "experiments/dryrun"):
+    from repro.configs import live_cells
+    rows = []
+    for mesh_name in ("pod16x16", "pod2x16x16"):
+        for arch, shape in live_cells():
+            r = roofline_row(dryrun_dir, mesh_name, arch, shape)
+            if r:
+                rows.append(r)
+    return rows

@@ -1,0 +1,109 @@
+"""Benchmark entry point: ``PYTHONPATH=src python -m benchmarks.run``.
+
+One section per paper table/figure + the kernel microbench + the roofline
+table (the latter reads the dry-run artifacts if present). Prints
+``name,us_per_call,derived`` CSV as required.
+
+Default is quick mode (paper sizes / 10, fewer repeats) so the suite
+finishes on one CPU core; ``--full`` restores paper-scale sizes, ``--deep``
+adds the full k×φ grids.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-scale n")
+    ap.add_argument("--deep", action="store_true", help="full k/φ grids")
+    ap.add_argument("--only", default=None,
+                    help="comma list: tables,runtime,phi,kernels,roofline")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    def want(name):
+        return only is None or name in only
+
+    print("name,us_per_call,derived")
+    t_start = time.time()
+
+    if want("tables"):
+        from . import paper_tables
+        for name, n, k, algo, v in paper_tables.run(full=args.full,
+                                                    quick=not args.deep):
+            print(f"{name}_n{n}_k{k}_{algo},0,value={v:.4g}", flush=True)
+
+    if want("runtime"):
+        from . import runtime_scaling
+        n = 100_000 if args.full else 20_000
+        kg = (2, 10, 25, 100) if not args.deep else (2, 5, 10, 25, 50, 100)
+        for k, algo, t, v in runtime_scaling.fig_runtime_over_k(
+                n=n, k_grid=kg):
+            print(f"fig2_runtime_k{k}_{algo},{t*1e6:.0f},value={v:.4g}",
+                  flush=True)
+        ngrid = ((10_000, 100_000, 1_000_000) if args.full
+                 else (5_000, 20_000, 50_000))
+        for n_, algo, t in runtime_scaling.fig_runtime_over_n(
+                k=25, n_grid=ngrid):
+            print(f"fig4_runtime_n{n_}_{algo},{t*1e6:.0f},", flush=True)
+        asym = runtime_scaling.table1_asymptotics()
+        for k_, v_ in asym.items():
+            print(f"table1_{k_},0,exponent={v_:.3f}", flush=True)
+
+    if want("phi"):
+        from . import phi_sweep
+        # quick sizes chosen so the sampling loop actually engages
+        # (threshold (4/ε)k·n^ε·ln n < n) for the k grid used
+        n = 200_000 if args.full else 50_000
+        kg = None if args.deep else (10, 25)
+        for k, phi, v, t, it in phi_sweep.run(n=n, k_grid=kg,
+                                              graphs=1 if not args.deep else 3,
+                                              runs=1 if not args.deep else 2):
+            print(f"table6_7_phi{phi:g}_k{k},{t*1e6:.0f},"
+                  f"value={v:.4g};iters={it:.1f}", flush=True)
+
+    if want("perfcell"):
+        # §Perf cell C: paper-faithful EIM vs the beyond-paper R-compaction
+        from repro.data import gau
+
+        from .runtime_scaling import time_eim, time_eim_compact
+        n = 200_000 if args.full else 100_000
+        pts = gau(n, 25, seed=0)
+        t1, v1, i1 = time_eim(pts, 25, eps=0.05)
+        t2, v2, i2 = time_eim_compact(pts, 25, eps=0.05)
+        print(f"perfC_eim_baseline_n{n},{t1*1e6:.0f},"
+              f"value={v1:.4g};iters={i1}", flush=True)
+        print(f"perfC_eim_compact_n{n},{t2*1e6:.0f},"
+              f"value={v2:.4g};iters={i2};speedup={t1/t2:.2f}x", flush=True)
+
+    if want("kernels"):
+        from . import kernel_bench
+        for name, us, derived in kernel_bench.run():
+            print(f"{name},{us:.0f},{derived}", flush=True)
+
+    if want("roofline"):
+        import os
+
+        from . import roofline
+        d = "experiments/dryrun_final" \
+            if os.path.isdir("experiments/dryrun_final") \
+            else "experiments/dryrun"
+        rows = roofline.full_table(d)
+        for r in rows:
+            print(f"roofline_{r['mesh']}_{r['arch']}_{r['shape']},0,"
+                  f"dom={r['dominant'][:-2]};mfu={r['roofline_fraction_mfu']:.3f};"
+                  f"comp={r['compute_s']:.3e};mem={r['memory_s']:.3e};"
+                  f"coll={r['collective_s']:.3e}", flush=True)
+        if not rows:
+            print("roofline_missing,0,run repro.launch.dryrun first",
+                  flush=True)
+
+    print(f"total_wall,{(time.time()-t_start)*1e6:.0f},seconds="
+          f"{time.time()-t_start:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Serving example: batched prefill + decode with a KV cache.
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch qwen2_0_5b]
+                                               [--tokens 32]
+
+Prefills a batch of prompts, then decodes greedily token by token —
+exactly the ops the decode_* dry-run shapes lower at pod scale.
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.data import model_batch
+from repro.models import decode_step, init_params, prefill
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2_0_5b")
+    ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=True)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    S_max = args.prompt_len + args.tokens
+
+    batch = {k: jnp.asarray(v) for k, v in
+             model_batch(cfg, args.batch, args.prompt_len).items()}
+
+    pre = jax.jit(lambda p, b: prefill(p, b, cfg, S_max))
+    dec = jax.jit(lambda p, c, t: decode_step(p, c, t, cfg))
+
+    t0 = time.time()
+    logits, cache = pre(params, batch)
+    print(f"prefill B={args.batch} S={args.prompt_len}: "
+          f"{time.time()-t0:.2f}s (incl. compile)")
+
+    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    out = [tok]
+    t0 = time.time()
+    for i in range(args.tokens - 1):
+        logits, cache = dec(params, cache, tok)
+        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        out.append(tok)
+    jax.block_until_ready(tok)
+    dt = time.time() - t0
+    seq = jnp.concatenate(out, 1)
+    print(f"decoded {args.tokens} tokens/seq in {dt:.2f}s "
+          f"({args.batch*args.tokens/dt:.1f} tok/s incl. 1st compile)")
+    print("sampled ids[0]:", seq[0][:16].tolist())
+
+    # --- continuous batching: more requests than slots, mixed sampling ---
+    import numpy as np
+
+    from repro.serve import Engine, Request
+    eng = Engine(params, cfg, slots=args.batch, s_max=S_max)
+    n_req = args.batch * 2
+    for i in range(n_req):
+        eng.submit(Request(uid=i, tokens=np.arange(4 + i) % cfg.vocab_size,
+                           max_new=args.tokens // 2,
+                           temperature=0.7 if i % 2 else 0.0, top_k=40))
+    t0 = time.time()
+    done = eng.run()
+    dt = time.time() - t0
+    total = sum(len(r.out) for r in done)
+    print(f"\nengine: {n_req} requests through {args.batch} slots -> "
+          f"{total} tokens in {dt:.2f}s "
+          f"(mean TTFT {1e3*np.mean([r.t_first - r.t_submit for r in done]):.0f}ms)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""The paper's contribution: parallel k-center clustering in JAX.
+
+  gonzalez.py — GON, the sequential greedy 2-approximation (vectorized)
+  mrg.py      — MRG, multi-round MapReduce Gonzalez (sim + shard_map forms)
+  eim.py      — EIM, φ-parameterized iterative sampling (Ene et al. fixed)
+  metrics.py  — covering radius, assignment, brute-force OPT (tests)
+  coreset.py  — k-center coreset selection (framework data-curation hook)
+"""
+from .coreset import Coreset, embed_batches, select_coreset  # noqa: F401
+from .eim import EIMResult, EIMSample, eim, eim_sample  # noqa: F401
+from .gonzalez import GonzalezResult, covering_radius, gonzalez  # noqa: F401
+from .metrics import assignment, brute_force_opt, covering_radius2  # noqa: F401
+from .mrg import MRGResult, mrg_distributed, mrg_sim, plan_rounds  # noqa: F401
+from .streaming import (  # noqa: F401
+    StreamState,
+    stream_init,
+    stream_result,
+    stream_update,
+)

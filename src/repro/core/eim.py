@@ -1,0 +1,184 @@
+"""EIM — parameterized iterative-sampling k-center (paper §4, Algorithms 2–3).
+
+Re-implementation of Ene/Im/Moseley's MapReduce sampling scheme with the
+paper's two modifications:
+
+  * **Termination fix** (paper §4.1): points sampled into S are *always*
+    removed from R, and the removal test is ``d(x,S) <= d(v,S)`` (ties
+    removed), so |R| strictly decreases and the loop cannot stall.
+  * **φ parameter** (paper §4.2 / Algorithm 3): the pivot v is the
+    ``φ·log n``-th farthest point of H from S (original scheme: φ = 8).
+    φ > 5.15 keeps the 10-approximation w.s.p. (paper §6); smaller φ
+    trades the guarantee for fewer/cheaper iterations.
+
+TPU/JAX adaptation (DESIGN.md §2): MapReduce's shrinking relations R, S, H
+become **masks over a fixed (n,d) array** — XLA needs static shapes, so
+"remove from R" clears a mask bit and set sizes are mask sums. The
+per-iteration work is O(n · s_new) distance updates, matching the paper's
+Round-3 cost O(|R|·|S_l|/m); everything is data-parallel over n, so under
+pjit the n axis shards across the mesh and each iteration's rounds map
+onto collectives exactly as the MapReduce rounds map onto shuffles.
+
+The loop is a ``lax.while_loop`` with the paper's condition
+``|R| > (4/ε)·k·n^ε·log n`` (+ an iteration cap as a safety net; the paper
+proves O(1/ε) iterations w.h.p. and observes ≤ 2 in practice).
+
+Per-iteration sampled sets are materialized into *fixed-capacity* index
+buffers (expected size 9k·n^ε·log n for S-samples, 4·n^ε·log n for H,
+sized with 3σ Poisson headroom). Overflow beyond capacity is dropped and
+counted (``stats.overflow``) — with the default headroom this is a
+<1e-6-probability event, and dropping only *slows* convergence, never
+breaks correctness of the returned sample.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+from .gonzalez import covering_radius, gonzalez
+
+_NEG = jnp.float32(-3.4e38)
+_BIG = jnp.float32(3.4e38)
+
+
+class EIMSample(NamedTuple):
+    sample_mask: jnp.ndarray   # (n,) bool — C = S ∪ R_final
+    s_mask: jnp.ndarray        # (n,) bool — sampled centers S
+    iters: jnp.ndarray         # ()   int32 — while-loop iterations used
+    overflow: jnp.ndarray      # ()   int32 — samples dropped by buffer caps
+    sampled: jnp.ndarray       # ()   bool  — False => loop never ran (EIM≡GON)
+
+
+class EIMResult(NamedTuple):
+    centers: jnp.ndarray       # (k, d)
+    radius2: jnp.ndarray       # ()
+    sample: EIMSample
+
+
+def _expected_caps(n: int, k: int, eps: float, slack: float = 3.0):
+    """Fixed buffer capacities with Poisson 3σ-ish headroom."""
+    ln_n = math.log(max(n, 2))
+    es = 9.0 * k * (n ** eps) * ln_n
+    eh = 4.0 * (n ** eps) * ln_n
+    s_cap = int(min(n, math.ceil(es + slack * math.sqrt(es) + 16)))
+    h_cap = int(min(n, math.ceil(eh + slack * math.sqrt(eh) + 16)))
+    return s_cap, h_cap
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "eps", "phi", "max_iters", "impl")
+)
+def eim_sample(
+    points: jnp.ndarray,
+    k: int,
+    key: jax.Array,
+    *,
+    eps: float = 0.1,
+    phi: float = 8.0,
+    max_iters: int = 64,
+    impl: str = "auto",
+) -> EIMSample:
+    """Algorithm 2 (EIM-MapReduce-Sample) with the φ-parameterized Select."""
+    n, d = points.shape
+    points = points.astype(jnp.float32)
+    ln_n = math.log(max(n, 2))
+    threshold = (4.0 / eps) * k * (n ** eps) * ln_n
+    s_cap, h_cap = _expected_caps(n, k, eps)
+    # Select(): pivot rank φ·log n (>=1), clipped to the H buffer.
+    rank = max(1, min(h_cap, int(round(phi * ln_n))))
+
+    def cond(state):
+        r_mask, s_mask, d_s, key, it, ovf = state
+        return (jnp.sum(r_mask) > threshold) & (it < max_iters)
+
+    def body(state):
+        r_mask, s_mask, d_s, key, it, ovf = state
+        key, k_s, k_h = jax.random.split(key, 3)
+        r_size = jnp.sum(r_mask).astype(jnp.float32)
+
+        # --- Round 1: independent sampling within R (Alg. 2, lines 3-4) ---
+        p_s = jnp.minimum(9.0 * k * (n ** eps) * ln_n / r_size, 1.0)
+        p_h = jnp.minimum(4.0 * (n ** eps) * ln_n / r_size, 1.0)
+        new_s = jax.random.bernoulli(k_s, p_s, (n,)) & r_mask
+        h_mask = jax.random.bernoulli(k_h, p_h, (n,)) & r_mask
+
+        # Materialize new S members into a fixed buffer (gather indices).
+        s_idx = jnp.nonzero(new_s, size=s_cap, fill_value=n)[0]
+        s_valid = s_idx < n
+        ovf = ovf + (jnp.sum(new_s) - jnp.sum(s_valid)).astype(jnp.int32)
+        s_pts = points[jnp.minimum(s_idx, n - 1)]           # (s_cap, d)
+
+        # Incremental d(x, S) update: distances to the *new* members only
+        # (the paper's Round-3 O(|R|·|S|/m) term). Invalid buffer slots are
+        # pushed to +inf so they never win the min.
+        d_new = ops.pairwise_dist2(points, s_pts, impl=impl)  # (n, s_cap)
+        d_new = jnp.where(s_valid[None, :], d_new, _BIG)
+        d_s = jnp.minimum(d_s, jnp.min(d_new, axis=1))
+
+        s_mask = s_mask | new_s
+        # Termination fix (paper §4.1): sampled points always leave R.
+        r_mask = r_mask & ~new_s
+
+        # --- Round 2: Select(H, S) (Alg. 3) ----------------------------
+        d_h = jnp.where(h_mask, d_s, _NEG)
+        top = jax.lax.top_k(d_h, rank)[0]
+        pivot = top[rank - 1]                                # d(v, S)^2
+        # If H had fewer than `rank` valid points, pivot is _NEG: no
+        # distance-based removals this iteration (sampling still shrinks R).
+        pivot = jnp.where(pivot <= _NEG / 2, -1.0, pivot)
+
+        # --- Round 3: filter R (Alg. 2, lines 7-8) ----------------------
+        r_mask = r_mask & ~(d_s <= pivot)
+        return r_mask, s_mask, d_s, key, it + 1, ovf
+
+    r0 = jnp.ones((n,), bool)
+    s0 = jnp.zeros((n,), bool)
+    d0 = jnp.full((n,), _BIG)
+    sampled = jnp.asarray(n > threshold)
+    r_mask, s_mask, _, _, iters, ovf = jax.lax.while_loop(
+        cond, body, (r0, s0, d0, key, jnp.int32(0), jnp.int32(0))
+    )
+    return EIMSample(r_mask | s_mask, s_mask, iters, ovf, sampled)
+
+
+def eim(
+    points: jnp.ndarray,
+    k: int,
+    key: jax.Array,
+    *,
+    eps: float = 0.1,
+    phi: float = 8.0,
+    max_iters: int = 64,
+    impl: str = "auto",
+    compact: bool = True,
+) -> EIMResult:
+    """Full EIM: sample, then run GON on the sample (final MapReduce round).
+
+    With ``compact=True`` the sample is gathered into a dense buffer of
+    static size (the paper's |C| <= (4/ε)k·n^ε·log n + |S| bound) before
+    the final GON — this is the "send S ∪ R to one machine" round; the
+    final GON then costs O(k·|C|) instead of O(k·n).
+    """
+    n, d = points.shape
+    sample = eim_sample(points, k, key, eps=eps, phi=phi,
+                        max_iters=max_iters, impl=impl)
+    if compact:
+        ln_n = math.log(max(n, 2))
+        thr = (4.0 / eps) * k * (n ** eps) * ln_n
+        s_cap, _ = _expected_caps(n, k, eps)
+        c_cap = int(min(n, math.ceil(thr) + s_cap * (max_iters // 8 + 1)))
+        idx = jnp.nonzero(sample.sample_mask, size=c_cap, fill_value=n)[0]
+        valid = idx < n
+        pts = jnp.asarray(points, jnp.float32)[jnp.minimum(idx, n - 1)]
+        res = gonzalez(pts, k, mask=valid, impl=impl)
+    else:
+        res = gonzalez(jnp.asarray(points, jnp.float32), k,
+                       mask=sample.sample_mask, impl=impl)
+    r = covering_radius(points, res.centers, impl=impl)
+    return EIMResult(res.centers, r * r, sample)

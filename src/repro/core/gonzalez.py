@@ -1,0 +1,93 @@
+"""Gonzalez's greedy 2-approximation for k-center (paper §3.1, "GON").
+
+Algorithm: pick an arbitrary first center; repeatedly pick the point
+farthest from the chosen set until k centers are selected. The triangle
+inequality gives a factor-2 guarantee (Gonzalez 1985).
+
+TPU/JAX adaptation (DESIGN.md §2): the k-loop is inherently sequential but
+each iteration is a fully-parallel fused pass over all n points
+(distance-to-new-center + running-min update + arg-farthest). That pass is
+the compute hot-spot and is served by ``repro.kernels`` (Pallas on TPU,
+jnp elsewhere). The loop itself is ``lax.fori_loop``, so the whole
+algorithm is one XLA program — jit/vmap/shard_map composable, which is
+what MRG builds on.
+
+"Arbitrary" choices are pinned for determinism across restarts: the first
+center defaults to the first (valid) point.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+_NEG = jnp.float32(-3.4e38)  # sentinel: masked-out points can never be farthest
+
+
+class GonzalezResult(NamedTuple):
+    centers: jnp.ndarray   # (k, d) selected center coordinates
+    indices: jnp.ndarray   # (k,)  int32 indices into the input
+    radius2: jnp.ndarray   # ()    squared covering radius over valid points
+    min_d2: jnp.ndarray    # (n,)  final per-point squared distance to centers
+
+
+@functools.partial(jax.jit, static_argnames=("k", "impl"))
+def gonzalez(
+    points: jnp.ndarray,
+    k: int,
+    *,
+    mask: jnp.ndarray | None = None,
+    first: int | jnp.ndarray = 0,
+    impl: str = "auto",
+) -> GonzalezResult:
+    """Run GON on ``points (n,d)``; optionally restricted to ``mask (n,) bool``.
+
+    With a mask, invalid points are never selected as centers and are
+    excluded from the covering radius. If fewer than ``k`` valid points
+    exist, the remaining center slots repeat already-covered points
+    (radius is unaffected). ``k`` is static.
+    """
+    n, d = points.shape
+    points = points.astype(jnp.float32)
+    if mask is None:
+        first_idx = jnp.asarray(first, jnp.int32)
+    else:
+        # first valid point (ignores `first` when a mask is given)
+        first_idx = jnp.argmax(mask).astype(jnp.int32)
+
+    c0 = points[first_idx]
+    min_d2 = ops.dist2_to_center(points, c0, impl=impl)
+    if mask is not None:
+        min_d2 = jnp.where(mask, min_d2, _NEG)
+
+    centers0 = jnp.zeros((k, d), jnp.float32).at[0].set(c0)
+    indices0 = jnp.zeros((k,), jnp.int32).at[0].set(first_idx)
+
+    def body(i, carry):
+        min_d2, centers, indices = carry
+        nxt = jnp.argmax(min_d2).astype(jnp.int32)
+        c = points[nxt]
+        new_md, _, _ = ops.fused_min_argmax(points, c, min_d2, impl=impl)
+        return new_md, centers.at[i].set(c), indices.at[i].set(nxt)
+
+    min_d2, centers, indices = jax.lax.fori_loop(
+        1, k, body, (min_d2, centers0, indices0)
+    )
+    radius2 = jnp.max(jnp.where(min_d2 <= _NEG / 2, 0.0, min_d2))
+    # masked-out points carry _NEG; clamp them to 0 for the covered-distance
+    # vector we hand back.
+    return GonzalezResult(centers, indices, radius2, jnp.maximum(min_d2, 0.0))
+
+
+def covering_radius(points: jnp.ndarray, centers: jnp.ndarray,
+                    *, mask: jnp.ndarray | None = None,
+                    impl: str = "auto") -> jnp.ndarray:
+    """Euclidean covering radius of ``centers`` over (masked) ``points``."""
+    _, d2 = ops.assign_nearest(points, centers, impl=impl)
+    if mask is not None:
+        d2 = jnp.where(mask, d2, 0.0)
+    return jnp.sqrt(jnp.max(d2))

@@ -1,0 +1,185 @@
+"""MRG — "MapReduce Gonzalez" (paper §3, Algorithm 1).
+
+Two forms:
+
+* ``mrg_sim`` — the paper's experimental setup: ``m`` simulated machines on
+  one device. Points are blocked into m shards and GON runs on every shard
+  via ``vmap`` (round 1); the union of the m·k centers goes through one
+  more GON (round 2). 2 rounds ⇒ 4-approximation (Lemma 2). The multi-round
+  generalization (Lemma 3) re-blocks the center union while it exceeds the
+  capacity ``c``, adding +2 to the factor per extra round.
+
+* ``mrg_distributed`` — the production TPU form: points sharded over mesh
+  axes, round 1 is a ``shard_map`` block running GON on the local shard,
+  round 2 is an ``all_gather`` of the per-device center sets followed by a
+  replicated GON (every device recomputes the tiny final instance instead
+  of idling — removes the result-broadcast round; see DESIGN.md §2).
+  Hierarchical (>2-round) gathers go axis-group by axis-group, exactly
+  mirroring Lemma 3's capacity argument with ICI-domain capacities.
+
+Paper correspondence: machines m = number of shards; capacity c = per-
+device working-set budget; "send all points in S to a single reducer"
+= all_gather (the gathered set is k·m points — tiny next to n).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.kernels import ops
+
+from .gonzalez import covering_radius, gonzalez
+
+
+class MRGResult(NamedTuple):
+    centers: jnp.ndarray   # (k, d)
+    radius2: jnp.ndarray   # () squared covering radius over ALL points
+    rounds: int            # number of GON levels used (2 = classic MRG)
+
+
+# ---------------------------------------------------------------------------
+# Round planning (paper §3.3, inequality (1))
+# ---------------------------------------------------------------------------
+
+def plan_rounds(n: int, m: int, k: int, capacity: int) -> int:
+    """Number of GON levels needed so the final instance fits ``capacity``.
+
+    Implements the machine-count recurrence m^(i) <= m (k/c)^i + (1-(k/c)^i)
+    / (1-k/c): run first-round style reductions until fewer than 2 machines
+    are needed. Returns total levels (>= 2). Raises if k > capacity (the
+    paper's hard feasibility requirement: a k-point instance must fit on one
+    machine).
+    """
+    if k > capacity:
+        raise ValueError(f"infeasible: k={k} exceeds single-machine capacity {capacity}")
+    levels = 1
+    machines = m
+    while machines * k > capacity:
+        machines = math.ceil(machines * k / capacity)
+        levels += 1
+        if levels > 64:
+            raise ValueError("round planning diverged (k too close to capacity; paper §3.3 requires 2k < c)")
+    return levels + 1  # +1 for the final single-machine GON
+
+
+# ---------------------------------------------------------------------------
+# Single-device simulation (paper's experimental methodology, §7.1)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("k", "m", "impl"))
+def _mrg_round(points_blocked: jnp.ndarray, mask_blocked: jnp.ndarray,
+               k: int, m: int, impl: str):
+    """vmapped GON over m blocks -> (m*k, d) center union + validity mask."""
+    res = jax.vmap(lambda p, mk: gonzalez(p, k, mask=mk, impl=impl))(
+        points_blocked, mask_blocked
+    )
+    centers = res.centers.reshape(m * k, -1)
+    # a block with zero valid points still emits k (zero) rows; mark validity
+    any_valid = jnp.any(mask_blocked, axis=1)             # (m,)
+    valid = jnp.repeat(any_valid, k)                      # (m*k,)
+    return centers, valid
+
+
+def _block(points: jnp.ndarray, m: int):
+    """Pad & reshape (n,d) -> (m, ceil(n/m), d) plus validity mask."""
+    n, d = points.shape
+    per = -(-n // m)
+    pad = per * m - n
+    pts = jnp.pad(points, ((0, pad), (0, 0)))
+    mask = jnp.arange(per * m) < n
+    return pts.reshape(m, per, d), mask.reshape(m, per)
+
+
+def mrg_sim(points: jnp.ndarray, k: int, m: int = 50, *,
+            capacity: int | None = None, impl: str = "auto") -> MRGResult:
+    """Paper Algorithm 1 with m simulated machines (single device).
+
+    ``capacity`` (default: block size n/m) triggers the multi-round path
+    when the k*m center union would not fit on one machine.
+    """
+    n, d = points.shape
+    points = points.astype(jnp.float32)
+    if capacity is None:
+        capacity = max(-(-n // m), 2 * k)
+    levels = 1
+
+    cur, mask = _block(points, m)
+    centers, valid = _mrg_round(cur, mask, k, m, impl)
+    levels += 1
+    # Multi-round: while the union exceeds capacity, re-block and reduce
+    # (paper §3.3 — each extra level adds +2 to the approximation factor).
+    while centers.shape[0] > capacity and centers.shape[0] > k:
+        m2 = -(-centers.shape[0] // capacity)  # >= 2 since rows > capacity
+        blocked, bmask = _block(centers, m2)
+        vpad = jnp.pad(valid, (0, bmask.size - valid.shape[0]),
+                       constant_values=False)
+        bmask = bmask & vpad.reshape(bmask.shape)
+        centers, valid = _mrg_round(blocked, bmask, k, m2, impl)
+        levels += 1
+
+    final = gonzalez(centers, k, mask=valid, impl=impl)
+    r = covering_radius(points, final.centers, impl=impl)
+    return MRGResult(final.centers, r * r, levels)
+
+
+# ---------------------------------------------------------------------------
+# Distributed (production) form: shard_map over mesh axes
+# ---------------------------------------------------------------------------
+
+def mrg_distributed(
+    points: jnp.ndarray,
+    k: int,
+    mesh: Mesh,
+    *,
+    shard_axes: Sequence[str] = ("data",),
+    hierarchical: bool = False,
+    impl: str = "auto",
+):
+    """Distributed MRG on a device mesh.
+
+    ``points (n,d)`` is (re)sharded along ``shard_axes`` (n must divide the
+    product of those axis sizes). Round 1: per-device GON on the local
+    shard. Round 2(+): all_gather of center sets; with ``hierarchical``,
+    gathers proceed one axis at a time with an intermediate GON per level
+    (Lemma 3 multi-round; +2 approx per level) — used when k·m exceeds the
+    working-set budget of a single gather.
+
+    Returns ``(centers (k,d) replicated, radius2 ())``.
+    """
+    axes = tuple(shard_axes)
+    pspec = P(axes if len(axes) > 1 else axes[0])
+
+    @functools.partial(
+        jax.shard_map,
+        mesh=mesh,
+        in_specs=(pspec,),
+        out_specs=(P(), P()),
+        check_vma=False,
+    )
+    def run(local):
+        res = gonzalez(local, k, impl=impl)
+        centers = res.centers
+        if hierarchical and len(axes) > 1:
+            for ax in axes:
+                centers = jax.lax.all_gather(centers, ax, tiled=True)
+                centers = gonzalez(centers, k, impl=impl).centers
+        else:
+            for ax in axes:
+                centers = jax.lax.all_gather(centers, ax, tiled=True)
+            centers = gonzalez(centers, k, impl=impl).centers
+        # local covering radius -> global max
+        _, d2 = ops.assign_nearest(local, centers, impl=impl)
+        r2 = jnp.max(d2)
+        for ax in axes:
+            r2 = jax.lax.pmax(r2, ax)
+        return centers, r2
+
+    sharding = NamedSharding(mesh, pspec)
+    points = jax.device_put(points.astype(jnp.float32), sharding)
+    return run(points)

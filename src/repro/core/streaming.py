@@ -1,0 +1,110 @@
+"""Streaming k-center — beyond-paper extension (DESIGN.md §3).
+
+The paper's MRG assumes the point set fits across the cluster's memory
+(n/m ≤ c). For *unbounded streams* (the framework's embedding-curation
+use-case: every training batch produces new embeddings), we add the
+classic doubling algorithm (Charikar, Chekuri, Feder & Motwani 1997):
+an 8-approximation that sees each point once and stores only k+1 points.
+
+    state = stream_init(k, d)
+    state = stream_update(state, batch)     # any number of times
+    centers, radius_lb = stream_result(state)
+
+Invariants (property-tested):
+  * at most k centers are kept, pairwise separation > lower bound `r`;
+  * every streamed point is within 8·OPT of some kept center (the
+    algorithm guarantee; we test ≤ 8·GON-radius as an upper proxy).
+
+The update is a host-side fold over jitted per-point kernels — streaming
+is inherently sequential in the worst case, but each *batch* first drops
+points already covered by the current centers (one vectorized
+assign_nearest pass, the common case at steady state), so per-batch cost
+is O(b·k) vectorized + rare sequential insertions.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+
+class StreamState(NamedTuple):
+    centers: np.ndarray    # (k, d) — rows beyond `count` are undefined
+    count: int             # live centers
+    r: float               # current lower-bound radius (doubling)
+    k: int
+
+
+def stream_init(k: int, d: int) -> StreamState:
+    return StreamState(np.zeros((k + 1, d), np.float32), 0, 0.0, k)
+
+
+def _min_d2(x: np.ndarray, centers: np.ndarray) -> np.ndarray:
+    _, d2 = ops.assign_nearest(jnp.asarray(x), jnp.asarray(centers))
+    return np.asarray(d2)
+
+
+def stream_update(state: StreamState, batch: np.ndarray) -> StreamState:
+    """Fold one batch of points (b,d) into the sketch."""
+    centers, count, r, k = (np.array(state.centers), state.count,
+                            state.r, state.k)
+    batch = np.asarray(batch, np.float32)
+
+    # bootstrap (only before the first doubling): the first k+1 points
+    # define the initial r; afterwards insertion always requires > 4r.
+    while r == 0.0 and count <= k and batch.size:
+        centers[count] = batch[0]
+        batch = batch[1:]
+        count += 1
+        if count == k + 1:
+            d2 = np.array(ops.ref.pairwise_dist2(
+                jnp.asarray(centers), jnp.asarray(centers)))
+            np.fill_diagonal(d2, np.inf)
+            r = float(np.sqrt(d2.min())) / 2.0
+            centers, count = _merge(centers, count, r, k)
+    if not batch.size:
+        return StreamState(centers, count, r, k)
+
+    while batch.size:
+        # vectorized drop of covered points (≤ 4r of a center: the
+        # doubling invariant allows absorbing them)
+        d2 = _min_d2(batch, centers[:count])
+        far = batch[np.sqrt(d2) > 4.0 * r]
+        if far.size == 0:
+            break
+        if count < k + 1:
+            centers[count] = far[0]
+            count += 1
+            batch = far[1:]
+            if count == k + 1:
+                # classic doubling: never rest with more than k centers
+                r *= 2.0
+                centers, count = _merge(centers, count, r, k)
+        else:
+            r *= 2.0
+            centers, count = _merge(centers, count, r, k)
+            batch = far
+    return StreamState(centers, count, r, k)
+
+
+def _merge(centers: np.ndarray, count: int, r: float, k: int):
+    """Greedy re-cluster of the kept centers at scale 4r: keep a maximal
+    subset with pairwise distance > 4r."""
+    kept = []
+    for i in range(count):
+        c = centers[i]
+        if all(np.sum((c - centers[j]) ** 2) > (4.0 * r) ** 2
+               for j in kept):
+            kept.append(i)
+    new = np.zeros_like(centers)
+    new[: len(kept)] = centers[kept]
+    return new, len(kept)
+
+
+def stream_result(state: StreamState):
+    """-> (centers (count,d), radius lower bound r)."""
+    return state.centers[: state.count], state.r

@@ -1,0 +1,2 @@
+from .pipeline import host_slice, model_batch, token_batch  # noqa: F401
+from .pointsets import GENERATORS, gau, kddlike, pokerlike, unb, unif  # noqa: F401

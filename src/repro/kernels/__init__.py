@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the k-center distance hot-spots (+ jnp oracles).
+
+Modules:
+  pairwise.py     — tiled pairwise squared-distance matrix (MXU)
+  fused_argfar.py — fused Gonzalez step: dist + running-min + arg-farthest
+  assign.py       — fused nearest-center assignment (streaming argmin)
+  ops.py          — public jit wrappers (padding, impl resolution)
+  ref.py          — pure-jnp oracles (semantics contract + CPU fast path)
+"""
+from . import ops, ref  # noqa: F401

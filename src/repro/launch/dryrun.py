@@ -1,0 +1,370 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × shape × mesh)
+cell and extract the roofline terms from the compiled artifact.
+
+The two lines above MUST run before any jax import (jax locks the device
+count at first init); this module is the only place the placeholder-device
+flag is set — tests/benchmarks see the real single device.
+
+Per cell:
+  * jit(step).lower(**input_specs).compile() under the production mesh
+  * memory_analysis()  — per-device bytes (proves fit)
+  * cost_analysis()    — HLO FLOPs / bytes for the compute & memory terms
+  * HLO text parse     — collective operand bytes for the collective term
+Results land in experiments/dryrun/<mesh>/<arch>__<shape>.json and feed
+EXPERIMENTS.md §Dry-run/§Roofline and benchmarks/roofline.py.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --mesh both
+"""
+import argparse
+import functools
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, SHAPES, live_cells, shape_applicable
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import input_specs, make_opt
+from repro.models import decode_step, prefill
+from repro.sharding import (batch_pspecs, cache_pspecs, params_pspecs,
+                            shardings, spec, state_pspecs, use_mesh)
+from repro.train import make_train_step
+
+# --- TPU v5e hardware constants (roofline denominators) -------------------
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link (~per chip, 1 link active)
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<restype>.*?)\s+"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", )
+_TYPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*(?:\([^)]*\))?\s*->.*\{\s*$")
+_WHILE_RE = re.compile(
+    r"while\(.*?\).*?condition=%?([\w\.\-]+).*?body=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _type_bytes(typestr: str) -> int:
+    total = 0
+    for dt, dims in _TYPE_RE.findall(typestr):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _split_computations(hlo_text: str):
+    """-> {name: [lines]} for each HLO computation; entry name too.
+
+    Token-based header parse: computation headers are top-level lines
+    ending in '{' containing '->'; tuple-typed signatures contain nested
+    parens, so no regex over the parameter list.
+    """
+    comps, cur, entry = {}, None, None
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if s.endswith("{") and "->" in s and not line.startswith(" "):
+            toks = s.split()
+            name = toks[1] if toks[0] == "ENTRY" else toks[0]
+            name = name.lstrip("%").split("(")[0]
+            cur = comps.setdefault(name, [])
+            if toks[0] == "ENTRY":
+                entry = name
+            continue
+        if s == "}":
+            cur = None
+            continue
+        if cur is not None:
+            cur.append(line)
+    return comps, entry
+
+
+def _line_collective(line):
+    m = _COLL_RE.search(line)
+    if m is None or "-done(" in line:
+        return None
+    op = m.group("op")
+    res_bytes = _type_bytes(m.group("restype"))
+    g = 1
+    gm = _GROUPS_LIST_RE.search(line)
+    if gm:
+        g = len(gm.group(1).split(","))
+    else:
+        gm = _GROUPS_IOTA_RE.search(line)
+        if gm:
+            g = int(gm.group(2))
+    if op == "all-gather":
+        operand = res_bytes // max(g, 1)
+    elif op == "reduce-scatter":
+        operand = res_bytes * max(g, 1)
+    else:
+        operand = res_bytes
+    return op, operand
+
+
+def parse_collectives(hlo_text: str):
+    """Sum *operand* bytes of every collective in the (per-device,
+    post-SPMD) HLO, multiplying collectives inside while-loop (scan)
+    bodies by their trip counts — XLA prints each body once, so a naive
+    line scan undercounts a 61-layer scanned stack by 61×.
+
+    Trip count heuristic: largest integer constant compared in the loop's
+    condition computation (how lax.scan lowers). Returns
+    (total_operand_bytes, per_op dict).
+    """
+    comps, entry = _split_computations(hlo_text)
+    # calls/whiles per computation
+    call_re = re.compile(
+        r"(?:calls=|to_apply=|body=|condition=)%?([\w\.\-]+)")
+
+    def trip_count(cond_name: str) -> int:
+        """Trip bound of a scan-lowered while: the s32 constant referenced
+        by the condition's LT/GT compare (not just any constant)."""
+        lines = comps.get(cond_name, [])
+        consts = {}
+        for line in lines:
+            m = re.match(r"\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*s32\[\]\s*constant\((\d+)\)",
+                         line)
+            if m:
+                consts[m.group(1)] = int(m.group(2))
+        for line in lines:
+            if "compare(" in line and ("direction=LT" in line
+                                       or "direction=GT" in line):
+                for name in re.findall(r"%([\w\.\-]+)", line):
+                    if name in consts:
+                        return max(1, consts[name])
+        # fallback: smallest plausible loop bound among s32 constants
+        plausible = [v for v in consts.values() if 1 < v <= 4096]
+        return min(plausible) if plausible else 1
+
+    from functools import lru_cache
+
+    import sys
+    sys.setrecursionlimit(10000)
+
+    @lru_cache(maxsize=None)
+    def comp_cost(name: str):
+        per_op = {}
+        total = 0
+        for line in comps.get(name, []):
+            lc = _line_collective(line)
+            if lc:
+                op, operand = lc
+                total += operand
+                d = per_op.setdefault(op, [0, 0])
+                d[0] += 1
+                d[1] += operand
+            if " while(" in line:
+                m = _WHILE_RE.search(line)
+                if m:
+                    cond, body = m.group(1), m.group(2)
+                    trips = trip_count(cond)
+                    sub_total, sub_ops = comp_cost(body)
+                    total += trips * sub_total
+                    for op, (c, b) in sub_ops.items():
+                        d = per_op.setdefault(op, [0, 0])
+                        d[0] += trips * c
+                        d[1] += trips * b
+            else:
+                for sub in call_re.findall(line):
+                    if sub in comps and sub != name:
+                        sub_total, sub_ops = comp_cost(sub)
+                        total += sub_total
+                        for op, (c, b) in sub_ops.items():
+                            d = per_op.setdefault(op, [0, 0])
+                            d[0] += c
+                            d[1] += b
+        return total, {k: tuple(v) for k, v in per_op.items()}
+
+    total, per_op = comp_cost(entry) if entry else (0, {})
+    return total, {k: {"count": c, "operand_bytes": b}
+                   for k, (c, b) in per_op.items()}
+
+
+def _mem_dict(mem) -> dict:
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        v = getattr(mem, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def lower_cell(arch: str, shape_name: str, mesh, mesh_name: str):
+    shape = SHAPES[shape_name]
+    cfg, specs = input_specs(arch, shape)
+    n_chips = mesh.size
+
+    with use_mesh(mesh):
+        if shape.kind == "train":
+            opt = make_opt(cfg)
+            step_fn = make_train_step(cfg, opt)
+            st_sh = shardings(state_pspecs(specs["state"], mesh), mesh)
+            b_sh = shardings(batch_pspecs(specs["batch"], mesh), mesh)
+            fn = jax.jit(step_fn, in_shardings=(st_sh, b_sh),
+                         donate_argnums=(0,))
+            lowered = fn.lower(specs["state"], specs["batch"])
+        elif shape.kind == "prefill":
+            S_max = shape.seq_len
+            p_sh = shardings(params_pspecs(specs["params"], mesh), mesh)
+            b_sh = shardings(batch_pspecs(specs["batch"], mesh), mesh)
+
+            def prefill_fn(params, batch):
+                return prefill(params, batch, cfg, S_max)
+
+            fn = jax.jit(prefill_fn, in_shardings=(p_sh, b_sh))
+            lowered = fn.lower(specs["params"], specs["batch"])
+        else:  # decode
+            p_sh = shardings(params_pspecs(specs["params"], mesh), mesh)
+            c_sh = shardings(cache_pspecs(specs["cache"], mesh), mesh)
+            t_sh = shardings(batch_pspecs(specs["token"], mesh), mesh)
+
+            def decode_fn(params, cache, token):
+                return decode_step(params, cache, token, cfg)
+
+            fn = jax.jit(decode_fn, in_shardings=(p_sh, c_sh, t_sh),
+                         donate_argnums=(1,))
+            lowered = fn.lower(specs["params"], specs["cache"],
+                               specs["token"])
+    return cfg, shape, lowered, n_chips
+
+
+def model_flops(cfg, shape) -> float:
+    n_active = cfg.param_counts()["active"]
+    tokens = shape.global_batch * shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch  # decode: 1 token/seq
+
+
+def run_cell(arch: str, shape_name: str, mesh, mesh_name: str) -> dict:
+    t0 = time.time()
+    cfg, shape, lowered, n_chips = lower_cell(arch, shape_name, mesh,
+                                              mesh_name)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = _mem_dict(compiled.memory_analysis())
+    cost = compiled.cost_analysis() or {}
+    cost = {k: float(v) for k, v in cost.items()
+            if isinstance(v, (int, float))}
+    hlo = compiled.as_text()
+    coll_bytes_dev, per_op = parse_collectives(hlo)
+
+    # cost_analysis on the partitioned executable is per-device.
+    flops_dev = cost.get("flops", 0.0)
+    bytes_dev = cost.get("bytes accessed", 0.0)
+    terms = {
+        "compute_s": flops_dev / PEAK_FLOPS,
+        "memory_s": bytes_dev / HBM_BW,
+        "collective_s": coll_bytes_dev / ICI_BW,
+    }
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    useful = mf / (flops_dev * n_chips) if flops_dev else 0.0
+    return {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "chips": n_chips,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory_analysis": mem,
+        "cost_per_device": {"flops": flops_dev, "bytes": bytes_dev},
+        "collectives_per_device": {"operand_bytes": coll_bytes_dev,
+                                   "ops": per_op},
+        "roofline_terms_s": terms,
+        "dominant": dominant,
+        "model_flops_global": mf,
+        "useful_flops_fraction": useful,
+        "hlo_bytes_global": bytes_dev * n_chips,
+        "hlo_flops_global": flops_dev * n_chips,
+        "collective_bytes_global": coll_bytes_dev * n_chips,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi",
+                                                       "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    failures = []
+    for multi in meshes:
+        mesh_name = "pod2x16x16" if multi else "pod16x16"
+        mesh = make_production_mesh(multi_pod=multi)
+        outdir = os.path.join(args.out, mesh_name)
+        os.makedirs(outdir, exist_ok=True)
+        for arch in archs:
+            for shape_name in shapes:
+                if not shape_applicable(arch, shape_name):
+                    continue
+                path = os.path.join(outdir, f"{arch}__{shape_name}.json")
+                if os.path.exists(path) and not args.force:
+                    print(f"[skip cached] {mesh_name} {arch} {shape_name}")
+                    continue
+                print(f"[cell] {mesh_name} {arch} {shape_name} ...",
+                      flush=True)
+                try:
+                    rec = run_cell(arch, shape_name, mesh, mesh_name)
+                    with open(path, "w") as f:
+                        json.dump(rec, f, indent=1)
+                    # executables + HLO text accumulate in the pjit cache;
+                    # 64 cells would exhaust host RAM without this.
+                    jax.clear_caches()
+                    import gc
+                    gc.collect()
+                    t = rec["roofline_terms_s"]
+                    print(f"  ok lower={rec['lower_s']}s "
+                          f"compile={rec['compile_s']}s "
+                          f"dom={rec['dominant']} "
+                          f"comp={t['compute_s']:.3e} "
+                          f"mem={t['memory_s']:.3e} "
+                          f"coll={t['collective_s']:.3e} "
+                          f"temp={rec['memory_analysis'].get('temp_size_in_bytes', 0)/2**30:.2f}GiB",
+                          flush=True)
+                except Exception as e:  # noqa: BLE001
+                    failures.append((mesh_name, arch, shape_name, repr(e)))
+                    print(f"  FAIL {e!r}", flush=True)
+                    traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print(" ", *f)
+        raise SystemExit(1)
+    print("\nall requested cells compiled OK")
+
+
+if __name__ == "__main__":
+    main()

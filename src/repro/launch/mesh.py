@@ -1,0 +1,49 @@
+"""Production mesh construction.
+
+IMPORTANT: functions only — importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS before any jax initialization).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """16×16 v5e pod mesh, or 2×16×16 across two pods.
+
+    Uses the first prod(shape) devices, so a 256-chip mesh builds fine on
+    a 512-placeholder-device dry-run platform.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return make_mesh(shape, axes)
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str]) -> Mesh:
+    import numpy as np
+    n = int(np.prod(shape))
+    devs = jax.devices()
+    if len(devs) < n:
+        raise ValueError(f"need {n} devices, have {len(devs)}")
+    arr = np.asarray(devs[:n]).reshape(tuple(shape))
+    return Mesh(arr, tuple(axes), axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_elastic_mesh(model_parallel: int = 16,
+                      devices: Optional[list] = None) -> Mesh:
+    """Largest (data, model) grid over the *live* device set — the elastic
+    restart path: a degraded pod (e.g. 448 of 512 chips) still yields a
+    valid mesh; data-parallel size shrinks to fit (DESIGN.md §6)."""
+    devices = devices if devices is not None else jax.devices()
+    n = len(devices)
+    mp = min(model_parallel, n)
+    while n % mp:
+        mp -= 1
+    dp = n // mp
+    import numpy as np
+    arr = np.asarray(devices[: dp * mp]).reshape(dp, mp)
+    return Mesh(arr, ("data", "model"),
+                axis_types=(AxisType.Auto,) * 2)

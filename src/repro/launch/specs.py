@@ -1,0 +1,81 @@
+"""Abstract input specs (ShapeDtypeStruct) for every (arch × shape) cell.
+
+No device allocation anywhere — these are the stand-ins the dry-run
+lowers against. Modality frontends are stubs: frames / patch embeddings
+arrive as precomputed float arrays, exactly as the assignment specifies.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ShapeSpec, get_config
+from repro.models import init_cache, init_params
+from repro.models.config import ModelConfig
+from repro.optim import make_optimizer, make_schedule
+
+
+def batch_specs(cfg: ModelConfig, B: int, S: int, *, train: bool) -> Dict[str, Any]:
+    s: Dict[str, Any] = {
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+    }
+    if train:
+        s["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    if cfg.family == "encdec":
+        s["frames"] = jax.ShapeDtypeStruct((B, cfg.enc_seq, cfg.d_model),
+                                           jnp.float32)
+    if cfg.family == "vlm":
+        s["patch_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.num_patches, cfg.d_model), jnp.float32)
+    return s
+
+
+def params_specs(cfg: ModelConfig):
+    key = jax.random.PRNGKey(0)
+    return jax.eval_shape(functools.partial(init_params, cfg=cfg), key)
+
+
+def make_opt(cfg: ModelConfig, total_steps: int = 10_000):
+    sched = "wsd" if cfg.name.startswith("minicpm") else "cosine"
+    lr_fn = make_schedule(sched, peak=3e-4, warmup=200, total=total_steps)
+    return make_optimizer(cfg.optimizer, lr_fn)
+
+
+def state_specs(cfg: ModelConfig):
+    params = params_specs(cfg)
+    opt = make_opt(cfg)
+    opt_state = jax.eval_shape(opt.init, params)
+    return {"params": params, "opt": opt_state,
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def cache_specs(cfg: ModelConfig, B: int, S_max: int):
+    return jax.eval_shape(
+        functools.partial(init_cache, cfg, B, S_max))
+
+
+def input_specs(arch: str, shape: ShapeSpec,
+                *, smoke: bool = False) -> Tuple[ModelConfig, Dict[str, Any]]:
+    """Everything the step function for this cell consumes, as abstract
+    specs: (cfg, {kind-specific inputs})."""
+    cfg = get_config(arch, smoke=smoke)
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return cfg, {
+            "state": state_specs(cfg),
+            "batch": batch_specs(cfg, B, S, train=True),
+        }
+    if shape.kind == "prefill":
+        return cfg, {
+            "params": params_specs(cfg),
+            "batch": batch_specs(cfg, B, S, train=False),
+        }
+    # decode: one new token against an S-long cache
+    return cfg, {
+        "params": params_specs(cfg),
+        "cache": cache_specs(cfg, B, S),
+        "token": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+    }

@@ -1,0 +1,196 @@
+"""Fault-tolerant training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2_0_5b --smoke \
+        --steps 50 --ckpt-dir /tmp/ckpt --resume auto
+
+Production behaviors (DESIGN.md §6), all exercised by tests:
+  * checkpoint/restart: atomic checkpoints every --ckpt-every steps;
+    ``--resume auto`` restarts from the newest valid checkpoint; the data
+    pipeline is a pure function of (seed, step), so the token stream
+    resumes exactly.
+  * restart policy: step exceptions (device loss, injected faults) trigger
+    reload-from-checkpoint with bounded retries + backoff.
+  * straggler watchdog: per-step wall-time is tracked; steps slower than
+    ``factor ×`` the running median are counted and logged (on a real pod
+    this signal feeds the controller's hot-swap decision).
+  * elastic mesh: the mesh is rebuilt from the live device count on every
+    (re)start; checkpoints are logical (host) arrays, so a smaller mesh
+    reshards at load.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.configs import get_config
+from repro.data import model_batch
+from repro.launch.mesh import make_elastic_mesh
+from repro.launch.specs import make_opt
+from repro.optim import make_optimizer, make_schedule
+from repro.sharding import use_mesh
+from repro.train import init_train_state, make_train_step
+
+
+class StragglerWatchdog:
+    """Flags steps slower than ``factor`` × running median."""
+
+    def __init__(self, factor: float = 3.0, warmup: int = 3):
+        self.times = []
+        self.factor = factor
+        self.warmup = warmup
+        self.flagged = 0
+
+    def observe(self, dt: float) -> bool:
+        self.times.append(dt)
+        if len(self.times) <= self.warmup:
+            return False
+        med = float(np.median(self.times[self.warmup:]))
+        if dt > self.factor * med:
+            self.flagged += 1
+            return True
+        return False
+
+
+class RestartPolicy:
+    def __init__(self, max_restarts: int = 3, backoff_s: float = 0.5):
+        self.max_restarts = max_restarts
+        self.backoff_s = backoff_s
+        self.restarts = 0
+
+    def should_restart(self) -> bool:
+        if self.restarts >= self.max_restarts:
+            return False
+        self.restarts += 1
+        time.sleep(self.backoff_s * self.restarts)
+        return True
+
+
+def train_loop(cfg, *, steps: int, batch_size: int, seq_len: int,
+               ckpt_dir: Optional[str] = None, ckpt_every: int = 20,
+               resume: str = "none", seed: int = 0,
+               log_every: int = 10,
+               fault_hook: Optional[Callable[[int], None]] = None,
+               policy: Optional[RestartPolicy] = None,
+               watchdog: Optional[StragglerWatchdog] = None,
+               mesh=None, lr: float = 3e-4,
+               eval_every: int = 0, metrics_path: Optional[str] = None):
+    """Runs training with restart-on-failure. Returns (state, history)."""
+    policy = policy or RestartPolicy()
+    watchdog = watchdog or StragglerWatchdog()
+    sched = "wsd" if cfg.name.startswith("minicpm") else "cosine"
+    opt = make_optimizer(cfg.optimizer,
+                         make_schedule(sched, peak=lr, warmup=max(steps // 10, 1),
+                                       total=steps))
+    step_fn = jax.jit(make_train_step(cfg, opt), donate_argnums=(0,))
+    history = []
+    from repro.train.metrics import MetricsLogger, make_eval_fn
+    logger = MetricsLogger(metrics_path)
+    eval_fn = make_eval_fn(cfg, batch_size=batch_size, seq_len=seq_len,
+                           seed=seed) if eval_every else None
+
+    def fresh_state():
+        return init_train_state(jax.random.PRNGKey(seed), cfg, opt)
+
+    def load_or_init():
+        if ckpt_dir and resume in ("auto", "must") and \
+                latest_step(ckpt_dir) is not None:
+            template = jax.tree.map(np.asarray, fresh_state())
+            step, host_state = restore_checkpoint(ckpt_dir, template)
+            state = jax.tree.map(jax.numpy.asarray, host_state)
+            print(f"[train] resumed from step {step}")
+            return state, step
+        if resume == "must":
+            raise FileNotFoundError("resume=must but no checkpoint found")
+        return fresh_state(), 0
+
+    with use_mesh(mesh):
+        state, start = load_or_init()
+        step = start
+        while step < steps:
+            try:
+                if fault_hook is not None:
+                    fault_hook(step)
+                batch = model_batch(cfg, batch_size, seq_len, seed=seed,
+                                    step=step)
+                t0 = time.time()
+                state, metrics = step_fn(state, batch)
+                loss = float(metrics["loss"])
+                dt = time.time() - t0
+                slow = watchdog.observe(dt)
+                if step % log_every == 0 or slow:
+                    print(f"[train] step={step} loss={loss:.4f} "
+                          f"dt={dt*1e3:.0f}ms"
+                          + (" STRAGGLER" if slow else ""), flush=True)
+                history.append({"step": step, "loss": loss, "dt": dt})
+                logger.log(step, loss=loss, dt=dt,
+                           grad_norm=metrics.get("grad_norm", 0.0),
+                           lr=metrics.get("lr", 0.0))
+                if eval_fn and step and step % eval_every == 0:
+                    ev = eval_fn(state["params"])
+                    logger.log(step, **ev)
+                    print(f"[eval] step={step} "
+                          f"loss={ev['eval_loss']:.4f} "
+                          f"ppl={ev['eval_ppl']:.2f}", flush=True)
+                step += 1
+                if ckpt_dir and step % ckpt_every == 0:
+                    save_checkpoint(ckpt_dir, step, state)
+            except (FloatingPointError, RuntimeError, ValueError) as e:
+                print(f"[train] step {step} failed: {e!r}")
+                if not policy.should_restart():
+                    raise
+                print(f"[train] restart {policy.restarts}/"
+                      f"{policy.max_restarts} from checkpoint")
+                state, step = load_or_init()
+        if ckpt_dir:
+            save_checkpoint(ckpt_dir, step, state)
+    logger.close()
+    return state, history
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--resume", default="none",
+                    choices=["none", "auto", "must"])
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mesh", default="none",
+                    help="none | elastic | dxm grid like 2x1")
+    ap.add_argument("--eval-every", type=int, default=0)
+    ap.add_argument("--metrics", default=None, help="JSONL metrics path")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    mesh = None
+    if args.mesh == "elastic":
+        mesh = make_elastic_mesh()
+    elif "x" in args.mesh:
+        from repro.launch.mesh import make_mesh
+        d, m = (int(v) for v in args.mesh.split("x"))
+        mesh = make_mesh((d, m), ("data", "model"))
+    _, hist = train_loop(
+        cfg, steps=args.steps, batch_size=args.batch, seq_len=args.seq,
+        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+        resume=args.resume, seed=args.seed, mesh=mesh, lr=args.lr,
+        eval_every=args.eval_every, metrics_path=args.metrics)
+    if hist:
+        first = np.mean([h["loss"] for h in hist[:5]])
+        last = np.mean([h["loss"] for h in hist[-5:]])
+        print(f"[train] done: loss {first:.4f} -> {last:.4f} "
+              f"({len(hist)} steps)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""Pure-JAX model zoo: dense / MoE / SSM / hybrid / enc-dec / VLM."""
+from .api import (  # noqa: F401
+    build_mrope_positions,
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    prefill,
+)
+from .config import ModelConfig  # noqa: F401

@@ -1,0 +1,87 @@
+"""Family-dispatching model API.
+
+Gives the launcher / train / serve code one uniform surface:
+
+  init_params(key, cfg)
+  forward(params, batch, cfg)        -> (logits, aux)
+  prefill(params, batch, cfg, S_max) -> (last_logits, cache)
+  decode_step(params, cache, token, cfg)
+  init_cache(cfg, B, S_max)
+
+``batch`` is a dict: tokens (B,S) always; frames (B,Se,D) for encdec;
+patch_embeds (B,P,D) for vlm. Modality frontends are stubs — the framework
+receives precomputed embeddings per the assignment.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax.numpy as jnp
+
+from . import encdec, lm
+from .config import ModelConfig
+
+
+def init_params(key, cfg: ModelConfig):
+    if cfg.family == "encdec":
+        return encdec.init_params(key, cfg)
+    return lm.init_params(key, cfg)
+
+
+def build_mrope_positions(cfg: ModelConfig, B: int, S: int):
+    """qwen2-vl M-RoPE positions: (t,h,w) grid for patches, sequential text."""
+    P = cfg.num_patches
+    side = max(1, int(P ** 0.5)) if P else 1
+    pos = jnp.zeros((3, B, S), jnp.int32)
+    idx = jnp.arange(S)
+    in_patch = idx < P
+    t = jnp.where(in_patch, 0, idx - P + 1)
+    h = jnp.where(in_patch, idx // side, idx - P + 1)
+    w = jnp.where(in_patch, idx % side, idx - P + 1)
+    grid = jnp.stack([t, h, w])                       # (3,S)
+    return jnp.broadcast_to(grid[:, None, :], (3, B, S))
+
+
+def forward(params, batch: Dict[str, Any], cfg: ModelConfig,
+            *, return_hidden: bool = False):
+    if cfg.family == "encdec":
+        return encdec.forward(params, batch["frames"], batch["tokens"], cfg,
+                              return_hidden=return_hidden)
+    if cfg.family == "vlm":
+        B, S = batch["tokens"].shape
+        return lm.forward(params, batch["tokens"], cfg,
+                          positions=build_mrope_positions(cfg, B, S),
+                          patch_embeds=batch.get("patch_embeds"),
+                          return_hidden=return_hidden)
+    return lm.forward(params, batch["tokens"], cfg,
+                      return_hidden=return_hidden)
+
+
+def head_weights(params, cfg: ModelConfig):
+    if cfg.family == "encdec":
+        return params["embed"].T
+    return lm.head_weights(params, cfg)
+
+
+def prefill(params, batch: Dict[str, Any], cfg: ModelConfig, S_max: int):
+    if cfg.family == "encdec":
+        return encdec.prefill(params, batch["frames"], batch["tokens"], cfg,
+                              S_max)
+    if cfg.family == "vlm":
+        B, S = batch["tokens"].shape
+        return lm.prefill(params, batch["tokens"], cfg, S_max,
+                          positions=build_mrope_positions(cfg, B, S),
+                          patch_embeds=batch.get("patch_embeds"))
+    return lm.prefill(params, batch["tokens"], cfg, S_max)
+
+
+def decode_step(params, cache, token, cfg: ModelConfig):
+    if cfg.family == "encdec":
+        return encdec.decode_step(params, cache, token, cfg)
+    return lm.decode_step(params, cache, token, cfg)
+
+
+def init_cache(cfg: ModelConfig, B: int, S_max: int):
+    if cfg.family == "encdec":
+        return encdec.init_cache(cfg, B, S_max)
+    return lm.init_cache(cfg, B, S_max)

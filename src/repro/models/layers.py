@@ -1,0 +1,676 @@
+"""Building-block layers for every assigned architecture family.
+
+Pure-function style: ``init_*`` builds a param dict, ``apply``-style
+functions consume it. All matmuls accumulate in f32
+(``preferred_element_type``); params/computation dtypes come from the
+ModelConfig. Sharding is expressed through ``repro.sharding.constrain``
+with logical axes (dp = batch axes, tp = tensor axis) and is a no-op on a
+single device.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import constrain
+
+from .config import ModelConfig
+
+Params = Dict[str, Any]
+F32 = jnp.float32
+
+
+def dt(cfg: ModelConfig):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+def pdt(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def _dense_init(key, shape, scale: float, dtype) -> jnp.ndarray:
+    fan_in = shape[0] if len(shape) >= 2 else shape[-1]
+    std = scale / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, F32) * std).astype(dtype)
+
+
+def matmul(x, w):
+    """bf16-safe matmul with f32 accumulation."""
+    return jnp.einsum("...d,df->...f", x, w, preferred_element_type=F32)
+
+
+def matmul_c(x, w, cfg):
+    """Column-parallel matmul with compute-dtype output: its *transpose*
+    (the dx = dout·Wᵀ backward) contracts over the tp-sharded feature dim,
+    so the cotangent partial-sum inherits this output dtype — f32 output
+    doubles the dominant backward collective (§Perf iteration 8)."""
+    return jnp.einsum("...d,df->...f", x, w,
+                      preferred_element_type=dt(cfg) if cfg.tp_reduce_bf16
+                      else F32)
+
+
+def matmul_rp(x, w, cfg):
+    """Row-parallel (TP-contracted) matmul: the cross-shard partial sum is
+    the dominant train-step collective, so partials are rounded to the
+    compute dtype before the psum when cfg.tp_reduce_bf16 (halves the
+    collective bytes; per-shard accumulation stays f32 on the MXU)."""
+    out_dt = dt(cfg) if cfg.tp_reduce_bf16 else F32
+    return jnp.einsum("...d,df->...f", x, w, preferred_element_type=out_dt)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_norm(key, cfg: ModelConfig, d: Optional[int] = None) -> Params:
+    d = d or cfg.d_model
+    if cfg.norm == "rmsnorm":
+        return {"scale": jnp.ones((d,), F32)}
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((d,), F32), "bias": jnp.zeros((d,), F32)}
+    if cfg.norm == "layernorm_np":   # olmo: non-parametric LN
+        return {}
+    raise ValueError(cfg.norm)
+
+
+def apply_norm(params: Params, x, cfg: ModelConfig):
+    x32 = x.astype(F32)
+    if cfg.norm == "rmsnorm":
+        x32 = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, -1, keepdims=True) + cfg.norm_eps)
+        return (x32 * params["scale"]).astype(x.dtype)
+    mu = jnp.mean(x32, -1, keepdims=True)
+    var = jnp.var(x32, -1, keepdims=True)
+    x32 = (x32 - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+    if cfg.norm == "layernorm":
+        x32 = x32 * params["scale"] + params["bias"]
+    return x32.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (RoPE, M-RoPE, sinusoidal)
+# ---------------------------------------------------------------------------
+
+def _rope_freqs(hd: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=F32) / hd))
+
+
+def rope_cos_sin(positions, hd: int, theta: float):
+    """positions (..., S) -> cos/sin (..., S, hd/2)."""
+    ang = positions[..., None].astype(F32) * _rope_freqs(hd, theta)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def mrope_cos_sin(positions3, sections, hd: int, theta: float):
+    """M-RoPE (qwen2-vl): positions3 (3, B, S); head_dim split into
+    (temporal, height, width) frequency sections of sizes ``sections``
+    (in half-dim units, sum = hd/2)."""
+    cos_t, sin_t = rope_cos_sin(positions3, hd, theta)  # (3,B,S,hd/2)
+    idx = []
+    for comp, size in enumerate(sections):
+        idx += [comp] * size
+    sel = jnp.asarray(idx, jnp.int32)                    # (hd/2,)
+    comp = jnp.arange(len(sel))
+    cos = cos_t[sel, :, :, comp]                         # -> (hd/2, B, S)
+    sin = sin_t[sel, :, :, comp]
+    return jnp.moveaxis(cos, 0, -1), jnp.moveaxis(sin, 0, -1)
+
+
+def apply_rope(x, cos, sin):
+    """x (B,S,H,hd); cos/sin (B,S,hd/2) — rotate-half convention."""
+    x1, x2 = jnp.split(x.astype(F32), 2, axis=-1)
+    c, s = cos[:, :, None, :], sin[:, :, None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], -1).astype(x.dtype)
+
+
+def sinusoidal_embed(S: int, d: int):
+    pos = jnp.arange(S, dtype=F32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=F32)[None, :]
+    ang = pos / jnp.power(10000.0, dim / d)
+    emb = jnp.zeros((S, d), F32).at[:, 0::2].set(jnp.sin(ang)).at[:, 1::2].set(jnp.cos(ang))
+    return emb
+
+
+def sinusoidal_at(positions, d: int):
+    """Sinusoidal embeddings computed directly at ``positions (B,S)`` —
+    no materialized position table (decode positions can reach 500k)."""
+    dim = jnp.arange(0, d, 2, dtype=F32)
+    ang = positions[..., None].astype(F32) / jnp.power(10000.0, dim / d)
+    B, S = positions.shape
+    emb = jnp.zeros((B, S, d), F32)
+    return emb.at[..., 0::2].set(jnp.sin(ang)).at[..., 1::2].set(jnp.cos(ang))
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA; causal / window / bidirectional / cross; cached decode)
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig, *, cross: bool = False) -> Params:
+    D, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _dense_init(ks[0], (D, H * hd), 1.0, pdt(cfg)),
+        "wk": _dense_init(ks[1], (D, KV * hd), 1.0, pdt(cfg)),
+        "wv": _dense_init(ks[2], (D, KV * hd), 1.0, pdt(cfg)),
+        "wo": _dense_init(ks[3], (H * hd, D), 1.0, pdt(cfg)),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((H * hd,), F32)
+        p["bk"] = jnp.zeros((KV * hd,), F32)
+        p["bv"] = jnp.zeros((KV * hd,), F32)
+    return p
+
+
+def _qkv(params, x, xkv, cfg: ModelConfig):
+    B = x.shape[0]
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = matmul_c(x, params["wq"], cfg)
+    k = matmul_c(xkv, params["wk"], cfg)
+    v = matmul_c(xkv, params["wv"], cfg)
+    if "bq" in params:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(B, x.shape[1], H, hd).astype(dt(cfg))
+    k = k.reshape(B, xkv.shape[1], KV, hd).astype(dt(cfg))
+    v = v.reshape(B, xkv.shape[1], KV, hd).astype(dt(cfg))
+    return q, k, v
+
+
+ATTN_CHUNK = 512  # q-block size for the chunked (flash-style) path
+# (1024 -> 512 measured: peak f32 score transients halve on train_4k with
+#  <1% extra scan overhead; §Perf iteration 2)
+
+
+def _mask_block(q_pos, k_idx, window, bidir: bool):
+    """Visibility mask (B,bq,Sk) from per-token query positions.
+
+    ``q_pos (B,bq)`` int32 absolute positions, ``k_idx (Sk,)`` cache/key
+    indices, ``window`` traced int32 scalar (0 = unbounded lookback).
+    Computing masks from indices (instead of materializing (S,S) bools)
+    keeps memory O(bq·Sk) and lets window/global layers share one attend
+    (the hybrid arch selects window per layer as a traced value).
+    """
+    if bidir:
+        return jnp.ones(q_pos.shape + k_idx.shape, bool)
+    m = k_idx[None, None, :] <= q_pos[:, :, None]
+    m &= (window <= 0) | (k_idx[None, None, :] > q_pos[:, :, None] - window)
+    return m
+
+
+def _attend_block(qc, k, v, q_pos_c, k_idx, window, bidir, cfg: ModelConfig):
+    """One q-chunk of attention. qc (B,bq,KV,G,hd); k/v (B,Sk,KV,hd)."""
+    hd = qc.shape[-1]
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qc, k,
+                        preferred_element_type=F32) / math.sqrt(hd)
+    if cfg.logit_softcap > 0:
+        scores = cfg.logit_softcap * jnp.tanh(scores / cfg.logit_softcap)
+    mask = _mask_block(q_pos_c, k_idx, window, bidir)     # (B,bq,Sk)
+    neg = jnp.finfo(F32).min
+    scores = jnp.where(mask[:, None, None, :, :], scores, neg)
+    w = jax.nn.softmax(scores, axis=-1).astype(dt(cfg))
+    return jnp.einsum("bkgqs,bskh->bqkgh", w, v, preferred_element_type=F32)
+
+
+def attend(q, k, v, cfg: ModelConfig, *, q_pos, window=0, bidir: bool = False,
+           chunk: int = ATTN_CHUNK):
+    """Memory-bounded attention. q (B,Sq,H,hd), k/v (B,Sk,KV,hd).
+
+    GQA via a (KV, group) reshape — no materialized k/v repeat. Scores are
+    computed per q-chunk (``lax.scan``) so peak activation memory is
+    O(B·H·chunk·Sk), never O(S²) — the pure-XLA analogue of a flash kernel
+    and the layout the TPU fusion pipeline handles well.
+
+    ``q_pos (B,Sq)``: absolute position of each query (mask source).
+    ``window``: python int or traced scalar; 0 = global causal.
+    """
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    # NOTE: no explicit q/k/v constraints here — the column-sharded (tp)
+    # projection weights propagate head sharding through the reshape, and
+    # XLA factors tp across (KV, G) when KV < tp. Pinning tp onto the KV
+    # axis forces involuntary full remat (measured: §Perf iteration 1).
+    q = q.reshape(B, Sq, KV, G, hd)
+    k_idx = jnp.arange(k.shape[1], dtype=jnp.int32)
+    window = jnp.asarray(window, jnp.int32)
+
+    if Sq <= chunk:
+        out = _attend_block(q, k, v, q_pos, k_idx, window, bidir, cfg)
+    else:
+        S0 = Sq
+        if Sq % chunk:
+            # pad queries to a chunk multiple; padded rows get q_pos=0 so
+            # they attend exactly key 0 (well-defined softmax, no NaNs in
+            # the trimmed rows' backward), then are sliced away.
+            pad = chunk - Sq % chunk
+            q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+            q_pos = jnp.pad(q_pos, ((0, 0), (0, pad)))
+            Sq = Sq + pad
+        nb = Sq // chunk
+        qs = jnp.moveaxis(q.reshape(B, nb, chunk, KV, G, hd), 1, 0)
+        ps = jnp.moveaxis(q_pos.reshape(B, nb, chunk), 1, 0)
+
+        # checkpoint the chunk body: without it the chunk scan stacks its
+        # backward residuals (broadcast masks + softmax weights) over all
+        # chunks — measured 1.9 GiB/chunk/layer on qwen2 train_4k (§Perf
+        # iteration 1). Recomputing one chunk's scores in backward is
+        # ~free next to the FLOPs it saves from HBM.
+        blk = jax.checkpoint(
+            lambda qc, pc, k_, v_, w_: _attend_block(
+                qc, k_, v_, pc, k_idx, w_, bidir, cfg))
+
+        def body(_, inp):
+            qc, pc = inp
+            return None, blk(qc, pc, k, v, window)
+
+        _, outs = jax.lax.scan(body, None, (qs, ps))
+        out = jnp.moveaxis(outs, 0, 1).reshape(B, Sq, KV, G, hd)[:, :S0]
+        Sq = S0
+    out = out.reshape(B, Sq, H * hd).astype(dt(cfg))
+    return constrain(out, "dp", None, "tp")
+
+
+def attention_block(params, x, cfg: ModelConfig, *, positions, q_pos=None,
+                    window=0, bidir: bool = False, rope: bool = True):
+    """Self-attention over the full sequence (train/prefill).
+
+    ``positions`` feed RoPE ((B,S), or (3,B,S) for M-RoPE); ``q_pos`` feeds
+    the visibility mask (defaults to arange). ``window`` may be a traced
+    scalar (hybrid layers select global/window per layer).
+    Returns (out, (k, v)).
+    """
+    B, S = x.shape[:2]
+    q, k, v = _qkv(params, x, x, cfg)
+    if rope and cfg.rope_type == "rope":
+        cos, sin = rope_cos_sin(positions, cfg.resolved_head_dim, cfg.rope_theta)
+        q, k = apply_rope(q, cos, sin), apply_rope(k, cos, sin)
+    elif rope and cfg.rope_type == "mrope":
+        cos, sin = mrope_cos_sin(positions, cfg.mrope_sections,
+                                 cfg.resolved_head_dim, cfg.rope_theta)
+        q, k = apply_rope(q, cos, sin), apply_rope(k, cos, sin)
+    if q_pos is None:
+        q_pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    # GQA SPMD note (§Perf iteration 6): the (KV, group) factorization
+    # cannot carry the tp axis across two dims under PartitionSpec, and
+    # XLA's fallback partial-sums the (B,H,Sq,Sk) *scores* over tp —
+    # measured 672 GiB/step of all-reduce on qwen2 train_4k. For
+    # train/prefill we instead broadcast k/v to the full head count (a
+    # ~117 MB/layer broadcast) so q/k/v/scores all shard cleanly on the
+    # head axis and attention is collective-free. The cache keeps the
+    # compact KV heads.
+    kv_cache = (k, v)
+    G = cfg.num_heads // max(cfg.num_kv_heads, 1)
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    k = constrain(k, "dp", None, "tp", None)
+    v = constrain(v, "dp", None, "tp", None)
+    q = constrain(q, "dp", None, "tp", None)
+    out = attend(q, k, v, cfg, q_pos=q_pos, window=window, bidir=bidir)
+    return matmul_rp(out, params["wo"], cfg).astype(dt(cfg)), kv_cache
+
+
+def attention_decode(params, x, cache_k, cache_v, pos, cfg: ModelConfig,
+                     *, window=0, rope_pos=None):
+    """One-token decode. x (B,1,D); cache (B,S_max,KV,hd); pos (B,).
+
+    ``pos`` indexes the cache slot / visibility mask; ``rope_pos`` (default
+    = pos) feeds the rotary embedding — they differ for M-RoPE text tokens,
+    whose rope position is shifted by the patch-grid size.
+    Returns (out (B,1,D), new_cache_k, new_cache_v).
+    """
+    rp = pos if rope_pos is None else rope_pos
+    q, k, v = _qkv(params, x, x, cfg)
+    if cfg.rope_type == "rope":
+        cos, sin = rope_cos_sin(rp[:, None], cfg.resolved_head_dim, cfg.rope_theta)
+        q, k = apply_rope(q, cos, sin), apply_rope(k, cos, sin)
+    elif cfg.rope_type == "mrope":
+        pos3 = jnp.broadcast_to(rp[None, :, None], (3,) + rp.shape + (1,))
+        cos, sin = mrope_cos_sin(pos3, cfg.mrope_sections,
+                                 cfg.resolved_head_dim, cfg.rope_theta)
+        q, k = apply_rope(q, cos, sin), apply_rope(k, cos, sin)
+    # insert k,v at pos (dynamic per-batch index)
+    bidx = jnp.arange(x.shape[0])
+    cache_k = cache_k.at[bidx, pos].set(k[:, 0])
+    cache_v = cache_v.at[bidx, pos].set(v[:, 0])
+    cache_k = constrain(cache_k, "dp", "tp", None, None)
+    cache_v = constrain(cache_v, "dp", "tp", None, None)
+    out = attend(q, cache_k, cache_v, cfg, q_pos=pos[:, None], window=window)
+    return matmul_rp(out, params["wo"], cfg).astype(dt(cfg)), cache_k, cache_v
+
+
+def cross_attention_block(params, x, enc_kv, cfg: ModelConfig):
+    """Decoder cross-attention; enc_kv = (k,v) precomputed from encoder."""
+    B, Sq = x.shape[:2]
+    H, hd = cfg.num_heads, cfg.resolved_head_dim
+    q = matmul(x, params["wq"]).reshape(B, Sq, H, hd).astype(dt(cfg))
+    k, v = enc_kv
+    q_pos = jnp.zeros((B, Sq), jnp.int32)
+    out = attend(q, k, v, cfg, q_pos=q_pos, bidir=True)
+    return matmul_rp(out, params["wo"], cfg).astype(dt(cfg))
+
+
+def encode_kv(params, enc_out, cfg: ModelConfig):
+    B, Se = enc_out.shape[:2]
+    KV, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    k = matmul(enc_out, params["wk"]).reshape(B, Se, KV, hd).astype(dt(cfg))
+    v = matmul(enc_out, params["wv"]).reshape(B, Se, KV, hd).astype(dt(cfg))
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GELU)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig) -> Params:
+    D, Fd = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.act == "silu":
+        return {
+            "w_gate": _dense_init(ks[0], (D, Fd), 1.0, pdt(cfg)),
+            "w_up": _dense_init(ks[1], (D, Fd), 1.0, pdt(cfg)),
+            "w_down": _dense_init(ks[2], (Fd, D), 1.0, pdt(cfg)),
+        }
+    return {
+        "w_up": _dense_init(ks[0], (D, Fd), 1.0, pdt(cfg)),
+        "b_up": jnp.zeros((Fd,), F32),
+        "w_down": _dense_init(ks[1], (Fd, D), 1.0, pdt(cfg)),
+        "b_down": jnp.zeros((D,), F32),
+    }
+
+
+def apply_mlp(params, x, cfg: ModelConfig):
+    if cfg.act == "silu":
+        h = jax.nn.silu(matmul_c(x, params["w_gate"], cfg)) \
+            * matmul_c(x, params["w_up"], cfg)
+        h = constrain(h.astype(dt(cfg)), "dp", None, "tp")
+        return matmul_rp(h, params["w_down"], cfg).astype(dt(cfg))
+    h = jax.nn.gelu(matmul_c(x, params["w_up"], cfg) + params["b_up"])
+    h = constrain(h.astype(dt(cfg)), "dp", None, "tp")
+    return (matmul_rp(h, params["w_down"], cfg) + params["b_down"]).astype(dt(cfg))
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (capacity-based SPMD dispatch, GShard-style)
+# ---------------------------------------------------------------------------
+
+def init_moe(key, cfg: ModelConfig) -> Params:
+    D, Fd, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": _dense_init(ks[0], (D, E), 1.0, F32),
+        "w_gate": _dense_init(ks[1], (E, D, Fd), 1.0, pdt(cfg)),
+        "w_up": _dense_init(ks[2], (E, D, Fd), 1.0, pdt(cfg)),
+        "w_down": _dense_init(ks[3], (E, Fd, D), 1.0, pdt(cfg)),
+    }
+
+
+def _moe_math(xf, router, wg, wu, wd, cfg: ModelConfig,
+              capacity_factor: float, e_start, E_loc: int):
+    """Shared MoE math on a local token shard against a local expert range
+    ``[e_start, e_start + E_loc)``.
+
+    Sort-based slot assignment over the *global* expert ids (so capacity
+    semantics match the single-device oracle), then only this shard's
+    experts are gathered/computed. Returns (partial_out (N,D) f32, aux).
+    """
+    N, D = xf.shape
+    E, K = cfg.num_experts, cfg.top_k
+    logits = matmul(xf, router.astype(dt(cfg)))                    # (N,E) f32
+    probs = jax.nn.softmax(logits, -1)
+    gate, eidx = jax.lax.top_k(probs, K)                            # (N,K)
+    gate = gate / jnp.sum(gate, -1, keepdims=True)
+
+    # capacity: cf-scaled expected load; tiny batches (decode) get
+    # drop-free capacity so teacher-forcing and decode agree exactly.
+    C = max(1, int(math.ceil(N * K / E * capacity_factor)))
+    C = max(C, min(64, N * K))
+    flat_e = eidx.reshape(-1)                                        # (NK,)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    counts = jnp.bincount(flat_e, length=E)                          # (E,)
+    starts = jnp.cumsum(counts) - counts
+    slot = jnp.arange(N * K) - starts[sorted_e]                      # (NK,)
+    local_e = sorted_e - e_start
+    keep = (slot < C) & (local_e >= 0) & (local_e < E_loc)
+    dest = jnp.where(keep, local_e * C + slot, E_loc * C)            # drop row
+    tok = order // K
+
+    buf = jnp.zeros((E_loc * C + 1, D), dt(cfg)).at[dest].set(xf[tok])
+    xe = buf[: E_loc * C].reshape(E_loc, C, D)
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, wg,
+                               preferred_element_type=F32))
+    h = h * jnp.einsum("ecd,edf->ecf", xe, wu, preferred_element_type=F32)
+    ye = jnp.einsum("ecf,efd->ecd", h.astype(dt(cfg)), wd,
+                    preferred_element_type=F32).astype(dt(cfg))
+
+    yf = ye.reshape(E_loc * C, D)
+    gate_sorted = gate.reshape(-1)[order]
+    contrib = jnp.where(keep, gate_sorted, 0.0)[:, None]
+    safe_dest = jnp.minimum(dest, E_loc * C - 1)
+    out = jnp.zeros((N, D), F32).at[tok].add(yf[safe_dest] * contrib)
+    # router aux loss (load-balancing, Switch-style) over local tokens
+    me = jnp.mean(probs, 0)
+    ce = jnp.mean(jax.nn.one_hot(eidx[:, 0], E, dtype=F32), 0)
+    aux = E * jnp.sum(me * ce)
+    return out, aux
+
+
+def apply_moe(params, x, cfg: ModelConfig, *, capacity_factor: float = 1.25):
+    """Top-k routed MoE with fixed expert capacity (token-dropping).
+
+    Distribution (DESIGN.md §5): under a mesh, a ``shard_map`` keeps tokens
+    dp-local and experts tp-local — each device builds only *its* experts'
+    (E_loc, C, D) queues from its (tp-replicated) token shard and the
+    partial outputs are psum'd over tp. No (N·K, D) global gather ever
+    exists (the naive pjit lowering replicated it: 114 GB/device on
+    kimi-k2 train_4k — §Perf iteration 3). FSDP-sharded expert weights are
+    all-gathered over dp by the shard_map resharding, preserving the
+    standard FSDP schedule.
+    """
+    from repro.sharding import DP_AXES, TP_AXIS, current_mesh
+
+    B, S, D = x.shape
+    mesh = current_mesh()
+    use_spmd = (mesh is not None and TP_AXIS in mesh.axis_names
+                and mesh.size > 1 and cfg.num_experts % mesh.shape[TP_AXIS] == 0)
+    if not use_spmd:
+        xf = x.reshape(B * S, D)
+        out, aux = _moe_math(xf, params["router"], params["w_gate"],
+                             params["w_up"], params["w_down"], cfg,
+                             capacity_factor, 0, cfg.num_experts)
+        return out.reshape(B, S, D).astype(dt(cfg)), aux
+
+    from jax.sharding import PartitionSpec as P
+
+    dp = tuple(a for a in DP_AXES if a in mesh.axis_names)
+    tp = TP_AXIS
+    E_loc = cfg.num_experts // mesh.shape[tp]
+    dp_spec = dp if len(dp) > 1 else (dp[0] if dp else None)
+
+    # Expert weights enter in their native (EP × FSDP) sharding and are
+    # all-gathered over dp *inside* the shard_map — the gather's backward
+    # is a reduce-scatter, so expert grads stay FSDP-sharded (passing
+    # pre-gathered weights instead left 43 GB/device of dp-replicated
+    # expert grads on kimi-k2 — §Perf iteration 4).
+    @functools.partial(
+        jax.shard_map, mesh=mesh,
+        in_specs=(P(dp_spec, None, None), P(None, None),
+                  P(tp, dp_spec, None), P(tp, dp_spec, None),
+                  P(tp, None, dp_spec)),
+        out_specs=(P(dp_spec, None, None), P()),
+        check_vma=False,
+    )
+    def run(x_loc, router, wg, wu, wd):
+        b, s, _ = x_loc.shape
+        if dp:
+            wg = jax.lax.all_gather(wg, dp, axis=1, tiled=True)
+            wu = jax.lax.all_gather(wu, dp, axis=1, tiled=True)
+            wd = jax.lax.all_gather(wd, dp, axis=2, tiled=True)
+        e_start = jax.lax.axis_index(tp) * E_loc
+        out, aux = _moe_math(x_loc.reshape(b * s, D), router, wg, wu, wd,
+                             cfg, capacity_factor, e_start, E_loc)
+        out = jax.lax.psum(out, tp)                    # combine expert shards
+        aux = jax.lax.pmean(jax.lax.pmean(aux, tp), dp) if dp \
+            else jax.lax.pmean(aux, tp)
+        return out.reshape(b, s, D).astype(dt(cfg)), aux
+
+    return run(x, params["router"], params["w_gate"], params["w_up"],
+               params["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD — state-space duality, chunked scan)
+# ---------------------------------------------------------------------------
+
+def init_ssm(key, cfg: ModelConfig) -> Params:
+    D = cfg.d_model
+    din, N, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    ks = jax.random.split(key, 5)
+    return {
+        # fused in-projection: [z (din), x (din), B (N), C (N), dt (nh)]
+        "w_in": _dense_init(ks[0], (D, 2 * din + 2 * N + nh), 1.0, pdt(cfg)),
+        "w_out": _dense_init(ks[1], (din, D), 1.0, pdt(cfg)),
+        "conv": _dense_init(ks[2], (cfg.ssm_conv, din + 2 * N), 1.0, pdt(cfg)),
+        "A_log": jnp.zeros((nh,), F32),       # A = -exp(A_log) in (-1, 0)
+        "D": jnp.ones((nh,), F32),
+        "dt_bias": jnp.zeros((nh,), F32),
+        "norm": jnp.ones((din,), F32),        # gated RMSNorm scale
+    }
+
+
+def _ssm_split(params, x, cfg: ModelConfig):
+    din, N, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    zxbcdt = matmul_c(x, params["w_in"], cfg)
+    z, xs, Bc, Cc, dtp = jnp.split(
+        zxbcdt, [din, 2 * din, 2 * din + N, 2 * din + 2 * N], axis=-1
+    )
+    dtp = jax.nn.softplus(dtp + params["dt_bias"])      # (B,S,nh) > 0
+    return z, xs, Bc, Cc, dtp
+
+
+def _causal_conv(xbc, conv_w, cache=None):
+    """Depthwise causal conv1d. xbc (B,S,ch); conv_w (K,ch).
+
+    With ``cache`` (B,K-1,ch) performs streaming single-step conv (S==1),
+    returning (out, new_cache).
+    """
+    K = conv_w.shape[0]
+    if cache is None:
+        pad = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))
+        out = sum(pad[:, i : i + xbc.shape[1]] * conv_w[i] for i in range(K))
+        return jax.nn.silu(out), pad[:, -(K - 1) :] if K > 1 else None
+    full = jnp.concatenate([cache, xbc], 1)             # (B,K,ch)
+    out = jnp.einsum("bkc,kc->bc", full, conv_w)[:, None]
+    return jax.nn.silu(out), full[:, 1:]
+
+
+def ssd_chunked(xh, dtp, A, Bc, Cc, cfg: ModelConfig, h0=None):
+    """Chunked SSD scan (Dao & Gu 2024, Alg. in §6 of that paper).
+
+    xh  (B,S,nh,P)  per-head inputs
+    dtp (B,S,nh)    positive timestep
+    A   (nh,)       negative scalar per head
+    Bc/Cc (B,S,N)   shared-across-heads input/output projections
+    h0  (B,nh,N,P)  initial state (decode/chunk-carry), optional
+    Returns (y (B,S,nh,P), h_last (B,nh,N,P)).
+    """
+    B, S, nh, P = xh.shape
+    N = Bc.shape[-1]
+    Q = min(cfg.ssm_chunk, S)
+    S0 = S
+    if S % Q:
+        # pad to a chunk multiple with dt=0 positions: exp(0)=1 decay and
+        # dt·B·x = 0 input make padding exactly state-neutral.
+        pad = Q - S % Q
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dtp = jnp.pad(dtp, ((0, 0), (0, pad), (0, 0)))
+        Bc = jnp.pad(Bc, ((0, 0), (0, pad), (0, 0)))
+        Cc = jnp.pad(Cc, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    nc = S // Q
+
+    xb = xh.reshape(B, nc, Q, nh, P)
+    dtb = dtp.reshape(B, nc, Q, nh).astype(F32)
+    Bb = Bc.reshape(B, nc, Q, N).astype(F32)
+    Cb = Cc.reshape(B, nc, Q, N).astype(F32)
+
+    dA = dtb * A[None, None, None, :]                   # (B,nc,Q,nh) <= 0
+    cums = jnp.cumsum(dA, axis=2)                       # within-chunk cumsum
+    seg = jnp.exp(
+        cums[:, :, :, None, :] - cums[:, :, None, :, :]
+    )                                                    # (B,nc,Qq,Qs,nh)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    seg = jnp.where(causal[None, None, :, :, None], seg, 0.0)
+
+    # intra-chunk (quadratic within chunk, runs on MXU)
+    G = jnp.einsum("bcqn,bcsn->bcqs", Cb, Bb, preferred_element_type=F32)
+    M = G[:, :, :, :, None] * seg * dtb[:, :, None, :, :]
+    y_intra = jnp.einsum("bcqsh,bcshp->bcqhp", M, xb.astype(F32),
+                         preferred_element_type=F32)
+
+    # per-chunk input->state contribution
+    decay_suf = jnp.exp(cums[:, :, -1:, :] - cums)      # (B,nc,Q,nh)
+    dx = xb.astype(F32) * dtb[..., None]                # (B,nc,Q,nh,P)
+    chunk_state = jnp.einsum("bcqn,bcqh,bcqhp->bchnp", Bb, decay_suf, dx,
+                             preferred_element_type=F32)
+    chunk_decay = jnp.exp(cums[:, :, -1, :])            # (B,nc,nh)
+
+    def scan_fn(h, inp):
+        cs, cd = inp                                     # (B,nh,N,P), (B,nh)
+        h_out = h                                        # state entering chunk
+        h = h * cd[:, :, None, None] + cs
+        return h, h_out
+
+    h_init = jnp.zeros((B, nh, N, P), F32) if h0 is None else h0.astype(F32)
+    h_last, h_enter = jax.lax.scan(
+        scan_fn,
+        h_init,
+        (jnp.moveaxis(chunk_state, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    h_enter = jnp.moveaxis(h_enter, 0, 1)               # (B,nc,nh,N,P)
+
+    # inter-chunk: y += C_t · (decay_prefix_t · h_enter)
+    decay_pre = jnp.exp(cums)                            # (B,nc,Q,nh)
+    y_inter = jnp.einsum("bcqn,bcqh,bchnp->bcqhp", Cb, decay_pre, h_enter,
+                         preferred_element_type=F32)
+    y = (y_intra + y_inter).reshape(B, S, nh, P)[:, :S0]
+    return y, h_last
+
+
+def ssm_block(params, x, cfg: ModelConfig, state=None, conv_cache=None):
+    """Full mamba2 block. x (B,S,D). state/conv_cache for streaming decode.
+
+    Returns (out (B,S,D), new_state, new_conv_cache).
+    """
+    B, S, D = x.shape
+    din, N, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    P = cfg.ssm_head_dim
+    z, xs, Bc, Cc, dtp = _ssm_split(params, x, cfg)
+    xbc = jnp.concatenate([xs, Bc, Cc], -1).astype(dt(cfg))
+    conv_out, new_conv = _causal_conv(xbc, params["conv"].astype(dt(cfg)), conv_cache)
+    xs, Bc, Cc = jnp.split(conv_out, [din, din + N], axis=-1)
+    A = -jnp.exp(params["A_log"])
+    xh = xs.reshape(B, S, nh, P)
+    if S == 1 and state is not None:
+        # streaming decode: h' = exp(A dt) h + dt B x ; y = C h
+        dtp1 = dtp[:, 0].astype(F32)                      # (B,nh)
+        da = jnp.exp(dtp1 * A[None, :])
+        bx = jnp.einsum("bn,bhp->bhnp", Bc[:, 0].astype(F32),
+                        xh[:, 0].astype(F32) * dtp1[..., None])
+        h = state * da[:, :, None, None] + bx
+        y = jnp.einsum("bn,bhnp->bhp", Cc[:, 0].astype(F32), h)[:, None]
+        new_state = h
+    else:
+        y, new_state = ssd_chunked(xh, dtp, A, Bc, Cc, cfg, h0=state)
+    y = y + params["D"][None, None, :, None] * xh.astype(F32)
+    y = y.reshape(B, S, din)
+    # gated RMSNorm (mamba2)
+    y = y * jax.nn.silu(z.astype(F32))
+    y = y * jax.lax.rsqrt(jnp.mean(y * y, -1, keepdims=True) + cfg.norm_eps)
+    y = (y * params["norm"]).astype(dt(cfg))
+    out = matmul_rp(y.astype(dt(cfg)), params["w_out"], cfg).astype(dt(cfg))
+    return out, new_state, new_conv

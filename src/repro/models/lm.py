@@ -1,0 +1,421 @@
+"""Decoder-only LM covering the dense / MoE / SSM / hybrid / VLM families.
+
+Layers are *stacked* (leading L axis) and applied with ``lax.scan`` so HLO
+size and compile time are depth-independent — essential for the 61-layer
+trillion-parameter dry-run. Heterogeneous layer schedules (hymba's
+global-attention-every-Nth) are expressed as scanned per-layer flag arrays,
+not per-layer code.
+
+Entry points
+  init_params(key, cfg)
+  forward(params, tokens, cfg, ...)        -> (logits, aux)   train/eval
+  prefill(params, tokens, cfg, cache_len)  -> (last_logits, cache)
+  decode_step(params, cache, token, cfg)   -> (logits, cache)
+
+Cache pytree (decode): dict with per-layer stacked buffers + position.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import constrain, constrain_seq
+
+from . import layers as L
+from .config import ModelConfig
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_layer(key, cfg: ModelConfig) -> Dict[str, Any]:
+    ks = jax.random.split(key, 8)
+    fam = cfg.family
+    p: Dict[str, Any] = {"ln1": L.init_norm(ks[0], cfg)}
+    if fam == "ssm":
+        p["ssm"] = L.init_ssm(ks[1], cfg)
+        return p
+    if fam == "hybrid":
+        p["attn"] = L.init_attention(ks[1], cfg)
+        p["ssm"] = L.init_ssm(ks[2], cfg)
+        p["bnorm_a"] = jnp.ones((cfg.d_model,), F32)
+        p["bnorm_s"] = jnp.ones((cfg.d_model,), F32)
+        p["ln2"] = L.init_norm(ks[3], cfg)
+        p["mlp"] = L.init_mlp(ks[4], cfg)
+        return p
+    p["attn"] = L.init_attention(ks[1], cfg)
+    p["ln2"] = L.init_norm(ks[2], cfg)
+    if fam == "moe":
+        p["moe"] = L.init_moe(ks[3], cfg)
+    else:
+        p["mlp"] = L.init_mlp(ks[3], cfg)
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> Dict[str, Any]:
+    k_emb, k_layers, k_head, k_norm = jax.random.split(key, 4)
+    layer_keys = jax.random.split(k_layers, cfg.num_layers)
+    stacked = jax.vmap(lambda k: _init_layer(k, cfg))(layer_keys)
+    params = {
+        "embed": L._dense_init(k_emb, (cfg.vocab_size, cfg.d_model), 1.0,
+                               L.pdt(cfg)),
+        "layers": stacked,
+        "final_norm": L.init_norm(k_norm, cfg),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L._dense_init(
+            k_head, (cfg.d_model, cfg.vocab_size), 1.0, L.pdt(cfg))
+    if cfg.frontend == "vision_stub":
+        params["patch_proj"] = L._dense_init(
+            jax.random.fold_in(k_emb, 1), (cfg.d_model, cfg.d_model), 1.0,
+            L.pdt(cfg))
+    return params
+
+
+def _layer_flags(cfg: ModelConfig) -> jnp.ndarray:
+    """(L,) bool — True where the layer uses *global* attention."""
+    idx = jnp.arange(cfg.num_layers)
+    if cfg.window and cfg.global_every:
+        return idx % cfg.global_every == 0
+    return jnp.ones((cfg.num_layers,), bool) if not cfg.window \
+        else jnp.zeros((cfg.num_layers,), bool)
+
+
+# ---------------------------------------------------------------------------
+# Blocks (single layer, scanned)
+# ---------------------------------------------------------------------------
+
+def _block_fwd(x, lp, is_global, cfg: ModelConfig, positions):
+    """One transformer block over the full sequence. Returns (x', (k,v))."""
+    fam = cfg.family
+    rs = cfg.residual_scale
+    kv = None
+    x = constrain_seq(x)
+    if fam == "ssm":
+        h = L.apply_norm(lp["ln1"], x, cfg)
+        out, _, _ = L.ssm_block(lp["ssm"], h, cfg)
+        return constrain_seq(x + rs * out), kv
+    h = L.apply_norm(lp["ln1"], x, cfg)
+    if fam == "hybrid":
+        # global/window selected per layer via a traced window scalar —
+        # one attend call serves both layer kinds under the layer scan.
+        win = jnp.where(is_global, 0, cfg.window)
+        attn_out, kv = L.attention_block(lp["attn"], h, cfg,
+                                         positions=positions, window=win)
+        ssm_out, _, _ = L.ssm_block(lp["ssm"], h, cfg)
+        na = attn_out * jax.lax.rsqrt(
+            jnp.mean(jnp.square(attn_out.astype(F32)), -1, keepdims=True)
+            + cfg.norm_eps) * lp["bnorm_a"]
+        ns = ssm_out * jax.lax.rsqrt(
+            jnp.mean(jnp.square(ssm_out.astype(F32)), -1, keepdims=True)
+            + cfg.norm_eps) * lp["bnorm_s"]
+        mix = (0.5 * (na + ns)).astype(x.dtype)
+        x = constrain_seq(x + rs * mix)
+        h2 = L.apply_norm(lp["ln2"], x, cfg)
+        return constrain_seq(x + rs * L.apply_mlp(lp["mlp"], h2, cfg)), kv
+    attn_out, kv = L.attention_block(lp["attn"], h, cfg, positions=positions,
+                                     window=cfg.window if not cfg.global_every else 0)
+    x = constrain_seq(x + rs * attn_out)
+    h2 = L.apply_norm(lp["ln2"], x, cfg)
+    if fam == "moe":
+        mo, aux = L.apply_moe(lp["moe"], h2, cfg)
+        return constrain_seq(x + rs * mo), (kv, aux)
+    return constrain_seq(x + rs * L.apply_mlp(lp["mlp"], h2, cfg)), kv
+
+
+def _block_decode(x, lp, cache_l, is_global, pos, cfg: ModelConfig,
+                  rope_pos=None):
+    """One block, single-token decode. cache_l: per-layer cache slices."""
+    fam = cfg.family
+    rs = cfg.residual_scale
+    new_cache = dict(cache_l)
+    h = L.apply_norm(lp["ln1"], x, cfg)
+    if fam == "ssm":
+        out, st, cv = L.ssm_block(lp["ssm"], h, cfg, state=cache_l["state"],
+                                  conv_cache=cache_l["conv"])
+        new_cache.update(state=st, conv=cv)
+        return x + rs * out, new_cache
+    if fam == "hybrid":
+        win = jnp.where(is_global, 0, cfg.window)
+        attn_out, ck, cv = L.attention_decode(lp["attn"], h, cache_l["k"],
+                                              cache_l["v"], pos, cfg,
+                                              window=win, rope_pos=rope_pos)
+        new_cache.update(k=ck, v=cv)
+        ssm_out, st, cv = L.ssm_block(lp["ssm"], h, cfg,
+                                      state=cache_l["state"],
+                                      conv_cache=cache_l["conv"])
+        new_cache.update(state=st, conv=cv)
+        na = attn_out * jax.lax.rsqrt(
+            jnp.mean(jnp.square(attn_out.astype(F32)), -1, keepdims=True)
+            + cfg.norm_eps) * lp["bnorm_a"]
+        ns = ssm_out * jax.lax.rsqrt(
+            jnp.mean(jnp.square(ssm_out.astype(F32)), -1, keepdims=True)
+            + cfg.norm_eps) * lp["bnorm_s"]
+        x = x + rs * (0.5 * (na + ns)).astype(x.dtype)
+        h2 = L.apply_norm(lp["ln2"], x, cfg)
+        return x + rs * L.apply_mlp(lp["mlp"], h2, cfg), new_cache
+    attn_out, ck, cv = L.attention_decode(
+        lp["attn"], h, cache_l["k"], cache_l["v"], pos, cfg,
+        window=cfg.window if not cfg.global_every else 0, rope_pos=rope_pos)
+    new_cache.update(k=ck, v=cv)
+    x = x + rs * attn_out
+    h2 = L.apply_norm(lp["ln2"], x, cfg)
+    if fam == "moe":
+        mo, _ = L.apply_moe(lp["moe"], h2, cfg)
+        return x + rs * mo, new_cache
+    return x + rs * L.apply_mlp(lp["mlp"], h2, cfg), new_cache
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return fn
+
+
+def _run_layers(body, x, layers, flags, cfg: ModelConfig):
+    """Apply the scanned layer stack with the configured remat scheme.
+
+    ``remat_block > 1`` enables two-level checkpointing: layers are grouped
+    into blocks; only block-boundary activations are saved (L/k instead of
+    L carries) and each block's layers recompute in backward. This is what
+    lets the 61-layer d=7168 config fit — the per-layer carry stack alone
+    is 53 GiB/device at B_loc=16 (§Perf iteration 5). A remainder of
+    L mod k layers runs as a plain per-layer-checkpointed scan.
+    Returns (x, summed_aux).
+    """
+    k = cfg.remat_block
+    Lh = cfg.num_layers
+    if k and k > 1 and Lh >= 2 * k:
+        nb, rem = Lh // k, Lh % k
+        take = lambda a, lo, hi: jax.tree.map(lambda v: v[lo:hi], a)
+        blk_layers = jax.tree.map(
+            lambda v: v[: nb * k].reshape((nb, k) + v.shape[1:]), layers)
+        blk_flags = flags[: nb * k].reshape(nb, k)
+
+        # nested checkpoint: the inner per-layer checkpoint keeps the block
+        # recompute from stashing layer internals (MoE token gathers +
+        # gathered expert weights measured at ~35 GiB/block on kimi-k2);
+        # only the (B,S,D) carry survives per layer.
+        inner = jax.checkpoint(body)
+
+        def run_block(x, lp_blk, fl_blk):
+            return jax.lax.scan(inner, x, (lp_blk, fl_blk))
+
+        def outer(x, scanned):
+            lp_blk, fl_blk = scanned
+            x, auxs = jax.checkpoint(run_block)(x, lp_blk, fl_blk)
+            return x, jnp.sum(auxs)
+
+        x, aux1 = jax.lax.scan(outer, x, (blk_layers, blk_flags))
+        aux_total = jnp.sum(aux1)
+        if rem:
+            x, aux2 = jax.lax.scan(_maybe_remat(body, cfg), x,
+                                   (take(layers, nb * k, Lh),
+                                    flags[nb * k :]))
+            aux_total = aux_total + jnp.sum(aux2)
+        return x, aux_total
+    x, auxs = jax.lax.scan(_maybe_remat(body, cfg), x, (layers, flags))
+    return x, jnp.sum(auxs)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+def _embed(params, tokens, cfg: ModelConfig, patch_embeds=None):
+    x = params["embed"][tokens].astype(L.dt(cfg))
+    if patch_embeds is not None:
+        pe = L.matmul(patch_embeds.astype(L.dt(cfg)),
+                      params["patch_proj"]).astype(L.dt(cfg))
+        npatch = pe.shape[1]
+        x = jnp.concatenate([pe, x[:, npatch:]], axis=1)
+    return constrain(x, "dp", None, None)
+
+
+def head_weights(params, cfg: ModelConfig):
+    return params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+
+
+def apply_head(w, x, cfg: ModelConfig):
+    """hidden (B,S,D) x head (D,V) -> f32 logits, with arch scaling."""
+    logits = jnp.einsum("bsd,dv->bsv", x, w, preferred_element_type=F32)
+    logits = logits * cfg.logit_scale
+    if cfg.logit_softcap > 0:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    return constrain(logits, "dp", None, "tp")
+
+
+def _logits(params, x, cfg: ModelConfig):
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    return apply_head(head_weights(params, cfg), x, cfg)
+
+
+def default_positions(cfg: ModelConfig, B: int, S: int):
+    pos = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    if cfg.rope_type == "mrope":
+        return jnp.broadcast_to(pos[None], (3, B, S))
+    return pos
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / eval / prefill-logits)
+# ---------------------------------------------------------------------------
+
+def forward(params, tokens, cfg: ModelConfig, *, positions=None,
+            patch_embeds=None, return_hidden: bool = False):
+    """tokens (B,S) -> (logits (B,S,V) f32, aux dict).
+
+    ``return_hidden=True`` yields the final-norm'd hidden states instead
+    of logits — the training loss path pairs this with a *chunked*
+    softmax-xent so the (B,S,V) logits are never materialized at once.
+    """
+    B, S = tokens.shape
+    x = _embed(params, tokens, cfg, patch_embeds)
+    if positions is None:
+        positions = default_positions(cfg, B, S)
+    flags = _layer_flags(cfg)
+
+    def body(x, scanned):
+        lp, flag = scanned
+        out, extra = _block_fwd(x, lp, flag, cfg, positions)
+        aux = extra[1] if isinstance(extra, tuple) and cfg.family == "moe" else 0.0
+        return out, aux
+
+    x, aux_total = _run_layers(body, x, params["layers"], flags, cfg)
+    aux = {"moe_aux": aux_total if cfg.family == "moe" else 0.0}
+    if return_hidden:
+        x = L.apply_norm(params["final_norm"], x, cfg)
+        return constrain(x, "dp", None, None), aux
+    logits = _logits(params, x, cfg)
+    return logits, aux
+
+
+# ---------------------------------------------------------------------------
+# KV / state cache
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, B: int, S_max: int, dtype=None):
+    dtype = dtype or L.dt(cfg)
+    Lh = cfg.num_layers
+    c: Dict[str, Any] = {"pos": jnp.zeros((B,), jnp.int32)}
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm", "hybrid"):
+        KV, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        c["k"] = jnp.zeros((Lh, B, S_max, KV, hd), dtype)
+        c["v"] = jnp.zeros((Lh, B, S_max, KV, hd), dtype)
+    if fam in ("ssm", "hybrid"):
+        nh, N, P = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim
+        c["state"] = jnp.zeros((Lh, B, nh, N, P), F32)
+        c["conv"] = jnp.zeros((Lh, B, cfg.ssm_conv - 1,
+                               cfg.d_inner + 2 * cfg.ssm_state), dtype)
+    return c
+
+
+def _cache_layers(cache):
+    return {k: v for k, v in cache.items() if k != "pos"}
+
+
+def prefill(params, tokens, cfg: ModelConfig, S_max: int, *,
+            positions=None, patch_embeds=None):
+    """Run the full prompt, build the decode cache. Returns (last_logits, cache)."""
+    B, S = tokens.shape
+    x = _embed(params, tokens, cfg, patch_embeds)
+    if positions is None:
+        positions = default_positions(cfg, B, S)
+    flags = _layer_flags(cfg)
+    fam = cfg.family
+
+    def body(x, scanned):
+        lp, flag = scanned
+        out, extra = _block_fwd(x, lp, flag, cfg, positions)
+        ys = {}
+        if fam in ("dense", "moe", "vlm", "hybrid"):
+            kv = extra[0] if isinstance(extra, tuple) and fam == "moe" else extra
+            ys = {"k": kv[0], "v": kv[1]}
+        return out, ys
+
+    x, kvs = jax.lax.scan(body, x, (params["layers"], flags))
+    cache = init_cache(cfg, B, S_max)
+    cache["pos"] = jnp.full((B,), S, jnp.int32)
+    if "k" in cache:
+        cache["k"] = jax.lax.dynamic_update_slice(
+            cache["k"], kvs["k"].astype(cache["k"].dtype), (0, 0, 0, 0, 0))
+        cache["v"] = jax.lax.dynamic_update_slice(
+            cache["v"], kvs["v"].astype(cache["v"].dtype), (0, 0, 0, 0, 0))
+    if fam in ("ssm", "hybrid"):
+        # re-run states through a scan that also returns final ssm state
+        # (ssm state comes out of _block_fwd only as needed; for prefill we
+        # recompute states layer-by-layer below)
+        cache = _prefill_ssm_states(params, tokens, cfg, cache,
+                                    patch_embeds=patch_embeds,
+                                    positions=positions)
+    logits = _logits(params, x[:, -1:, :], cfg)
+    return logits, cache
+
+
+def _prefill_ssm_states(params, tokens, cfg, cache, *, positions, patch_embeds):
+    """Populate ssm state/conv caches by scanning blocks with state outputs."""
+    B, S = tokens.shape
+    x = _embed(params, tokens, cfg, patch_embeds)
+    flags = _layer_flags(cfg)
+
+    def body(x, scanned):
+        lp, flag = scanned
+        h = L.apply_norm(lp["ln1"], x, cfg)
+        if cfg.family == "ssm":
+            out, st, cv = L.ssm_block(lp["ssm"], h, cfg)
+            return x + cfg.residual_scale * out, {"state": st, "conv": cv}
+        # hybrid
+        win = jnp.where(flag, 0, cfg.window)
+        attn_out, _ = L.attention_block(lp["attn"], h, cfg,
+                                        positions=positions, window=win)
+        ssm_out, st, cv = L.ssm_block(lp["ssm"], h, cfg)
+        na = attn_out * jax.lax.rsqrt(
+            jnp.mean(jnp.square(attn_out.astype(F32)), -1, keepdims=True)
+            + cfg.norm_eps) * lp["bnorm_a"]
+        ns = ssm_out * jax.lax.rsqrt(
+            jnp.mean(jnp.square(ssm_out.astype(F32)), -1, keepdims=True)
+            + cfg.norm_eps) * lp["bnorm_s"]
+        x = x + cfg.residual_scale * (0.5 * (na + ns)).astype(x.dtype)
+        h2 = L.apply_norm(lp["ln2"], x, cfg)
+        x = x + cfg.residual_scale * L.apply_mlp(lp["mlp"], h2, cfg)
+        return x, {"state": st, "conv": cv}
+
+    _, states = jax.lax.scan(body, x, (params["layers"], flags))
+    cache["state"] = states["state"]
+    cache["conv"] = states["conv"]
+    return cache
+
+
+def decode_step(params, cache, token, cfg: ModelConfig):
+    """token (B,1) int32 -> (logits (B,1,V), new cache). pos = cache['pos']."""
+    B = token.shape[0]
+    pos = cache["pos"]
+    x = _embed(params, token, cfg)
+    flags = _layer_flags(cfg)
+    # M-RoPE text tokens sit (num_patches-1) behind their cache slot in
+    # rope-position space (the patch grid occupies one temporal step).
+    rope_pos = pos - (cfg.num_patches - 1) \
+        if cfg.rope_type == "mrope" and cfg.num_patches else pos
+
+    def body(x, scanned):
+        lp, cache_l, flag = scanned
+        out, new_cache_l = _block_decode(x, lp, cache_l, flag, pos, cfg,
+                                         rope_pos=rope_pos)
+        return out, new_cache_l
+
+    x, new_layer_caches = jax.lax.scan(
+        body, x, (params["layers"], _cache_layers(cache), flags))
+    logits = _logits(params, x, cfg)
+    new_cache = dict(new_layer_caches)
+    new_cache["pos"] = pos + 1
+    return logits, new_cache

@@ -1,0 +1,9 @@
+from .optimizers import (  # noqa: F401
+    Optimizer,
+    adafactor,
+    adamw,
+    clip_by_global_norm,
+    global_norm,
+    make_optimizer,
+)
+from .schedules import SCHEDULES, constant, cosine, make_schedule, wsd  # noqa: F401

@@ -1,0 +1,168 @@
+"""Optimizers (pure JAX; no optax): AdamW and Adafactor.
+
+Interface (optax-shaped, but self-contained):
+  opt = adamw(lr_fn, ...) / adafactor(lr_fn, ...)
+  state = opt.init(params)
+  new_params, new_state = opt.update(grads, state, params)
+
+Notes for the 1000+-node regime (DESIGN.md §6):
+  * Optimizer state inherits the params' sharding (moments are tree_map'd
+    images of the params), so FSDP-sharded params give FSDP-sharded state
+    with no extra code.
+  * Adafactor keeps factored second moments (row+col instead of full) for
+    matrices — the only way the 1T-param config's state fits in
+    512 × 16 GB. First moment is off by default (as in the original).
+  * Weight decay is decoupled (AdamW) and applied only to >=2-D params.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(F32))) for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    # norm in f32, but grads keep their dtype — a tree-wide f32 upcast
+    # doubles live gradient memory (16 GB on the 1T-param config).
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(
+        lambda g: (g.astype(F32) * scale).astype(g.dtype), grads), norm
+
+
+def _decayable(p):
+    return p.ndim >= 2
+
+
+def adamw(lr_fn, *, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, clip_norm: float = 1.0) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, F32)
+        return {"mu": jax.tree.map(zeros, params),
+                "nu": jax.tree.map(zeros, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        step = state["step"] + 1
+        lr = lr_fn(step)
+        b1c = 1 - b1 ** step.astype(F32)
+        b2c = 1 - b2 ** step.astype(F32)
+
+        def upd(g, mu, nu, p):
+            mu = b1 * mu + (1 - b1) * g
+            nu = b2 * nu + (1 - b2) * g * g
+            mhat = mu / b1c
+            nhat = nu / b2c
+            delta = mhat / (jnp.sqrt(nhat) + eps)
+            if weight_decay and _decayable(p):
+                delta = delta + weight_decay * p.astype(F32)
+            return (p.astype(F32) - lr * delta).astype(p.dtype), mu, nu
+
+        out = jax.tree.map(upd, grads, state["mu"], state["nu"], params)
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        mu = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+        nu = jax.tree.map(lambda t: t[2], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"mu": mu, "nu": nu, "step": step,
+                            "grad_norm": gnorm, "lr": lr}
+
+    return Optimizer(init, update)
+
+
+def adafactor(lr_fn, *, decay: float = 0.8, eps: float = 1e-30,
+              clip_norm: float = 1.0, clip_rms: float = 1.0,
+              weight_decay: float = 0.0,
+              chunked_update: bool = False) -> Optimizer:
+    """Factored second-moment optimizer (Shazeer & Stern 2018), the
+    state-memory-frugal choice for the >=100B-param archs."""
+
+    def _state_for(p):
+        if p.ndim >= 2:
+            # factor over the two largest (trailing) dims; keep leading
+            # dims (e.g. the stacked-layer axis) unfactored.
+            row_shape = p.shape[:-1]
+            col_shape = p.shape[:-2] + p.shape[-1:]
+            return {"vr": jnp.zeros(row_shape, F32),
+                    "vc": jnp.zeros(col_shape, F32)}
+        return {"v": jnp.zeros(p.shape, F32)}
+
+    def init(params):
+        leaves = jax.tree_util.tree_leaves(params)
+        # factored state is a *list* aligned with the flattened params —
+        # it has deeper structure than the params tree, so tree.map over
+        # the params treedef would not line up.
+        return {"v": [_state_for(p) for p in leaves],
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        step = state["step"] + 1
+        lr = lr_fn(step)
+        beta = 1.0 - (step.astype(F32) + 1.0) ** (-decay)
+
+        def upd(g, v, p):
+            g2 = g * g + eps
+            if p.ndim >= 2:
+                vr = beta * v["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * v["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = jnp.mean(vr, axis=-1, keepdims=True)
+                rfac = (vr / jnp.maximum(denom, eps))[..., None]
+                prec = jax.lax.rsqrt(jnp.maximum(rfac * vc[..., None, :], eps))
+                u = g * prec
+                nv = {"vr": vr, "vc": vc}
+            else:
+                nv = {"v": beta * v["v"] + (1 - beta) * g2}
+                u = g * jax.lax.rsqrt(jnp.maximum(nv["v"], eps))
+            # update clipping by RMS (Adafactor's d=1 rule)
+            rms = jnp.sqrt(jnp.mean(u * u) + 1e-12)
+            u = u / jnp.maximum(1.0, rms / clip_rms)
+            if weight_decay and _decayable(p):
+                u = u + weight_decay * p.astype(F32)
+            return (p.astype(F32) - lr * u).astype(p.dtype), nv
+
+        def upd_maybe_chunked(g, v, p):
+            # Optional: layer-stacked leaves (L, ...) update one
+            # layer-slice at a time to bound the f32 temporaries.
+            # Hypothesized ~15 GiB win on the 1T config; *measured* +15 GiB
+            # on the CPU buffer allocator (loop double-buffering), so off
+            # by default — see EXPERIMENTS.md §Perf (refuted hypothesis).
+            if chunked_update and p.ndim >= 3 and p.shape[0] >= 8:
+                return jax.lax.map(lambda t: upd(*t), (g, v, p))
+            return upd(g, v, p)
+
+        gleaves, treedef = jax.tree_util.tree_flatten(grads)
+        pleaves = treedef.flatten_up_to(params)
+        outs = [upd_maybe_chunked(g, v, p)
+                for g, v, p in zip(gleaves, state["v"], pleaves)]
+        new_params = jax.tree_util.tree_unflatten(
+            treedef, [o[0] for o in outs])
+        v = [o[1] for o in outs]
+        return new_params, {"v": v, "step": step, "grad_norm": gnorm,
+                            "lr": lr}
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(name: str, lr_fn, **kw) -> Optimizer:
+    if name == "adamw":
+        return adamw(lr_fn, **kw)
+    if name == "adafactor":
+        return adafactor(lr_fn, **kw)
+    raise ValueError(name)

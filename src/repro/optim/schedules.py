@@ -1,0 +1,43 @@
+"""Learning-rate schedules (pure functions step -> lr).
+
+Includes WSD (warmup-stable-decay) used by MiniCPM [arXiv:2404.06395]:
+linear warmup, long stable plateau, short (typically 10%) decay tail.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup(step, warmup: int, peak: float):
+    return peak * jnp.minimum(1.0, (step + 1) / max(warmup, 1))
+
+
+def cosine(step, *, peak: float, warmup: int, total: int, floor: float = 0.0):
+    warm = linear_warmup(step, warmup, peak)
+    t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = floor + 0.5 * (peak - floor) * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def wsd(step, *, peak: float, warmup: int, total: int,
+        decay_frac: float = 0.1, floor: float = 0.0):
+    """Warmup-Stable-Decay (MiniCPM): plateau at peak, decay in the last
+    ``decay_frac`` of training (exponential-style cosine tail)."""
+    warm = linear_warmup(step, warmup, peak)
+    decay_start = int(total * (1.0 - decay_frac))
+    t = jnp.clip((step - decay_start) / max(total - decay_start, 1), 0.0, 1.0)
+    tail = floor + (peak - floor) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    stable = jnp.where(step < decay_start, peak, tail)
+    return jnp.where(step < warmup, warm, stable)
+
+
+def constant(step, *, peak: float, warmup: int = 0, **_):
+    return linear_warmup(step, warmup, peak)
+
+
+SCHEDULES = {"cosine": cosine, "wsd": wsd, "constant": constant}
+
+
+def make_schedule(name: str, **kw):
+    fn = SCHEDULES[name]
+    return lambda step: fn(step, **kw)

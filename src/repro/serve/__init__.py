@@ -1,0 +1,2 @@
+from .engine import Engine, Request  # noqa: F401
+from .sampler import sample  # noqa: F401

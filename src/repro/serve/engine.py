@@ -1,0 +1,180 @@
+"""Continuous-batching serving engine.
+
+vLLM-style slot scheduler adapted to JAX's static shapes: the engine owns
+a fixed B×S_max KV cache ("slots"); requests are admitted into free slots,
+every step decodes *all* active slots in one jitted `decode_step`, finished
+requests (EOS or max_tokens) free their slot immediately — no
+head-of-line blocking on the longest sequence in the batch.
+
+JAX adaptation of the usual CUDA implementation (DESIGN.md hardware-
+adaptation policy): slot state (positions, alive-mask, per-slot RNG) lives
+in regular arrays; admission re-runs `prefill` for the incoming request
+into a single slot via dynamic_update_slice of the shared cache — the
+shapes never change, so there is exactly one compiled decode executable.
+
+Scope: single-host driver loop (host Python schedules; device math is
+jitted). On a pod this loop runs on host 0 with the same jitted steps
+pjit-sharded — the cache layout is the decode_* dry-run layout.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import decode_step, init_cache, prefill
+from repro.models.config import ModelConfig
+
+from .sampler import sample
+
+
+@dataclass
+class Request:
+    uid: int
+    tokens: np.ndarray                  # prompt (p,)
+    max_new: int = 32
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    eos_id: int = -1                    # -1: never stops on token
+    # filled by the engine
+    out: List[int] = field(default_factory=list)
+    slot: int = -1
+    t_submit: float = 0.0
+    t_first: float = 0.0
+    t_done: float = 0.0
+
+
+class Engine:
+    """Fixed-slot continuous-batching engine over one model."""
+
+    def __init__(self, params, cfg: ModelConfig, *, slots: int = 8,
+                 s_max: int = 512):
+        self.params = params
+        self.cfg = cfg
+        self.B = slots
+        self.S = s_max
+        self.cache = init_cache(cfg, slots, s_max)
+        self.alive = np.zeros(slots, bool)
+        self.reqs: Dict[int, Request] = {}
+        self.slot_req = [None] * slots
+        self.pending: List[Request] = []
+        self.done: List[Request] = []
+        self.key = jax.random.PRNGKey(0)
+
+        self._decode = jax.jit(
+            lambda p, c, t: decode_step(p, c, t, cfg))
+        # one prefill executable per prompt length bucket
+        self._prefills: Dict[int, Callable] = {}
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request):
+        req.t_submit = time.time()
+        self.pending.append(req)
+        self.reqs[req.uid] = req
+
+    def _prefill_fn(self, plen: int):
+        if plen not in self._prefills:
+            cfg = self.cfg
+
+            def f(params, tokens):
+                return prefill(params, {"tokens": tokens}, cfg, self.S)
+
+            self._prefills[plen] = jax.jit(f)
+        return self._prefills[plen]
+
+    def _bucket(self, plen: int) -> int:
+        b = 8
+        while b < plen:
+            b *= 2
+        return min(b, self.S - 1)
+
+    def _admit(self):
+        """Move pending requests into free slots (prefill + cache splice)."""
+        free = [i for i in range(self.B) if not self.alive[i]]
+        while free and self.pending:
+            slot = free.pop(0)
+            req = self.pending.pop(0)
+            plen = self._bucket(len(req.tokens))
+            toks = np.zeros((1, plen), np.int32)
+            toks[0, -len(req.tokens):] = req.tokens  # left-pad
+            logits, rcache = self._prefill_fn(plen)(
+                self.params, jnp.asarray(toks))
+            # splice request cache into the engine cache at `slot`
+            self.cache = _splice(self.cache, rcache, slot, self.cfg)
+            self.cache["pos"] = self.cache["pos"].at[slot].set(plen)
+            self.key, sub = jax.random.split(self.key)
+            tok = int(sample(logits[:, -1], sub,
+                             temperature=req.temperature,
+                             top_k=req.top_k, top_p=req.top_p)[0])
+            req.out.append(tok)
+            req.t_first = time.time()
+            req.slot = slot
+            self.alive[slot] = True
+            self.slot_req[slot] = req
+            self._next_tok = getattr(self, "_next_tok",
+                                     np.zeros(self.B, np.int32))
+            self._next_tok[slot] = tok
+
+    def _retire(self, slot: int):
+        req = self.slot_req[slot]
+        req.t_done = time.time()
+        self.alive[slot] = False
+        self.slot_req[slot] = None
+        self.done.append(req)
+
+    def step(self):
+        """One engine step: admit, decode all live slots, sample, retire."""
+        self._admit()
+        if not self.alive.any():
+            return False
+        toks = jnp.asarray(
+            getattr(self, "_next_tok", np.zeros(self.B, np.int32))
+        )[:, None]
+        logits, self.cache = self._decode(self.params, self.cache, toks)
+        self.key, sub = jax.random.split(self.key)
+        # batched sampling: per-slot params vary → sample greedily in one
+        # shot, resample stochastic slots individually (rare path)
+        nxt = np.array(sample(logits[:, -1], sub))  # writable host copy
+        for slot in range(self.B):
+            if not self.alive[slot]:
+                continue
+            req = self.slot_req[slot]
+            if req.temperature > 0:
+                self.key, s2 = jax.random.split(self.key)
+                nxt[slot] = int(sample(
+                    logits[slot : slot + 1, -1], s2,
+                    temperature=req.temperature, top_k=req.top_k,
+                    top_p=req.top_p)[0])
+            tok = int(nxt[slot])
+            req.out.append(tok)
+            self._next_tok[slot] = tok
+            if len(req.out) >= req.max_new or tok == req.eos_id:
+                self._retire(slot)
+            elif int(self.cache["pos"][slot]) >= self.S - 1:
+                self._retire(slot)  # out of cache
+        return True
+
+    def run(self, max_steps: int = 10_000):
+        steps = 0
+        while (self.pending or self.alive.any()) and steps < max_steps:
+            self.step()
+            steps += 1
+        return self.done
+
+
+def _splice(cache, rcache, slot: int, cfg: ModelConfig):
+    """Copy request-cache (B=1) buffers into engine-cache slot ``slot``."""
+    out = dict(cache)
+    for k, v in cache.items():
+        if k == "pos":
+            continue
+        r = rcache[k]
+        # layer-stacked buffers: axis 1 is batch
+        out[k] = jax.lax.dynamic_update_slice_in_dim(
+            v, r.astype(v.dtype), slot, axis=1)
+    return out

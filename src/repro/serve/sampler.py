@@ -1,0 +1,45 @@
+"""Token sampling: greedy / temperature / top-k / top-p (nucleus).
+
+Pure functions over (logits (B,V), key) — jit-safe, vmapped over batch.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+NEG = jnp.finfo(F32).min
+
+
+def _apply_top_k(logits, k: int):
+    if k <= 0:
+        return logits
+    kth = jnp.sort(logits, axis=-1)[..., -k][..., None]
+    return jnp.where(logits < kth, NEG, logits)
+
+
+def _apply_top_p(logits, p: float):
+    if p >= 1.0:
+        return logits
+    sort_idx = jnp.argsort(-logits, axis=-1)
+    sorted_logits = jnp.take_along_axis(logits, sort_idx, -1)
+    probs = jax.nn.softmax(sorted_logits, -1)
+    cum = jnp.cumsum(probs, -1)
+    # keep tokens until cumulative prob exceeds p (always keep the first)
+    keep_sorted = jnp.roll(cum, 1, axis=-1) < p
+    keep_sorted = keep_sorted.at[..., 0].set(True)
+    keep = jnp.zeros_like(keep_sorted).at[
+        jnp.arange(logits.shape[0])[:, None], sort_idx].set(keep_sorted)
+    return jnp.where(keep, logits, NEG)
+
+
+def sample(logits, key, *, temperature: float = 0.0, top_k: int = 0,
+           top_p: float = 1.0):
+    """logits (B,V) -> token ids (B,) int32."""
+    logits = logits.astype(F32)
+    if temperature <= 0.0:
+        return jnp.argmax(logits, -1).astype(jnp.int32)
+    logits = logits / temperature
+    logits = _apply_top_k(logits, top_k)
+    logits = _apply_top_p(logits, top_p)
+    return jax.random.categorical(key, logits, -1).astype(jnp.int32)

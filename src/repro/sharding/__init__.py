@@ -1,0 +1,18 @@
+from .api import (  # noqa: F401
+    DP_AXES,
+    TP_AXIS,
+    constrain,
+    constrain_seq,
+    current_mesh,
+    named_sharding,
+    spec,
+    use_mesh,
+)
+from .specs import (  # noqa: F401
+    auto_spec,
+    batch_pspecs,
+    cache_pspecs,
+    params_pspecs,
+    shardings,
+    state_pspecs,
+)

@@ -1,0 +1,101 @@
+"""Mesh-context sharding API.
+
+Model code calls ``constrain(x, *spec)`` at layout-relevant points; the
+constraint is a no-op unless a mesh has been installed via ``use_mesh``
+(so single-device smoke tests run the exact same model code). Axis
+*logical names* are fixed:
+
+  dp    — batch/data parallel axes, ("pod","data") on the multi-pod mesh
+  tp    — tensor-parallel axis, "model"
+  none  — replicated
+
+``Policy`` resolves logical names to the installed mesh's physical axes,
+dropping axes the mesh doesn't have (a single-pod mesh has no "pod").
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+_state = threading.local()
+
+DP_AXES = ("pod", "data")
+TP_AXIS = "model"
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh]):
+    """Install ``mesh`` for the duration; model sharding constraints apply."""
+    prev = current_mesh()
+    _state.mesh = mesh
+    try:
+        if mesh is not None:
+            with jax.set_mesh(mesh):
+                yield mesh
+        else:
+            yield None
+    finally:
+        _state.mesh = prev
+
+
+def _resolve_axis(mesh: Mesh, logical) -> Optional[object]:
+    """logical axis entry -> physical mesh axis name(s) or None."""
+    if logical is None:
+        return None
+    if logical == "dp":
+        axes = tuple(a for a in DP_AXES if a in mesh.axis_names)
+        if not axes:
+            return None
+        return axes if len(axes) > 1 else axes[0]
+    if logical == "tp":
+        return TP_AXIS if TP_AXIS in mesh.axis_names else None
+    # already-physical name or tuple of names
+    if isinstance(logical, (tuple, list)):
+        axes = tuple(a for a in logical if a in mesh.axis_names)
+        return axes or None
+    return logical if logical in mesh.axis_names else None
+
+
+def spec(mesh: Mesh, *logical) -> P:
+    return P(*(_resolve_axis(mesh, l) for l in logical))
+
+
+def constrain(x, *logical):
+    """with_sharding_constraint under the installed mesh (no-op without)."""
+    mesh = current_mesh()
+    if mesh is None or mesh.size == 1:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec(mesh, *logical))
+    )
+
+
+def named_sharding(mesh: Mesh, *logical) -> NamedSharding:
+    return NamedSharding(mesh, spec(mesh, *logical))
+
+
+def constrain_seq(x, seq_axis: int = 1):
+    """Sequence-parallel residual constraint: shard the sequence dim over
+    tp between layer regions (Megatron-SP). The TP partial-sum then lowers
+    to reduce-scatter (+ later all-gather), halving collective bytes and
+    moving them off the critical path. No-op when the mesh lacks tp or the
+    sequence doesn't divide (decode S=1)."""
+    mesh = current_mesh()
+    if mesh is None or TP_AXIS not in mesh.axis_names:
+        return x
+    tp = mesh.shape[TP_AXIS]
+    if tp <= 1 or x.shape[seq_axis] % tp != 0 or x.shape[seq_axis] < tp:
+        return x
+    logical = [None] * x.ndim
+    logical[0] = "dp"
+    logical[seq_axis] = "tp"
+    return constrain(x, *logical)

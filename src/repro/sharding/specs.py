@@ -1,0 +1,200 @@
+"""PartitionSpec assignment for parameters, optimizer state, batches and
+KV caches (DESIGN.md §5).
+
+Scheme (logical axes; dp = ("pod","data") where present, tp = "model"):
+
+  embeddings   (V, D)        -> (tp, dp)      vocab TP + FSDP
+  lm_head      (D, V)        -> (dp, tp)
+  attn wq/wk/wv(D, H·hd)     -> (dp, tp)      head-dim TP, FSDP rows
+  attn wo      (H·hd, D)     -> (tp, dp)
+  mlp up/gate  (D, F)        -> (dp, tp)
+  mlp down     (F, D)        -> (tp, dp)
+  moe experts  (E, D, F)     -> (tp, dp, ·)   EP on experts + FSDP
+  moe router   (D, E)        -> (dp, ·)
+  ssm w_in     (D, ·)        -> (dp, tp)
+  ssm w_out    (din, D)      -> (tp, dp)
+  1-D params                 -> replicated
+  tokens/labels(B, S)        -> (dp, ·)
+  KV cache  (L,B,S,KV,hd)    -> (·, dp, tp, ·, ·)   sequence-parallel KV
+  ssm state (L,B,nh,N,P)     -> (·, dp, tp, ·, ·)
+
+All layer-stacked params get a leading ``None`` (the scan axis is never
+sharded). Optimizer moments reuse the param rules (same trailing path
+names & shapes); Adafactor's factored vectors fall back to the
+largest-divisible-axis auto rule.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from .api import DP_AXES, TP_AXIS, spec as resolve_spec
+
+# (path regex, logical spec for the *trailing* dims of the unstacked param)
+_RULES = [
+    (r"(embed)$", ("tp", "dp")),
+    (r"(lm_head)$", ("dp", "tp")),
+    (r"(patch_proj)$", ("dp", "tp")),
+    (r"(wq|wk|wv)$", ("dp", "tp")),
+    (r"(wo)$", ("tp", "dp")),
+    (r"(bq|bk|bv)$", ("tp",)),
+    (r"(w_gate|w_up)$", None),   # disambiguated by ndim below (moe vs mlp)
+    (r"(w_down)$", None),
+    (r"(router)$", ("dp", None)),
+    (r"(w_in)$", ("dp", "tp")),
+    (r"(w_out)$", ("tp", "dp")),
+    (r"(conv)$", (None, "tp")),
+]
+
+
+def _leaf_name(path) -> str:
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _mesh_sizes(mesh: Mesh):
+    dp = int(np.prod([mesh.shape[a] for a in DP_AXES if a in mesh.axis_names]))
+    tp = mesh.shape.get(TP_AXIS, 1)
+    return dp, tp
+
+
+def _fit_logical(logical, shape, mesh: Mesh):
+    """Drop sharding on dims the mesh axes don't divide (jit rejects
+    explicit input shardings with non-divisible dims — e.g. vocab 50280
+    on a 16-way axis)."""
+    dp, tp = _mesh_sizes(mesh)
+    size = {"dp": dp, "tp": tp}
+    out = []
+    for dim, l in zip(shape, logical):
+        if l in ("dp", "tp") and (size[l] <= 1 or dim % size[l] != 0):
+            out.append(None)
+        else:
+            out.append(l)
+    return tuple(out)
+
+
+def auto_spec(shape, mesh: Mesh):
+    """Fallback: shard the largest dp-divisible axis on dp, then the
+    largest remaining tp-divisible axis on tp."""
+    dp, tp = _mesh_sizes(mesh)
+    entries = [None] * len(shape)
+    order = sorted(range(len(shape)), key=lambda i: -shape[i])
+    dp_done = tp_done = False
+    for i in order:
+        if not dp_done and shape[i] % dp == 0 and shape[i] >= dp:
+            entries[i] = "dp"
+            dp_done = True
+        elif not tp_done and shape[i] % tp == 0 and shape[i] >= tp:
+            entries[i] = "tp"
+            tp_done = True
+    return tuple(entries)
+
+
+def _param_logical(path_name: str, shape, stacked: bool) -> tuple:
+    trailing = shape[1:] if stacked else shape
+    for rx, logical in _RULES:
+        if re.search(rx, path_name):
+            if logical is None:  # w_gate/w_up/w_down: mlp (2-D) vs moe (3-D)
+                if path_name.endswith("w_down"):
+                    logical = ("tp", None, "dp") if len(trailing) == 3 \
+                        else ("tp", "dp")
+                else:
+                    logical = ("tp", "dp", None) if len(trailing) == 3 \
+                        else ("dp", "tp")
+            if len(logical) != len(trailing):
+                break  # fall through to auto
+            return ((None,) + tuple(logical)) if stacked else tuple(logical)
+    if len(trailing) <= 1:
+        return (None,) * len(shape)
+    return None  # signal: use auto_spec
+
+
+def params_pspecs(params_shapes: Any, mesh: Mesh):
+    """Tree of PartitionSpec matching ``params_shapes`` (tree of arrays or
+    ShapeDtypeStructs). Layer-stacked subtrees are detected by path prefix
+    ('layers' / 'enc_layers' / 'dec_layers' / state trees mirroring them).
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shapes)
+    specs = []
+    for path, leaf in flat:
+        name = _leaf_name(path)
+        stacked = bool(re.search(r"(^|/)(layers|enc_layers|dec_layers)/",
+                                 name + "/") or "layers/" in name)
+        logical = _param_logical(name, leaf.shape, stacked)
+        if logical is None:
+            logical = auto_spec(leaf.shape, mesh)
+        logical = _fit_logical(logical, leaf.shape, mesh)
+        specs.append(resolve_spec(mesh, *logical))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def batch_pspecs(batch_shapes: Any, mesh: Mesh):
+    """tokens/labels (B,S) -> (dp, None); frames/patches (B,X,D) likewise.
+    Batches smaller than the dp axes (long_500k: B=1) stay replicated."""
+    def one(leaf):
+        nd = len(leaf.shape)
+        logical = _fit_logical(("dp",) + (None,) * (nd - 1), leaf.shape, mesh)
+        return resolve_spec(mesh, *logical)
+    return jax.tree.map(one, batch_shapes)
+
+
+def cache_pspecs(cache_shapes: Any, mesh: Mesh):
+    """KV caches (L,B,S,KV,hd) -> (None, dp, tp, ...): batch over dp,
+    *sequence over tp* (sequence-parallel decode attention — the softmax
+    reductions over the sharded key axis lower to per-shard partial
+    attention + all-reduce combine, the flash-decoding pattern).
+    SSM states (L,B,nh,N,P): heads over tp."""
+    def one(path, leaf):
+        name = _leaf_name(path)
+        nd = len(leaf.shape)
+        if name.endswith("pos"):
+            logical = _fit_logical(("dp",), leaf.shape, mesh)
+        elif name in ("k", "v", "xk", "xv") or name.endswith("/k") \
+                or name.endswith("/v") or name.endswith("xk") \
+                or name.endswith("xv"):
+            logical = _fit_logical((None, "dp", "tp", None, None),
+                                   leaf.shape, mesh)
+        elif name.endswith("state"):
+            logical = _fit_logical((None, "dp", "tp", None, None),
+                                   leaf.shape, mesh)
+        elif name.endswith("conv"):
+            logical = _fit_logical((None, "dp", None, "tp"), leaf.shape, mesh)
+        else:
+            logical = (None,) * nd
+        return resolve_spec(mesh, *logical)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shapes)
+    return jax.tree_util.tree_unflatten(
+        treedef, [one(p, l) for p, l in flat])
+
+
+def state_pspecs(state_shapes: Any, mesh: Mesh):
+    """Optimizer/train-state tree: param-mirroring moments reuse the param
+    rules; factored/scalar leaves use the auto rule."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(state_shapes)
+    specs = []
+    for path, leaf in flat:
+        name = _leaf_name(path)
+        stacked = "layers/" in name
+        logical = _param_logical(name, leaf.shape, stacked)
+        if logical is None:
+            logical = auto_spec(leaf.shape, mesh)
+        logical = _fit_logical(logical, leaf.shape, mesh)
+        specs.append(resolve_spec(mesh, *logical))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def shardings(tree_specs, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))

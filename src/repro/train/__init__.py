@@ -1,0 +1,9 @@
+from .step import (  # noqa: F401
+    chunked_softmax_xent,
+    cross_entropy,
+    init_train_state,
+    make_loss_fn,
+    make_serve_steps,
+    make_train_step,
+)
+from .metrics import MetricsLogger, make_eval_fn  # noqa: F401

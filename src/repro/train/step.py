@@ -1,0 +1,166 @@
+"""Train / serve step builders.
+
+``make_train_step``: loss -> grad -> clip -> optimizer, optionally with
+gradient accumulation over microbatches (``lax.scan``) for global batches
+beyond memory. Cross-entropy is computed with the iota-select trick (no
+(B,S,V) one-hot materialization, vocab-sharding friendly: the logsumexp
+and label-select reductions over the sharded vocab axis lower to a single
+all-reduce each).
+
+``make_serve_steps``: jit-ready prefill / decode closures.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import decode_step as _decode_step
+from repro.models import forward as _forward
+from repro.models import prefill as _prefill
+from repro.models.config import ModelConfig
+from repro.optim import Optimizer
+
+F32 = jnp.float32
+
+
+def cross_entropy(logits, labels, mask=None):
+    """logits (B,S,V) f32, labels (B,S) int32 -> mean token NLL."""
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+    lab = jnp.sum(jnp.where(iota == labels[..., None], logits, 0.0), axis=-1)
+    nll = lse - lab
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(F32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+CE_CHUNK = 512  # sequence positions per logits chunk
+
+
+def chunked_softmax_xent(hidden, head_w, labels, cfg: ModelConfig,
+                         chunk: int = CE_CHUNK):
+    """Mean token NLL without materializing (B,S,V) logits.
+
+    Scans S in chunks; each (checkpointed) chunk computes its logits,
+    logsumexp and label select, contributing a partial NLL sum. Backward
+    recomputes one chunk's logits at a time and accumulates the head-weight
+    gradient across chunks — peak logits memory drops from O(B·S·V) to
+    O(B·chunk·V) (measured ~11 GiB → ~0.3 GiB on qwen2 train_4k, §Perf).
+    """
+    from repro.models.lm import apply_head
+
+    B, S, D = hidden.shape
+    c = min(chunk, S)
+    if S % c:
+        c = S  # fallback: no chunking for odd sizes
+    nb = S // c
+    hs = jnp.moveaxis(hidden.reshape(B, nb, c, D), 1, 0)
+    ls = jnp.moveaxis(labels.reshape(B, nb, c), 1, 0)
+
+    @jax.checkpoint
+    def chunk_nll(hc, lc, w):
+        logits = apply_head(w, hc, cfg)                   # (B,c,V) f32
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+        lab = jnp.sum(jnp.where(iota == lc[..., None], logits, 0.0), -1)
+        return jnp.sum(lse - lab)
+
+    def body(acc, inp):
+        hc, lc = inp
+        return acc + chunk_nll(hc, lc, head_w), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), F32), (hs, ls))
+    return total / (B * S)
+
+
+def make_loss_fn(cfg: ModelConfig, *, moe_aux_weight: float = 0.01,
+                 ce_chunk: int = CE_CHUNK):
+    from repro.models.api import head_weights
+
+    def loss_fn(params, batch):
+        hidden, aux = _forward(params, batch, cfg, return_hidden=True)
+        loss = chunked_softmax_xent(hidden, head_weights(params, cfg),
+                                    batch["labels"], cfg, chunk=ce_chunk)
+        if cfg.family == "moe":
+            loss = loss + moe_aux_weight * aux["moe_aux"]
+        return loss, {"loss": loss}
+    return loss_fn
+
+
+def init_train_state(key, cfg: ModelConfig, opt: Optimizer):
+    from repro.models import init_params
+    params = init_params(key, cfg)
+    return {"params": params, "opt": opt.init(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def make_train_step(cfg: ModelConfig, opt: Optimizer, *,
+                    num_microbatches: int = 0,
+                    moe_aux_weight: float = 0.01,
+                    donate: bool = True):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    ``num_microbatches`` (default: cfg.microbatches) splits the global
+    batch on the leading axis and accumulates gradients via ``lax.scan``
+    in ``cfg.accum_dtype`` — the standard way to decouple global batch
+    from per-device activation memory. A f32 accumulator is a full
+    param-sized buffer, so the largest configs accumulate in bf16
+    (cfg.accum_dtype, see DESIGN.md §6).
+    """
+    num_microbatches = num_microbatches or cfg.microbatches
+    acc_dt = jnp.dtype(cfg.accum_dtype)
+    loss_fn = make_loss_fn(cfg, moe_aux_weight=moe_aux_weight)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def single(params, batch):
+        (loss, m), grads = grad_fn(params, batch)
+        return grads, loss
+
+    def accumulated(params, batch):
+        A = num_microbatches
+
+        def slice_batch(x):
+            B = x.shape[0]
+            return jnp.moveaxis(
+                x.reshape((B // A, A) + x.shape[1:]), 1, 0)
+
+        micro = jax.tree.map(slice_batch, batch)
+
+        def body(carry, mb):
+            acc, tot = carry
+            (loss, m), grads = grad_fn(params, mb)
+            acc = jax.tree.map(
+                lambda a, g: a + g.astype(acc_dt) / A, acc, grads)
+            return (acc, tot + loss), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt), params)
+        (grads, tot), _ = jax.lax.scan(body, (zeros, 0.0), micro)
+        return grads, tot / A
+
+    def train_step(state, batch):
+        fn = single if num_microbatches == 1 else accumulated
+        grads, loss = fn(state["params"], batch)
+        new_params, opt_state = opt.update(grads, state["opt"],
+                                           state["params"])
+        metrics = {"loss": loss,
+                   "grad_norm": opt_state.pop("grad_norm", 0.0),
+                   "lr": opt_state.pop("lr", 0.0)}
+        return ({"params": new_params, "opt": opt_state,
+                 "step": state["step"] + 1}, metrics)
+
+    return train_step
+
+
+def make_serve_steps(cfg: ModelConfig, S_max: int):
+    """Returns (prefill_fn, decode_fn) ready for jit."""
+    def prefill_fn(params, batch):
+        return _prefill(params, batch, cfg, S_max)
+
+    def decode_fn(params, cache, token):
+        return _decode_step(params, cache, token, cfg)
+
+    return prefill_fn, decode_fn

@@ -1,0 +1,150 @@
+"""Distributed behaviors on simulated multi-device hosts.
+
+Each test runs in a subprocess with ``--xla_force_host_platform_device_count``
+so the main pytest process keeps its single-device view (the dry-run is
+the only other place placeholder devices are created).
+"""
+import json
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+BASE = dict(PYTHONPATH="src")
+
+
+def _run(body: str, devices: int = 8, timeout: int = 600) -> str:
+    prog = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={devices}"
+        import jax, json
+        import jax.numpy as jnp
+        import numpy as np
+        {textwrap.indent(textwrap.dedent(body), '        ').strip()}
+    """)
+    import os
+    env = dict(os.environ)
+    env.update(BASE)
+    out = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                         text=True, env=env, timeout=timeout)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_mrg_distributed_matches_quality():
+    out = _run("""
+        from repro.core import mrg_distributed, gonzalez
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((4, 2), ("data", "model"))
+        pts = jnp.asarray(np.random.default_rng(0)
+                          .normal(size=(800, 4)).astype(np.float32))
+        c, r2 = mrg_distributed(pts, 6, mesh, shard_axes=("data",))
+        g = gonzalez(pts, 6)
+        ratio = float(jnp.sqrt(r2)) / float(jnp.sqrt(g.radius2))
+        print(json.dumps({"ratio": ratio}))
+    """)
+    ratio = json.loads(out.strip().splitlines()[-1])["ratio"]
+    assert ratio <= 2.0 + 1e-6  # MRG<=4·OPT, GON>=OPT ⇒ ratio<=4; usually ~1
+
+
+def test_mrg_hierarchical_multi_axis():
+    out = _run("""
+        from repro.core import mrg_distributed, gonzalez
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+        pts = jnp.asarray(np.random.default_rng(1)
+                          .normal(size=(960, 3)).astype(np.float32))
+        c, r2 = mrg_distributed(pts, 5, mesh,
+                                shard_axes=("pod", "data", "model"),
+                                hierarchical=True)
+        g = gonzalez(pts, 5)
+        print(json.dumps({"ratio": float(jnp.sqrt(r2) /
+                                         jnp.sqrt(g.radius2))}))
+    """)
+    ratio = json.loads(out.strip().splitlines()[-1])["ratio"]
+    # hierarchical gather adds +2 per level (paper Lemma 3)
+    assert ratio <= 8.0
+
+
+def test_sharded_train_step_runs_and_matches_single_device_loss():
+    out = _run("""
+        from repro.configs import get_config
+        from repro.data import model_batch
+        from repro.launch.mesh import make_mesh
+        from repro.optim import adamw, make_schedule
+        from repro.sharding import (batch_pspecs, shardings, state_pspecs,
+                                    use_mesh)
+        from repro.train import init_train_state, make_train_step
+        cfg = get_config("granite_3_2b", smoke=True)
+        opt = adamw(make_schedule("constant", peak=1e-3))
+        batch = {k: jnp.asarray(v) for k, v in
+                 model_batch(cfg, 8, 16).items()}
+        # single device
+        state = init_train_state(jax.random.PRNGKey(0), cfg, opt)
+        _, m1 = jax.jit(make_train_step(cfg, opt))(state, batch)
+        # 4x2 mesh
+        mesh = make_mesh((4, 2), ("data", "model"))
+        with use_mesh(mesh):
+            state2 = init_train_state(jax.random.PRNGKey(0), cfg, opt)
+            st_sh = shardings(state_pspecs(jax.eval_shape(lambda: state2),
+                                           mesh), mesh)
+            step = jax.jit(make_train_step(cfg, opt))
+            _, m2 = step(state2, batch)
+        print(json.dumps({"l1": float(m1["loss"]), "l2": float(m2["loss"])}))
+    """)
+    r = json.loads(out.strip().splitlines()[-1])
+    assert abs(r["l1"] - r["l2"]) < 1e-2, r
+
+
+def test_elastic_checkpoint_restore_smaller_mesh(tmp_path):
+    out = _run(f"""
+        from repro.configs import get_config
+        from repro.checkpoint import save_checkpoint, restore_checkpoint
+        from repro.launch.mesh import make_mesh
+        from repro.optim import adamw, make_schedule
+        from repro.sharding import use_mesh
+        from repro.train import init_train_state, make_train_step
+        from repro.data import model_batch
+        cfg = get_config("qwen2_0_5b", smoke=True)
+        opt = adamw(make_schedule("constant", peak=1e-3))
+        mesh8 = make_mesh((4, 2), ("data", "model"))
+        batch = {{k: jnp.asarray(v) for k, v in
+                 model_batch(cfg, 8, 16).items()}}
+        with use_mesh(mesh8):
+            state = init_train_state(jax.random.PRNGKey(0), cfg, opt)
+            state, m = jax.jit(make_train_step(cfg, opt))(state, batch)
+            save_checkpoint("{tmp_path}", 1, state)
+        # restore on a smaller (2,2) mesh — degraded pod
+        mesh4 = make_mesh((2, 2), ("data", "model"))
+        with use_mesh(mesh4):
+            template = jax.tree.map(np.asarray,
+                                    init_train_state(jax.random.PRNGKey(0),
+                                                     cfg, opt))
+            step, host = restore_checkpoint("{tmp_path}", template)
+            state2 = jax.tree.map(jnp.asarray, host)
+            state2, m2 = jax.jit(make_train_step(cfg, opt))(state2, batch)
+        print(json.dumps({{"step": step, "loss": float(m2["loss"])}}))
+    """)
+    r = json.loads(out.strip().splitlines()[-1])
+    assert r["step"] == 1 and r["loss"] > 0
+
+
+def test_moe_shard_map_vs_local():
+    out = _run("""
+        from repro.configs import get_config
+        from repro.models import init_params, forward
+        from repro.launch.mesh import make_mesh
+        from repro.sharding import use_mesh
+        cfg = get_config("dbrx_132b", smoke=True)
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        batch = {"tokens": jnp.arange(32).reshape(2, 16) % cfg.vocab_size}
+        l1, _ = jax.jit(lambda p, b: forward(p, b, cfg))(params, batch)
+        mesh = make_mesh((2, 4), ("data", "model"))
+        with use_mesh(mesh):
+            l2, _ = jax.jit(lambda p, b: forward(p, b, cfg))(params, batch)
+        err = float(jnp.max(jnp.abs(l1 - l2)))
+        print(json.dumps({"err": err}))
+    """)
+    r = json.loads(out.strip().splitlines()[-1])
+    assert r["err"] < 1e-3, r

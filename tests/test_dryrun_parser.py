@@ -1,0 +1,50 @@
+"""Unit tests for the dry-run HLO collective parser (trip-count math)."""
+import textwrap
+
+from repro.launch.dryrun import (_split_computations, _type_bytes,
+                                 parse_collectives)
+
+HLO = textwrap.dedent("""\
+    HloModule jit_step
+
+    %wide.body (arg: (s32[], bf16[4,8])) -> (s32[], bf16[4,8]) {
+      %ar = bf16[4,8]{1,0} all-reduce(%x), replica_groups={{0,1,2,3}}
+      %ag = bf16[4,8]{1,0} all-gather(%y), replica_groups=[4,8]<=[32]
+      ROOT %t = (s32[], bf16[4,8]) tuple(%i, %ar)
+    }
+
+    %wide.cond (arg: (s32[], bf16[4,8])) -> pred[] {
+      %gte = s32[] get-tuple-element(%arg), index=0
+      %c = s32[] constant(24)
+      ROOT %cmp = pred[] compare(%gte, %c), direction=LT
+    }
+
+    ENTRY %main (p0: bf16[4,8]) -> bf16[4,8] {
+      %w = (s32[], bf16[4,8]) while(%init), condition=%wide.cond, body=%wide.body
+      %ar2 = f32[16]{0} all-reduce(%z), replica_groups={{0,1}}
+      ROOT %out = bf16[4,8] get-tuple-element(%w), index=1
+    }
+""")
+
+
+def test_type_bytes():
+    assert _type_bytes("bf16[4,8]{1,0}") == 64
+    assert _type_bytes("f32[16]{0}") == 64
+    assert _type_bytes("(bf16[4,8]{1,0}, f32[2,2]{1,0})") == 64 + 16
+
+
+def test_split_computations_handles_tuple_signatures():
+    comps, entry = _split_computations(HLO)
+    assert entry == "main"
+    assert "wide.body" in comps and "wide.cond" in comps
+
+
+def test_trip_count_multiplication():
+    total, per_op = parse_collectives(HLO)
+    # body: all-reduce 64 B + all-gather operand 64/8 B, × 24 trips;
+    # entry: all-reduce 64 B × 1
+    assert per_op["all-reduce"]["count"] == 24 + 1
+    assert per_op["all-reduce"]["operand_bytes"] == 24 * 64 + 64
+    assert per_op["all-gather"]["count"] == 24
+    assert per_op["all-gather"]["operand_bytes"] == 24 * (64 // 8)
+    assert total == 24 * 64 + 64 + 24 * 8

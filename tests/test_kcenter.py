@@ -1,0 +1,127 @@
+"""Correctness tests for the paper's algorithms (GON / MRG / EIM)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (brute_force_opt, covering_radius, eim, eim_sample,
+                        gonzalez, mrg_sim, plan_rounds)
+from repro.kernels import ref
+
+
+def _pts(n, d=2, seed=0):
+    return np.random.default_rng(seed).normal(size=(n, d)).astype(np.float32)
+
+
+class TestGonzalez:
+    def test_two_approx_vs_bruteforce(self):
+        for seed in range(4):
+            pts = _pts(14, seed=seed)
+            for k in (2, 3, 4):
+                opt = brute_force_opt(pts, k)
+                got = float(jnp.sqrt(gonzalez(jnp.asarray(pts), k).radius2))
+                assert got <= 2.0 * opt + 1e-5, (seed, k, got, opt)
+
+    def test_anti_chain_invariant(self):
+        # Gonzalez centers are pairwise >= covering radius apart.
+        pts = _pts(300, 3, seed=1)
+        res = gonzalez(jnp.asarray(pts), 10)
+        pd = ref.pairwise_dist2(res.centers, res.centers)
+        pd = pd + jnp.eye(10) * 1e9
+        assert float(jnp.min(pd)) >= float(res.radius2) - 1e-4
+
+    def test_radius_monotone_in_k(self):
+        pts = jnp.asarray(_pts(200, seed=2))
+        radii = [float(gonzalez(pts, k).radius2) for k in (2, 4, 8, 16, 32)]
+        for a, b in zip(radii, radii[1:]):
+            assert b <= a + 1e-6
+
+    def test_masked_equals_subset(self):
+        pts = _pts(100, seed=3)
+        mask = np.zeros(100, bool)
+        mask[::2] = True
+        r_masked = gonzalez(jnp.asarray(pts), 5, mask=jnp.asarray(mask))
+        r_subset = gonzalez(jnp.asarray(pts[mask]), 5)
+        assert np.isclose(float(r_masked.radius2),
+                          float(r_subset.radius2), rtol=1e-5)
+
+    def test_min_d2_covers_all(self):
+        pts = jnp.asarray(_pts(150, seed=4))
+        res = gonzalez(pts, 6)
+        _, d2 = ref.assign_nearest(pts, res.centers), None
+        idx, d2 = ref.assign_nearest(pts, res.centers)
+        assert np.allclose(np.asarray(res.min_d2), np.asarray(d2),
+                           atol=1e-4)
+
+
+class TestMRG:
+    def test_four_approx_vs_bruteforce(self):
+        for seed in range(3):
+            pts = _pts(16, seed=seed + 10)
+            opt = brute_force_opt(pts, 3)
+            r = mrg_sim(jnp.asarray(pts), 3, m=4, capacity=100)
+            assert float(jnp.sqrt(r.radius2)) <= 4.0 * opt + 1e-5
+
+    def test_two_rounds_when_capacity_allows(self):
+        pts = _pts(500, seed=5)
+        r = mrg_sim(jnp.asarray(pts), 5, m=10, capacity=1000)
+        assert r.rounds == 2
+
+    def test_multiround_when_capacity_small(self):
+        pts = _pts(600, seed=6)
+        # k*m = 80 > capacity 30 forces extra rounds
+        r = mrg_sim(jnp.asarray(pts), 8, m=10, capacity=30)
+        assert r.rounds > 2
+        # quality still bounded: 2(i+1)-approx => radius <= 2*rounds*GON
+        g = gonzalez(jnp.asarray(pts), 8)
+        assert float(r.radius2) <= (2 * r.rounds) ** 2 * float(g.radius2) + 1e-4
+
+    def test_plan_rounds_matches_paper(self):
+        # paper §3.2: n/m<=c and k*m<=c => 2 rounds
+        assert plan_rounds(10 ** 6, 50, 25, 20_000) == 2
+        # k*m > c forces more rounds
+        assert plan_rounds(10 ** 6, 50, 1000, 20_000) == 3
+        # k > c infeasible
+        with pytest.raises(ValueError):
+            plan_rounds(10 ** 6, 50, 30_000, 20_000)
+
+
+class TestEIM:
+    def test_small_n_degenerates_to_gon(self):
+        # paper Fig 4: when threshold >= n the while loop never runs
+        pts = jnp.asarray(_pts(500, seed=7))
+        e = eim(pts, 8, jax.random.PRNGKey(0))
+        g = gonzalez(pts, 8)
+        assert not bool(e.sample.sampled)
+        assert np.isclose(float(e.radius2), float(g.radius2), rtol=1e-5)
+
+    def test_sampling_path_terminates_and_bounded(self):
+        # n large enough that the threshold (4/eps)k n^eps ln n < n
+        pts = jnp.asarray(_pts(20_000, seed=8))
+        e = eim(pts, 4, jax.random.PRNGKey(1), eps=0.1, phi=8.0)
+        assert bool(e.sample.sampled)
+        assert int(e.sample.iters) >= 1
+        g = gonzalez(pts, 4)
+        # w.s.p. 10-approx; GON >= OPT so this is a (loose) sanity bound
+        assert float(jnp.sqrt(e.radius2)) <= \
+            10.0 * float(jnp.sqrt(g.radius2)) + 1e-5
+
+    def test_sample_mask_is_superset_of_sampled_s(self):
+        pts = jnp.asarray(_pts(20_000, seed=9))
+        s = eim_sample(pts, 4, jax.random.PRNGKey(2), eps=0.1)
+        assert bool(jnp.all(~s.s_mask | s.sample_mask))
+
+    def test_phi_monotone_runtime_iterations(self):
+        # smaller phi -> lower pivot threshold -> more removed per iter
+        pts = jnp.asarray(_pts(20_000, seed=10))
+        it_small = int(eim_sample(pts, 4, jax.random.PRNGKey(3),
+                                  eps=0.1, phi=1.0).iters)
+        it_big = int(eim_sample(pts, 4, jax.random.PRNGKey(3),
+                                eps=0.1, phi=8.0).iters)
+        assert it_small <= it_big + 1
+
+    def test_termination_fix_sampled_points_leave_r(self):
+        pts = jnp.asarray(_pts(20_000, seed=11))
+        s = eim_sample(pts, 4, jax.random.PRNGKey(4), eps=0.1)
+        # every point is in exactly one of {S, R_final, removed}
+        assert int(s.overflow) == 0

@@ -1,0 +1,71 @@
+"""Pallas kernel validation: shape/dtype sweeps against the jnp oracles
+(interpret mode on CPU)."""
+import itertools
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+SHAPES = [(8, 8, 2), (100, 17, 3), (256, 64, 64), (1000, 37, 128),
+          (513, 9, 5)]
+DTYPES = [np.float32, np.float16]
+
+
+def _data(n, m, d, dtype, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, d)).astype(dtype)
+    c = rng.normal(size=(m, d)).astype(dtype)
+    md = rng.uniform(0.5, 20, size=(n,)).astype(np.float32)
+    return jnp.asarray(x), jnp.asarray(c), jnp.asarray(md)
+
+
+@pytest.mark.parametrize("n,m,d", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_pairwise_dist2(n, m, d, dtype):
+    x, c, _ = _data(n, m, d, dtype)
+    got = ops.pairwise_dist2(x, c, impl="pallas", bn=64, bm=16)
+    want = ref.pairwise_dist2(x, c)
+    tol = 1e-4 if dtype == np.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol * 10)
+
+
+@pytest.mark.parametrize("n,m,d", SHAPES)
+def test_fused_min_argmax(n, m, d):
+    x, c, md = _data(n, m, d, np.float32)
+    nm, fv, fi = ops.fused_min_argmax(x, c[0], md, impl="pallas", bn=64)
+    nm2, fv2, fi2 = ref.fused_min_argmax(x, c[0], md)
+    np.testing.assert_allclose(np.asarray(nm), np.asarray(nm2), rtol=1e-5)
+    assert int(fi) == int(fi2)
+    np.testing.assert_allclose(float(fv), float(fv2), rtol=1e-5)
+
+
+@pytest.mark.parametrize("n,m,d", SHAPES)
+def test_assign_nearest(n, m, d):
+    x, c, _ = _data(n, m, d, np.float32, seed=3)
+    ia, da = ops.assign_nearest(x, c, impl="pallas", bn=64, bm=8)
+    ib, db = ref.assign_nearest(x, c)
+    # ties can legitimately differ; compare distances, then indices where
+    # the nearest is unique
+    np.testing.assert_allclose(np.asarray(da), np.asarray(db), rtol=1e-4,
+                               atol=1e-4)
+    d2 = np.asarray(ref.pairwise_dist2(x, c))
+    part = np.partition(d2, 1, axis=1)
+    unique = part[:, 1] - part[:, 0] > 1e-5
+    assert (np.asarray(ia)[unique] == np.asarray(ib)[unique]).all()
+
+
+def test_padding_rows_never_win():
+    # n=5 with block 64 => heavy padding; padded rows must not be argmax
+    x, c, md = _data(5, 3, 2, np.float32, seed=4)
+    nm, fv, fi = ops.fused_min_argmax(x, c[0], md, impl="pallas", bn=64)
+    assert 0 <= int(fi) < 5
+
+
+def test_impl_auto_selects_ref_on_cpu():
+    x, c, _ = _data(16, 4, 2, np.float32)
+    a = ops.pairwise_dist2(x, c, impl="auto")
+    b = ref.pairwise_dist2(x, c)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)

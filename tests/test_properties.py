@@ -1,0 +1,98 @@
+"""Hypothesis property tests for the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+from hypothesis.extra.numpy import arrays
+
+from repro.core import covering_radius, gonzalez, mrg_sim
+from repro.kernels import ref
+
+SET = settings(max_examples=25, deadline=None,
+               suppress_health_check=[HealthCheck.too_slow])
+
+
+def point_sets(min_n=8, max_n=64, max_d=5):
+    return st.integers(min_n, max_n).flatmap(
+        lambda n: st.integers(1, max_d).flatmap(
+            lambda d: arrays(np.float32, (n, d),
+                             elements=st.floats(-100, 100, width=32))))
+
+
+@given(pts=point_sets(), k=st.integers(2, 6))
+@SET
+def test_gonzalez_radius_covers_every_point(pts, k):
+    k = min(k, pts.shape[0])
+    res = gonzalez(jnp.asarray(pts), k)
+    _, d2 = ref.assign_nearest(jnp.asarray(pts), res.centers)
+    r2 = float(res.radius2)
+    assert float(jnp.max(d2)) <= r2 * (1 + 1e-4) + 1e-2
+
+
+@given(pts=point_sets(), k=st.integers(2, 6))
+@SET
+def test_gonzalez_centers_are_input_points(pts, k):
+    k = min(k, pts.shape[0])
+    res = gonzalez(jnp.asarray(pts), k)
+    idx = np.asarray(res.indices)
+    assert ((0 <= idx) & (idx < pts.shape[0])).all()
+    assert np.allclose(np.asarray(res.centers), pts[idx], atol=1e-6)
+
+
+@given(pts=point_sets(), k=st.integers(2, 6))
+@SET
+def test_gonzalez_anti_chain(pts, k):
+    # selected centers pairwise separation >= covering radius
+    k = min(k, pts.shape[0])
+    res = gonzalez(jnp.asarray(pts), k)
+    # duplicate input points can yield duplicate centers at radius 0
+    pd = np.asarray(ref.pairwise_dist2(res.centers, res.centers))
+    pd = pd + np.eye(k) * 1e12
+    assert pd.min() >= float(res.radius2) - 1e-3
+
+
+@given(pts=point_sets(min_n=16), k=st.integers(2, 4),
+       m=st.integers(2, 5))
+@SET
+def test_mrg_within_factor_of_gon(pts, k, m):
+    # MRG <= 4·OPT and GON >= OPT  =>  MRG <= 4·GON(+eps)
+    g = gonzalez(jnp.asarray(pts), k)
+    r = mrg_sim(jnp.asarray(pts), k, m=m, capacity=10_000)
+    lhs = float(jnp.sqrt(r.radius2))
+    rhs = 4.0 * float(jnp.sqrt(g.radius2))
+    assert lhs <= rhs + 1e-3
+
+
+@given(pts=point_sets(min_n=12), k=st.integers(2, 5))
+@SET
+def test_permutation_invariance_of_radius_scale(pts, k):
+    # covering radius of GON is invariant to point permutation up to the
+    # greedy's own seed (first center pinned to index 0) — permuting and
+    # re-seeding with the same physical point gives identical radii.
+    perm = np.random.default_rng(0).permutation(pts.shape[0])
+    k = min(k, pts.shape[0])
+    r1 = gonzalez(jnp.asarray(pts), k, first=0)
+    where = int(np.nonzero(perm == 0)[0][0])
+    r2 = gonzalez(jnp.asarray(pts[perm]), k, first=where)
+    assert np.isclose(float(r1.radius2), float(r2.radius2), rtol=1e-4,
+                      atol=1e-5)
+
+
+@given(x=arrays(np.float32, (33, 7),
+                elements=st.floats(-50, 50, width=32)),
+       c=arrays(np.float32, (9, 7), elements=st.floats(-50, 50, width=32)))
+@SET
+def test_pairwise_matches_direct(x, c):
+    got = np.asarray(ref.pairwise_dist2(jnp.asarray(x), jnp.asarray(c)))
+    want = ((x[:, None, :] - c[None, :, :]) ** 2).sum(-1)
+    assert np.allclose(got, want, rtol=1e-3, atol=1e-2)
+
+
+@given(pts=point_sets(min_n=10), frac=st.floats(0.3, 0.9))
+@SET
+def test_coreset_weights_sum_to_n(pts, frac):
+    from repro.core import select_coreset
+    k = max(2, int(pts.shape[0] * frac * 0.2))
+    cs = select_coreset(jnp.asarray(pts), k)
+    assert int(jnp.sum(cs.weights)) == pts.shape[0]

@@ -1,0 +1,138 @@
+"""Tests for the serving engine (continuous batching) and streaming
+k-center."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.configs import get_config
+from repro.models import init_params
+
+SET = settings(max_examples=10, deadline=None,
+               suppress_health_check=[HealthCheck.too_slow])
+
+
+# ---------------------------------------------------------------------------
+# sampler
+# ---------------------------------------------------------------------------
+
+def test_greedy_sampling_is_argmax():
+    from repro.serve import sample
+    logits = jnp.asarray([[1.0, 5.0, 2.0], [3.0, 0.0, -1.0]])
+    out = sample(logits, jax.random.PRNGKey(0), temperature=0.0)
+    assert out.tolist() == [1, 0]
+
+
+def test_top_k_restricts_support():
+    from repro.serve import sample
+    logits = jnp.asarray([[0.0, 10.0, 9.0, -5.0]])
+    for seed in range(20):
+        t = int(sample(logits, jax.random.PRNGKey(seed), temperature=1.0,
+                       top_k=2)[0])
+        assert t in (1, 2)
+
+
+def test_top_p_keeps_head():
+    from repro.serve import sample
+    logits = jnp.asarray([[10.0, 0.0, 0.0, 0.0]])
+    for seed in range(10):
+        t = int(sample(logits, jax.random.PRNGKey(seed), temperature=1.0,
+                       top_p=0.5)[0])
+        assert t == 0
+
+
+# ---------------------------------------------------------------------------
+# engine
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def engine_setup():
+    cfg = get_config("qwen2_0_5b", smoke=True)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def test_engine_continuous_batching(engine_setup):
+    from repro.serve import Engine, Request
+    cfg, params = engine_setup
+    eng = Engine(params, cfg, slots=3, s_max=48)
+    for i in range(5):  # more requests than slots
+        eng.submit(Request(uid=i, tokens=np.arange(4 + i), max_new=6))
+    done = eng.run()
+    assert len(done) == 5
+    assert all(len(r.out) == 6 for r in done)
+    assert all(r.t_done >= r.t_first >= r.t_submit for r in done)
+
+
+def test_engine_matches_plain_decode(engine_setup):
+    """Greedy engine output == straight prefill+decode for one request."""
+    from repro.models import decode_step, prefill
+    from repro.serve import Engine, Request
+    cfg, params = engine_setup
+    prompt = np.arange(8) % cfg.vocab_size
+
+    eng = Engine(params, cfg, slots=2, s_max=32)
+    eng.submit(Request(uid=0, tokens=prompt, max_new=5))
+    done = eng.run()
+    got = done[0].out
+
+    logits, cache = prefill(params, {"tokens": jnp.asarray(prompt)[None]},
+                            cfg, 32)
+    want = [int(jnp.argmax(logits[0, -1]))]
+    tok = jnp.asarray([[want[-1]]], jnp.int32)
+    for _ in range(4):
+        logits, cache = decode_step(params, cache, tok, cfg)
+        want.append(int(jnp.argmax(logits[0, -1])))
+        tok = jnp.asarray([[want[-1]]], jnp.int32)
+    assert got == want
+
+
+def test_engine_eos_frees_slot(engine_setup):
+    from repro.serve import Engine, Request
+    cfg, params = engine_setup
+    eng = Engine(params, cfg, slots=1, s_max=32)
+    eng.submit(Request(uid=0, tokens=np.arange(4), max_new=100, eos_id=-2))
+    eng.submit(Request(uid=1, tokens=np.arange(4), max_new=3))
+    done = eng.run(max_steps=200)
+    # request 0 runs until cache limit, request 1 still completes after
+    assert {r.uid for r in done} == {0, 1}
+
+
+# ---------------------------------------------------------------------------
+# streaming k-center
+# ---------------------------------------------------------------------------
+
+def test_streaming_guarantee_vs_gon():
+    from repro.core import gonzalez, stream_init, stream_result, stream_update
+    from repro.kernels import ops
+    rng = np.random.default_rng(1)
+    pts = rng.normal(size=(5000, 4)).astype(np.float32)
+    st = stream_init(8, 4)
+    for i in range(0, 5000, 500):
+        st = stream_update(st, pts[i : i + 500])
+    centers, r = stream_result(st)
+    assert 1 <= centers.shape[0] <= 8
+    _, d2 = ops.assign_nearest(jnp.asarray(pts), jnp.asarray(centers))
+    rad = float(np.sqrt(np.max(np.asarray(d2))))
+    g = float(jnp.sqrt(gonzalez(jnp.asarray(pts), 8).radius2))
+    assert rad <= 8.0 * g + 1e-5  # 8-approx vs (>=OPT) baseline
+
+
+@given(n=st.integers(20, 200), k=st.integers(2, 6),
+       seed=st.integers(0, 5))
+@SET
+def test_streaming_center_separation_invariant(n, k, seed):
+    from repro.core import stream_init, stream_result, stream_update
+    rng = np.random.default_rng(seed)
+    pts = rng.normal(size=(n, 3)).astype(np.float32)
+    st = stream_init(k, 3)
+    st = stream_update(st, pts)
+    centers, r = stream_result(st)
+    assert centers.shape[0] <= k or r == 0.0
+    if centers.shape[0] > 1 and r > 0:
+        d2 = ((centers[:, None] - centers[None]) ** 2).sum(-1)
+        np.fill_diagonal(d2, np.inf)
+        # doubling invariant: pairwise separation > 4r
+        assert np.sqrt(d2.min()) > 4.0 * r - 1e-4
