@@ -20,7 +20,8 @@ def main() -> None:
     ap.add_argument("--full", action="store_true", help="paper-scale n")
     ap.add_argument("--deep", action="store_true", help="full k/φ grids")
     ap.add_argument("--only", default=None,
-                    help="comma list: tables,runtime,phi,kernels,roofline")
+                    help="comma list: tables,runtime,phi,perfcell,kernels,"
+                         "chunked,roofline")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -82,6 +83,11 @@ def main() -> None:
     if want("kernels"):
         from . import kernel_bench
         for name, us, derived in kernel_bench.run():
+            print(f"{name},{us:.0f},{derived}", flush=True)
+
+    if want("chunked"):
+        from . import chunked_scaling
+        for name, us, derived in chunked_scaling.run(full=args.full):
             print(f"{name},{us:.0f},{derived}", flush=True)
 
     if want("roofline"):

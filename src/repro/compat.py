@@ -1,0 +1,135 @@
+"""jax version-compatibility shim — the single import surface for API drift.
+
+Every jax API that moved, was renamed, or changed signature between the
+0.4.x and 0.6+ lines is resolved here once, so the rest of the codebase
+imports from ``repro.compat`` and never version-checks inline.
+
+Support matrix (verified against the pinned CI versions):
+
+  =====================  =======================  =========================
+  capability             jax 0.4.x (>=0.4.30)     jax 0.6+
+  =====================  =======================  =========================
+  shard_map              jax.experimental.        ``jax.shard_map`` with
+                         shard_map.shard_map      ``check_vma=``
+                         with ``check_rep=``
+  mesh axis types        (not available; meshes   ``jax.sharding.AxisType``
+                         are implicitly "auto")   passed via ``axis_types=``
+  ambient mesh context   legacy ``with mesh:``    ``jax.set_mesh(mesh)``
+                         resource-env manager
+  cost_analysis()        one-element list of      flat dict
+                         dicts
+  =====================  =======================  =========================
+
+Everything here is feature-detected (``hasattr``), not version-compared:
+point releases backport APIs and the jaxlib/jax pair may be mixed, so the
+presence of the symbol is the only reliable signal.
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+import inspect
+from typing import Sequence
+
+import jax
+import jax.sharding
+
+HAS_TOP_LEVEL_SHARD_MAP = hasattr(jax, "shard_map")
+HAS_AXIS_TYPE = hasattr(jax.sharding, "AxisType")
+HAS_SET_MESH = hasattr(jax, "set_mesh")
+
+
+# ---------------------------------------------------------------------------
+# shard_map
+# ---------------------------------------------------------------------------
+
+def _resolve_shard_map():
+    """-> (callable, name of the replication-check kwarg it accepts)."""
+    if HAS_TOP_LEVEL_SHARD_MAP:
+        fn = jax.shard_map
+    else:
+        from jax.experimental.shard_map import shard_map as fn  # 0.4.x
+    params = inspect.signature(fn).parameters
+    for kw in ("check_vma", "check_rep"):
+        if kw in params:
+            return fn, kw
+    return fn, None  # neither: pass nothing (future-proof)
+
+
+_SHARD_MAP, _CHECK_KW = _resolve_shard_map()
+
+
+def shard_map(f=None, *, mesh, in_specs, out_specs, check_replication=True):
+    """Version-portable ``shard_map``.
+
+    ``check_replication`` maps onto ``check_vma=`` (jax >= 0.6) or
+    ``check_rep=`` (jax 0.4.x experimental). Usable directly or as a
+    decorator factory::
+
+        @functools.partial(compat.shard_map, mesh=mesh,
+                           in_specs=..., out_specs=...,
+                           check_replication=False)
+        def run(local): ...
+    """
+    kwargs = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    if _CHECK_KW is not None:
+        kwargs[_CHECK_KW] = check_replication
+    if f is None:
+        return functools.partial(_SHARD_MAP, **kwargs)
+    return _SHARD_MAP(f, **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# Mesh construction
+# ---------------------------------------------------------------------------
+
+def make_mesh(devices, axis_names: Sequence[str]) -> jax.sharding.Mesh:
+    """``Mesh`` over an ndarray of devices with *auto* axis types.
+
+    jax 0.6+ makes axis types explicit (``AxisType.Auto`` reproduces the
+    0.4.x behavior); 0.4.x has no ``axis_types=`` kwarg and every axis is
+    implicitly auto, so the two branches build the same mesh semantics.
+    """
+    axes = tuple(axis_names)
+    if HAS_AXIS_TYPE:
+        from jax.sharding import AxisType
+        return jax.sharding.Mesh(devices, axes,
+                                 axis_types=(AxisType.Auto,) * len(axes))
+    return jax.sharding.Mesh(devices, axes)
+
+
+# ---------------------------------------------------------------------------
+# Ambient mesh context
+# ---------------------------------------------------------------------------
+
+@contextlib.contextmanager
+def set_mesh(mesh: jax.sharding.Mesh):
+    """Install ``mesh`` as the ambient mesh for the duration.
+
+    jax 0.6+: ``jax.set_mesh`` (explicit-sharding aware). jax 0.4.x: the
+    legacy ``with mesh:`` resource-env context (sufficient for the
+    NamedSharding / shard_map paths used in this codebase, which always
+    pass the mesh explicitly as well).
+    """
+    if HAS_SET_MESH:
+        with jax.set_mesh(mesh):
+            yield mesh
+    else:
+        with mesh:
+            yield mesh
+
+
+# ---------------------------------------------------------------------------
+# Compiled-executable introspection
+# ---------------------------------------------------------------------------
+
+def cost_analysis(compiled) -> dict:
+    """Flat cost dict from a compiled executable.
+
+    jax 0.4.x returns a one-element list of dicts (one per program);
+    0.6+ returns the dict directly. Empty dict when unavailable.
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost or {}

@@ -35,23 +35,30 @@ def select_coreset(
     mesh: Mesh | None = None,
     shard_axes: Sequence[str] = ("data",),
     impl: str = "auto",
+    chunk: int | None = None,
 ) -> Coreset:
     """Pick k maximally-diverse examples from ``embeddings (n,d)``.
 
     With a mesh, runs the paper's MRG across ``shard_axes`` (2 rounds,
     4-approx); without, runs plain GON (2-approx) on one device.
+    ``chunk`` streams every O(n·k) distance pass in row-blocks
+    (kernels/engine.py) so the embedding cloud can exceed the size an
+    un-chunked (n, k) block would allow.
     """
     emb = embeddings.astype(jnp.float32)
     if mesh is not None:
         centers, r2 = mrg_distributed(emb, k, mesh, shard_axes=shard_axes,
-                                      impl=impl)
+                                      impl=impl, chunk=chunk)
     else:
-        res = gonzalez(emb, k, impl=impl)
+        res = gonzalez(emb, k, impl=impl, chunk=chunk)
         centers, r2 = res.centers, res.radius2
-    # Map centers back to concrete example indices + cluster sizes.
-    assign_idx, _ = ops.assign_nearest(emb, centers, impl=impl)
+    # Map centers back to concrete example indices + cluster sizes. The
+    # reverse pass (nearest example per center) is chunked over the n
+    # axis too — assign_nearest(centers, emb) would rebuild a (k, n)
+    # block on the ref path.
+    assign_idx, _ = ops.assign_nearest(emb, centers, impl=impl, chunk=chunk)
     weights = jnp.zeros((k,), jnp.float32).at[assign_idx].add(1.0)
-    cidx, _ = ops.assign_nearest(centers, emb, impl=impl)  # nearest example
+    cidx = ops.argmin_dist2_over_rows(emb, centers, impl=impl, chunk=chunk)
     return Coreset(cidx, centers, weights, r2)
 
 

@@ -72,7 +72,7 @@ def _expected_caps(n: int, k: int, eps: float, slack: float = 3.0):
 
 
 @functools.partial(
-    jax.jit, static_argnames=("k", "eps", "phi", "max_iters", "impl")
+    jax.jit, static_argnames=("k", "eps", "phi", "max_iters", "impl", "chunk")
 )
 def eim_sample(
     points: jnp.ndarray,
@@ -83,8 +83,16 @@ def eim_sample(
     phi: float = 8.0,
     max_iters: int = 64,
     impl: str = "auto",
+    chunk: int | None = None,
 ) -> EIMSample:
-    """Algorithm 2 (EIM-MapReduce-Sample) with the φ-parameterized Select."""
+    """Algorithm 2 (EIM-MapReduce-Sample) with the φ-parameterized Select.
+
+    ``chunk`` streams the per-iteration (n, s_cap) distance update in
+    row-blocks (kernels/engine.py memory model) — the sample distribution
+    is unchanged: the PRNG stream is identical and, for inputs whose
+    coordinates are far below the 1e18 invalid-slot sentinel, so is every
+    distance the loop compares.
+    """
     n, d = points.shape
     points = points.astype(jnp.float32)
     ln_n = math.log(max(n, 2))
@@ -116,10 +124,16 @@ def eim_sample(
 
         # Incremental d(x, S) update: distances to the *new* members only
         # (the paper's Round-3 O(|R|·|S|/m) term). Invalid buffer slots are
-        # pushed to +inf so they never win the min.
-        d_new = ops.pairwise_dist2(points, s_pts, impl=impl)  # (n, s_cap)
-        d_new = jnp.where(s_valid[None, :], d_new, _BIG)
-        d_s = jnp.minimum(d_s, jnp.min(d_new, axis=1))
+        # moved to a far-away coordinate so they never win the min; routing
+        # through assign_nearest (a fused min-reduction) instead of
+        # pairwise keeps the chunked peak at O(chunk·s_cap) — a chunked
+        # pairwise would still stack the full (n, s_cap) block. The update
+        # is gated on having any valid sample so a zero-sample iteration
+        # leaves the uncovered-point sentinel (_BIG) exactly untouched.
+        far_pts = jnp.where(s_valid[:, None], s_pts, 1e18)
+        _, d_new = ops.assign_nearest(points, far_pts, impl=impl,
+                                      chunk=chunk)            # (n,)
+        d_s = jnp.where(jnp.any(s_valid), jnp.minimum(d_s, d_new), d_s)
 
         s_mask = s_mask | new_s
         # Termination fix (paper §4.1): sampled points always leave R.
@@ -156,6 +170,7 @@ def eim(
     phi: float = 8.0,
     max_iters: int = 64,
     impl: str = "auto",
+    chunk: int | None = None,
     compact: bool = True,
 ) -> EIMResult:
     """Full EIM: sample, then run GON on the sample (final MapReduce round).
@@ -167,7 +182,7 @@ def eim(
     """
     n, d = points.shape
     sample = eim_sample(points, k, key, eps=eps, phi=phi,
-                        max_iters=max_iters, impl=impl)
+                        max_iters=max_iters, impl=impl, chunk=chunk)
     if compact:
         ln_n = math.log(max(n, 2))
         thr = (4.0 / eps) * k * (n ** eps) * ln_n
@@ -176,9 +191,9 @@ def eim(
         idx = jnp.nonzero(sample.sample_mask, size=c_cap, fill_value=n)[0]
         valid = idx < n
         pts = jnp.asarray(points, jnp.float32)[jnp.minimum(idx, n - 1)]
-        res = gonzalez(pts, k, mask=valid, impl=impl)
+        res = gonzalez(pts, k, mask=valid, impl=impl, chunk=chunk)
     else:
         res = gonzalez(jnp.asarray(points, jnp.float32), k,
-                       mask=sample.sample_mask, impl=impl)
-    r = covering_radius(points, res.centers, impl=impl)
+                       mask=sample.sample_mask, impl=impl, chunk=chunk)
+    r = covering_radius(points, res.centers, impl=impl, chunk=chunk)
     return EIMResult(res.centers, r * r, sample)

@@ -35,7 +35,7 @@ class GonzalezResult(NamedTuple):
     min_d2: jnp.ndarray    # (n,)  final per-point squared distance to centers
 
 
-@functools.partial(jax.jit, static_argnames=("k", "impl"))
+@functools.partial(jax.jit, static_argnames=("k", "impl", "chunk"))
 def gonzalez(
     points: jnp.ndarray,
     k: int,
@@ -43,6 +43,7 @@ def gonzalez(
     mask: jnp.ndarray | None = None,
     first: int | jnp.ndarray = 0,
     impl: str = "auto",
+    chunk: int | None = None,
 ) -> GonzalezResult:
     """Run GON on ``points (n,d)``; optionally restricted to ``mask (n,) bool``.
 
@@ -50,6 +51,11 @@ def gonzalez(
     excluded from the covering radius. If fewer than ``k`` valid points
     exist, the remaining center slots repeat already-covered points
     (radius is unaffected). ``k`` is static.
+
+    ``chunk`` (static) streams each fused pass in row-blocks of at most
+    ``chunk`` points (O(chunk·d) working set per step instead of O(n·d)
+    transients) — the selected centers and radius are invariant to it
+    (tests/test_engine.py).
     """
     n, d = points.shape
     points = points.astype(jnp.float32)
@@ -71,7 +77,8 @@ def gonzalez(
         min_d2, centers, indices = carry
         nxt = jnp.argmax(min_d2).astype(jnp.int32)
         c = points[nxt]
-        new_md, _, _ = ops.fused_min_argmax(points, c, min_d2, impl=impl)
+        new_md, _, _ = ops.fused_min_argmax(points, c, min_d2, impl=impl,
+                                            chunk=chunk)
         return new_md, centers.at[i].set(c), indices.at[i].set(nxt)
 
     min_d2, centers, indices = jax.lax.fori_loop(
@@ -85,9 +92,10 @@ def gonzalez(
 
 def covering_radius(points: jnp.ndarray, centers: jnp.ndarray,
                     *, mask: jnp.ndarray | None = None,
-                    impl: str = "auto") -> jnp.ndarray:
+                    impl: str = "auto",
+                    chunk: int | None = None) -> jnp.ndarray:
     """Euclidean covering radius of ``centers`` over (masked) ``points``."""
-    _, d2 = ops.assign_nearest(points, centers, impl=impl)
+    _, d2 = ops.assign_nearest(points, centers, impl=impl, chunk=chunk)
     if mask is not None:
         d2 = jnp.where(mask, d2, 0.0)
     return jnp.sqrt(jnp.max(d2))

@@ -32,6 +32,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.kernels import ops
 
 from .gonzalez import covering_radius, gonzalez
@@ -72,13 +73,13 @@ def plan_rounds(n: int, m: int, k: int, capacity: int) -> int:
 # Single-device simulation (paper's experimental methodology, §7.1)
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("k", "m", "impl"))
+@functools.partial(jax.jit, static_argnames=("k", "m", "impl", "chunk"))
 def _mrg_round(points_blocked: jnp.ndarray, mask_blocked: jnp.ndarray,
-               k: int, m: int, impl: str):
+               k: int, m: int, impl: str, chunk: int | None = None):
     """vmapped GON over m blocks -> (m*k, d) center union + validity mask."""
-    res = jax.vmap(lambda p, mk: gonzalez(p, k, mask=mk, impl=impl))(
-        points_blocked, mask_blocked
-    )
+    res = jax.vmap(
+        lambda p, mk: gonzalez(p, k, mask=mk, impl=impl, chunk=chunk)
+    )(points_blocked, mask_blocked)
     centers = res.centers.reshape(m * k, -1)
     # a block with zero valid points still emits k (zero) rows; mark validity
     any_valid = jnp.any(mask_blocked, axis=1)             # (m,)
@@ -97,11 +98,13 @@ def _block(points: jnp.ndarray, m: int):
 
 
 def mrg_sim(points: jnp.ndarray, k: int, m: int = 50, *,
-            capacity: int | None = None, impl: str = "auto") -> MRGResult:
+            capacity: int | None = None, impl: str = "auto",
+            chunk: int | None = None) -> MRGResult:
     """Paper Algorithm 1 with m simulated machines (single device).
 
     ``capacity`` (default: block size n/m) triggers the multi-round path
-    when the k*m center union would not fit on one machine.
+    when the k*m center union would not fit on one machine. ``chunk``
+    streams every distance pass in row-blocks (see kernels/engine.py).
     """
     n, d = points.shape
     points = points.astype(jnp.float32)
@@ -110,7 +113,7 @@ def mrg_sim(points: jnp.ndarray, k: int, m: int = 50, *,
     levels = 1
 
     cur, mask = _block(points, m)
-    centers, valid = _mrg_round(cur, mask, k, m, impl)
+    centers, valid = _mrg_round(cur, mask, k, m, impl, chunk)
     levels += 1
     # Multi-round: while the union exceeds capacity, re-block and reduce
     # (paper §3.3 — each extra level adds +2 to the approximation factor).
@@ -120,11 +123,11 @@ def mrg_sim(points: jnp.ndarray, k: int, m: int = 50, *,
         vpad = jnp.pad(valid, (0, bmask.size - valid.shape[0]),
                        constant_values=False)
         bmask = bmask & vpad.reshape(bmask.shape)
-        centers, valid = _mrg_round(blocked, bmask, k, m2, impl)
+        centers, valid = _mrg_round(blocked, bmask, k, m2, impl, chunk)
         levels += 1
 
-    final = gonzalez(centers, k, mask=valid, impl=impl)
-    r = covering_radius(points, final.centers, impl=impl)
+    final = gonzalez(centers, k, mask=valid, impl=impl, chunk=chunk)
+    r = covering_radius(points, final.centers, impl=impl, chunk=chunk)
     return MRGResult(final.centers, r * r, levels)
 
 
@@ -140,6 +143,7 @@ def mrg_distributed(
     shard_axes: Sequence[str] = ("data",),
     hierarchical: bool = False,
     impl: str = "auto",
+    chunk: int | None = None,
 ):
     """Distributed MRG on a device mesh.
 
@@ -150,31 +154,39 @@ def mrg_distributed(
     (Lemma 3 multi-round; +2 approx per level) — used when k·m exceeds the
     working-set budget of a single gather.
 
+    ``chunk`` bounds each device's per-pass working set to O(chunk·k) —
+    the paper's capacity c decoupled from the shard size n/m, so a shard
+    may exceed what an un-chunked (n/m, k) block would allow.
+
     Returns ``(centers (k,d) replicated, radius2 ())``.
+
+    Version note: built on ``repro.compat.shard_map`` — runs on jax 0.4.x
+    (``jax.experimental.shard_map``, ``check_rep``) and 0.6+
+    (``jax.shard_map``, ``check_vma``) unchanged.
     """
     axes = tuple(shard_axes)
     pspec = P(axes if len(axes) > 1 else axes[0])
 
     @functools.partial(
-        jax.shard_map,
+        compat.shard_map,
         mesh=mesh,
         in_specs=(pspec,),
         out_specs=(P(), P()),
-        check_vma=False,
+        check_replication=False,
     )
     def run(local):
-        res = gonzalez(local, k, impl=impl)
+        res = gonzalez(local, k, impl=impl, chunk=chunk)
         centers = res.centers
         if hierarchical and len(axes) > 1:
             for ax in axes:
                 centers = jax.lax.all_gather(centers, ax, tiled=True)
-                centers = gonzalez(centers, k, impl=impl).centers
+                centers = gonzalez(centers, k, impl=impl, chunk=chunk).centers
         else:
             for ax in axes:
                 centers = jax.lax.all_gather(centers, ax, tiled=True)
-            centers = gonzalez(centers, k, impl=impl).centers
+            centers = gonzalez(centers, k, impl=impl, chunk=chunk).centers
         # local covering radius -> global max
-        _, d2 = ops.assign_nearest(local, centers, impl=impl)
+        _, d2 = ops.assign_nearest(local, centers, impl=impl, chunk=chunk)
         r2 = jnp.max(d2)
         for ax in axes:
             r2 = jax.lax.pmax(r2, ax)

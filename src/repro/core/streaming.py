@@ -43,13 +43,20 @@ def stream_init(k: int, d: int) -> StreamState:
     return StreamState(np.zeros((k + 1, d), np.float32), 0, 0.0, k)
 
 
-def _min_d2(x: np.ndarray, centers: np.ndarray) -> np.ndarray:
-    _, d2 = ops.assign_nearest(jnp.asarray(x), jnp.asarray(centers))
+def _min_d2(x: np.ndarray, centers: np.ndarray,
+            chunk: int | None = None) -> np.ndarray:
+    _, d2 = ops.assign_nearest(jnp.asarray(x), jnp.asarray(centers),
+                               chunk=chunk)
     return np.asarray(d2)
 
 
-def stream_update(state: StreamState, batch: np.ndarray) -> StreamState:
-    """Fold one batch of points (b,d) into the sketch."""
+def stream_update(state: StreamState, batch: np.ndarray, *,
+                  chunk: int | None = None) -> StreamState:
+    """Fold one batch of points (b,d) into the sketch.
+
+    ``chunk`` streams the per-batch coverage pass in row-blocks
+    (kernels/engine.py) so arbitrarily large batches never materialize a
+    (b, k) distance block."""
     centers, count, r, k = (np.array(state.centers), state.count,
                             state.r, state.k)
     batch = np.asarray(batch, np.float32)
@@ -72,7 +79,7 @@ def stream_update(state: StreamState, batch: np.ndarray) -> StreamState:
     while batch.size:
         # vectorized drop of covered points (≤ 4r of a center: the
         # doubling invariant allows absorbing them)
-        d2 = _min_d2(batch, centers[:count])
+        d2 = _min_d2(batch, centers[:count], chunk)
         far = batch[np.sqrt(d2) > 4.0 * r]
         if far.size == 0:
             break

@@ -4,7 +4,9 @@ Modules:
   pairwise.py     — tiled pairwise squared-distance matrix (MXU)
   fused_argfar.py — fused Gonzalez step: dist + running-min + arg-farthest
   assign.py       — fused nearest-center assignment (streaming argmin)
-  ops.py          — public jit wrappers (padding, impl resolution)
+  engine.py       — chunked execution engine (impl resolution, padding,
+                    row-chunk streaming under a memory budget)
+  ops.py          — public API façade over the engine (stable signatures)
   ref.py          — pure-jnp oracles (semantics contract + CPU fast path)
 """
-from . import ops, ref  # noqa: F401
+from . import engine, ops, ref  # noqa: F401

@@ -1,0 +1,275 @@
+"""Chunked distance-engine for the k-center kernels.
+
+This module is the real execution layer behind ``repro.kernels.ops`` (which
+is kept as a thin façade for API stability). It owns:
+
+  * ``impl`` resolution — Pallas on TPU, pure-jnp reference elsewhere;
+  * shape padding — kernels need block-divisible sizes, callers don't;
+  * **row-chunk streaming** — the paper-motivated memory model below.
+
+Memory model (paper §3.3 capacity argument / Ceccarello et al. 1802.09205):
+the un-chunked formulation of ``assign_nearest`` / ``pairwise_dist2``
+materializes an ``(n, m)`` distance block, i.e. O(n·m) working memory — fine
+when the shard fits, fatal when n exceeds device memory. With a ``chunk``
+parameter every op streams row-blocks of at most ``chunk`` points:
+
+  * reference path — a ``lax.scan`` over ``(chunk, d)`` tiles, so peak
+    working memory is O(chunk·(m + d) + m·d) regardless of n;
+  * Pallas path — ``chunk`` caps the row block size ``bn`` fed to the grid
+    (TPU grids already execute tiles sequentially, so the grid *is* the
+    stream; ``chunk`` bounds the per-step VMEM footprint).
+
+``chunk=None`` (default) preserves the legacy un-chunked behavior exactly.
+``memory_budget`` (bytes) derives a chunk from the working-set model
+``4·chunk·(m + d) + 4·m·d <= budget``. Results are independent of ``chunk``
+(parity-tested in tests/test_engine.py): elementwise minima are bitwise
+identical, and cross-chunk arg-reductions resolve ties to the first
+occurrence exactly like ``jnp.argmax``/``argmin``.
+
+jax version support: this module is pure jnp/lax/pallas and runs unchanged
+on jax 0.4.x and 0.6+ (the version-sensitive mesh/shard_map surface lives
+in ``repro.compat``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .assign import DEFAULT_BM as _A_BM
+from .assign import DEFAULT_BN as _A_BN
+from .assign import assign_nearest_blocks
+from .fused_argfar import DEFAULT_BN as _F_BN
+from .fused_argfar import fused_min_argmax_blocks
+from .pairwise import DEFAULT_BM as _P_BM
+from .pairwise import DEFAULT_BN as _P_BN
+from .pairwise import pairwise_dist2 as _pairwise_pallas
+
+_BIG = jnp.float32(3.4e38)
+
+
+# ---------------------------------------------------------------------------
+# impl / chunk resolution
+# ---------------------------------------------------------------------------
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(impl: str):
+    """-> (use_pallas, interpret)"""
+    if impl == "auto":
+        return (True, False) if _on_tpu() else (False, False)
+    if impl == "pallas":
+        return True, not _on_tpu()
+    if impl == "ref":
+        return False, False
+    raise ValueError(f"unknown impl {impl!r}")
+
+
+def resolve_chunk(n: int, m: int, d: int, *, chunk: int | None = None,
+                  memory_budget: int | None = None) -> int | None:
+    """Row-chunk size for an ``(n, d) × (m, d)`` distance op.
+
+    Explicit ``chunk`` wins (clipped to ``[1, n]``; ``chunk >= n`` means one
+    chunk, i.e. the un-chunked compute with chunked code path). Otherwise a
+    ``memory_budget`` in bytes is solved against the f32 working-set model
+    ``4·chunk·(m + d) + 4·m·d`` — the streamed tile plus resident centers.
+    Returns None when neither is given (legacy un-chunked path).
+    """
+    if chunk is not None:
+        if chunk < 1:
+            raise ValueError(f"chunk must be >= 1, got {chunk}")
+        return min(int(chunk), max(n, 1))
+    if memory_budget is not None:
+        avail = memory_budget - 4 * m * d
+        rows = avail // (4 * (m + d)) if avail > 0 else 0
+        if rows < 1:
+            raise ValueError(
+                f"memory_budget={memory_budget} cannot hold even one row "
+                f"(centers alone need {4 * m * d} bytes + {4 * (m + d)}/row)")
+        return min(int(rows), max(n, 1))
+    return None
+
+
+def _pad_rows(a: jnp.ndarray, mult: int, fill: float):
+    n = a.shape[0]
+    pad = (-n) % mult
+    if pad == 0:
+        return a, n
+    return jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1), constant_values=fill), n
+
+
+def _blocks(a: jnp.ndarray, chunk: int, fill: float):
+    """Pad rows to a chunk multiple and reshape to (nb, chunk, ...)."""
+    ap, n = _pad_rows(a, chunk, fill)
+    nb = ap.shape[0] // chunk
+    return ap.reshape((nb, chunk) + ap.shape[1:]), n
+
+
+def _pallas_bn(bn: int, n: int, chunk: int | None) -> int:
+    """Row block for the Pallas grid: ≤ bn, ≤ chunk (rounded up to the 8-row
+    sublane minimum), never below 8."""
+    bn_ = min(bn, max(8, n))
+    if chunk is not None:
+        bn_ = min(bn_, max(8, -(-chunk // 8) * 8))
+    return bn_
+
+
+# ---------------------------------------------------------------------------
+# ops
+# ---------------------------------------------------------------------------
+
+def dist2_to_center(x, c, *, impl: str = "auto", chunk: int | None = None,
+                    memory_budget: int | None = None):
+    """Squared distance of each row of x (n,d) to center c (d,)."""
+    # Single-center distance has an O(n·d) working set already — no (n,m)
+    # block exists to chunk away; the reference pass is optimal everywhere.
+    del impl, chunk, memory_budget
+    return ref.dist2_to_center(x, c)
+
+
+def pairwise_dist2(x, c, *, impl: str = "auto", chunk: int | None = None,
+                   memory_budget: int | None = None,
+                   bn: int = _P_BN, bm: int = _P_BM):
+    """(n,d),(m,d) -> (n,m) squared Euclidean distances.
+
+    Note the *output* is inherently O(n·m); chunking bounds the transient
+    working set (useful when the caller immediately reduces each row-block,
+    and on backends where the fused matmul intermediate is the peak).
+    """
+    n, m = x.shape[0], c.shape[0]
+    d = x.shape[1]
+    use_pallas, interpret = _resolve(impl)
+    chunk = resolve_chunk(n, m, d, chunk=chunk, memory_budget=memory_budget)
+    if use_pallas:
+        bn_ = _pallas_bn(bn, n, chunk)
+        bm_ = min(bm, max(8, m))
+        xp, n0 = _pad_rows(x, bn_, 0.0)
+        cp, m0 = _pad_rows(c, bm_, 0.0)
+        out = _pairwise_pallas(xp, cp, bn=bn_, bm=bm_, interpret=interpret)
+        return out[:n0, :m0]
+    if chunk is None or chunk >= n:
+        return ref.pairwise_dist2(x, c)
+    xb, n0 = _blocks(x, chunk, 0.0)
+
+    def step(_, xrow):
+        return None, ref.pairwise_dist2(xrow, c)
+
+    _, d2 = jax.lax.scan(step, None, xb)
+    return d2.reshape(-1, m)[:n0]
+
+
+def fused_min_argmax(x, c, min_d2, *, impl: str = "auto",
+                     chunk: int | None = None,
+                     memory_budget: int | None = None, bn: int = _F_BN):
+    """Fused Gonzalez step: (new_min_d2 (n,), far_val (), far_idx () i32)."""
+    n, d = x.shape
+    use_pallas, interpret = _resolve(impl)
+    chunk = resolve_chunk(n, 1, d, chunk=chunk, memory_budget=memory_budget)
+    if use_pallas:
+        bn_ = _pallas_bn(bn, n, chunk)
+        xp, _ = _pad_rows(x, bn_, 0.0)
+        # Padded rows get -inf min-dist so they never become the farthest
+        # point and their updated min stays -inf.
+        mdp, _ = _pad_rows(min_d2, bn_, -_BIG)
+        new_md, bmax, barg = fused_min_argmax_blocks(xp, c, mdp, bn=bn_,
+                                                     interpret=interpret)
+        blk = jnp.argmax(bmax[:, 0])
+        return new_md[:n], bmax[blk, 0], barg[blk, 0]
+    if chunk is None or chunk >= n:
+        return ref.fused_min_argmax(x, c, min_d2)
+    xb, n0 = _blocks(x, chunk, 0.0)
+    mdb, _ = _blocks(min_d2, chunk, -_BIG)
+    offs = jnp.arange(xb.shape[0], dtype=jnp.int32) * chunk
+
+    def step(carry, inp):
+        best_v, best_i = carry
+        xrow, mdrow, off = inp
+        new_md, v, i = ref.fused_min_argmax(xrow, c, mdrow)
+        # Strict > keeps the earliest block on ties — matches the global
+        # first-occurrence semantics of jnp.argmax.
+        take = v > best_v
+        carry = (jnp.where(take, v, best_v),
+                 jnp.where(take, i + off, best_i))
+        return carry, new_md
+
+    (far_v, far_i), new_md = jax.lax.scan(
+        step, (-_BIG, jnp.int32(0)), (xb, mdb, offs))
+    return new_md.reshape(-1)[:n0], far_v, far_i
+
+
+def assign_nearest(x, c, *, impl: str = "auto", chunk: int | None = None,
+                   memory_budget: int | None = None,
+                   bn: int = _A_BN, bm: int = _A_BM):
+    """Nearest-center assignment: (idx (n,) i32, d2 (n,)).
+
+    With ``chunk``/``memory_budget`` the (n, m) distance block never
+    materializes — each scan step reduces its (chunk, m) tile to a
+    (chunk,) min/argmin pair, so n is bounded by HBM for the *points*
+    only, not the distance matrix.
+    """
+    n, m = x.shape[0], c.shape[0]
+    d = x.shape[1]
+    use_pallas, interpret = _resolve(impl)
+    chunk = resolve_chunk(n, m, d, chunk=chunk, memory_budget=memory_budget)
+    if use_pallas:
+        bn_ = _pallas_bn(bn, n, chunk)
+        bm_ = min(bm, max(8, m))
+        xp, _ = _pad_rows(x, bn_, 0.0)
+        # Pad centers at +inf-ish distance: fill with a huge coordinate so
+        # padded centers are never nearest.
+        cp, _ = _pad_rows(c, bm_, 1e18)
+        idx, d2 = assign_nearest_blocks(xp, cp, bn=bn_, bm=bm_,
+                                        interpret=interpret)
+        return idx[:n, 0], d2[:n, 0]
+    if chunk is None or chunk >= n:
+        return ref.assign_nearest(x, c)
+    xb, n0 = _blocks(x, chunk, 0.0)
+
+    def step(_, xrow):
+        return None, ref.assign_nearest(xrow, c)
+
+    _, (idx, d2) = jax.lax.scan(step, None, xb)
+    return idx.reshape(-1)[:n0], d2.reshape(-1)[:n0]
+
+
+def argmin_dist2_over_rows(x, c, *, impl: str = "auto",
+                           chunk: int | None = None,
+                           memory_budget: int | None = None):
+    """For each center row of ``c (m,d)``: index of the nearest row of
+    ``x (n,d)`` — ``argmin_i |x_i - c_j|^2 -> (m,) i32``.
+
+    Semantically ``assign_nearest(c, x)[0]``, but chunked over the *x*
+    rows: the scan keeps an (m,)-sized running (min, argmin) carry, so the
+    working set is O(chunk·m) instead of the (m, n) block that formulation
+    materializes on the ref path. (The Pallas grid already tiles the n
+    axis, so that path delegates to the kernel unchanged.)
+    """
+    n, d = x.shape
+    m = c.shape[0]
+    use_pallas, _ = _resolve(impl)
+    chunk = resolve_chunk(n, m, d, chunk=chunk, memory_budget=memory_budget)
+    if use_pallas or chunk is None or chunk >= n:
+        idx, _ = assign_nearest(c, x, impl=impl)
+        return idx
+    # Pad rows at a far-away coordinate so padding can never be nearest
+    # (its distance is ~1e36·d, or +inf past f32 range — both lose).
+    xb, _ = _blocks(x, chunk, 1e18)
+    offs = jnp.arange(xb.shape[0], dtype=jnp.int32) * chunk
+
+    def step(carry, inp):
+        best_d, best_i = carry
+        xrow, off = inp
+        d2 = ref.pairwise_dist2(xrow, c)                     # (chunk, m)
+        loc_d = jnp.min(d2, axis=0)                          # (m,)
+        loc_i = jnp.argmin(d2, axis=0).astype(jnp.int32) + off
+        # Strict < keeps the earliest row on ties — matches the global
+        # first-occurrence semantics of jnp.argmin.
+        take = loc_d < best_d
+        return (jnp.where(take, loc_d, best_d),
+                jnp.where(take, loc_i, best_i)), None
+
+    init = (jnp.full((m,), _BIG), jnp.zeros((m,), jnp.int32))
+    (_, idx), _ = jax.lax.scan(step, init, (xb, offs))
+    return idx

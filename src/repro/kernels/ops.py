@@ -1,4 +1,11 @@
-"""Public jit'd wrappers over the k-center kernels.
+"""Public wrappers over the k-center distance engine (API façade).
+
+The execution logic — ``impl`` resolution, shape padding, and row-chunk
+streaming under a memory budget — lives in ``repro.kernels.engine``; this
+module re-exposes it under the stable historical names so existing callers
+(core algorithms, tests, benchmarks) are untouched. The names are direct
+aliases, so signatures, defaults, and docstrings have a single home in
+engine.py.
 
 ``impl`` resolution:
   * ``"auto"``   — Pallas on TPU, reference jnp elsewhere (CPU/GPU).
@@ -6,100 +13,28 @@
                    the path tests use to validate kernels on CPU).
   * ``"ref"``    — force the pure-jnp oracle.
 
-Wrappers own shape padding: kernels require block-divisible sizes, callers
-don't. Padding rows use +inf min-distances / points-at-infinity so they can
-never win an argmax/argmin.
+New in the chunked engine (all optional, default = legacy behavior):
+  * ``chunk``          — max rows of ``x`` processed per streamed step;
+  * ``memory_budget``  — bytes; the engine derives ``chunk`` from the
+                         working-set model ``4·chunk·(m+d) + 4·m·d``.
+
+The budget bounds *working* memory — the streamed tile plus resident
+centers. ``pairwise_dist2`` is the exception: its (n, m) *output* is
+inherently O(n·m) and is not covered by the model (chunking there bounds
+only the per-step transients); use ``assign_nearest`` /
+``fused_min_argmax`` / ``argmin_dist2_over_rows`` when the caller only
+needs a reduction of the distance block.
+
+See ``repro/kernels/engine.py`` for the memory model and the jax-version
+support notes.
 """
 from __future__ import annotations
 
-import functools
+from . import engine, ref  # noqa: F401  (ops.ref is public API)
 
-import jax
-import jax.numpy as jnp
-
-from . import ref
-from .assign import DEFAULT_BM as _A_BM
-from .assign import DEFAULT_BN as _A_BN
-from .assign import assign_nearest_blocks
-from .fused_argfar import DEFAULT_BN as _F_BN
-from .fused_argfar import fused_min_argmax_blocks
-from .pairwise import DEFAULT_BM as _P_BM
-from .pairwise import DEFAULT_BN as _P_BN
-from .pairwise import pairwise_dist2 as _pairwise_pallas
-
-_BIG = jnp.float32(3.4e38)
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
-def _resolve(impl: str):
-    """-> (use_pallas, interpret)"""
-    if impl == "auto":
-        return (True, False) if _on_tpu() else (False, False)
-    if impl == "pallas":
-        return True, not _on_tpu()
-    if impl == "ref":
-        return False, False
-    raise ValueError(f"unknown impl {impl!r}")
-
-
-def _pad_rows(a: jnp.ndarray, mult: int, fill: float):
-    n = a.shape[0]
-    pad = (-n) % mult
-    if pad == 0:
-        return a, n
-    return jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1), constant_values=fill), n
-
-
-def dist2_to_center(x, c, *, impl: str = "auto"):
-    """Squared distance of each row of x (n,d) to center c (d,)."""
-    # Single-center distance is a pure VPU pass; the fused kernel covers the
-    # perf-critical use. Reference path is already optimal here.
-    del impl
-    return ref.dist2_to_center(x, c)
-
-
-def pairwise_dist2(x, c, *, impl: str = "auto", bn: int = _P_BN, bm: int = _P_BM):
-    """(n,d),(m,d) -> (n,m) squared Euclidean distances."""
-    use_pallas, interpret = _resolve(impl)
-    if not use_pallas:
-        return ref.pairwise_dist2(x, c)
-    n, m = x.shape[0], c.shape[0]
-    bn_, bm_ = min(bn, max(8, n)), min(bm, max(8, m))
-    xp, n0 = _pad_rows(x, bn_, 0.0)
-    cp, m0 = _pad_rows(c, bm_, 0.0)
-    out = _pairwise_pallas(xp, cp, bn=bn_, bm=bm_, interpret=interpret)
-    return out[:n0, :m0]
-
-
-def fused_min_argmax(x, c, min_d2, *, impl: str = "auto", bn: int = _F_BN):
-    """Fused Gonzalez step: (new_min_d2 (n,), far_val (), far_idx () i32)."""
-    use_pallas, interpret = _resolve(impl)
-    if not use_pallas:
-        return ref.fused_min_argmax(x, c, min_d2)
-    n = x.shape[0]
-    bn_ = min(bn, max(8, n))
-    xp, _ = _pad_rows(x, bn_, 0.0)
-    # Padded rows get -inf min-dist so they never become the farthest point
-    # and their updated min stays -inf.
-    mdp, _ = _pad_rows(min_d2, bn_, -_BIG)
-    new_md, bmax, barg = fused_min_argmax_blocks(xp, c, mdp, bn=bn_, interpret=interpret)
-    blk = jnp.argmax(bmax[:, 0])
-    return new_md[:n], bmax[blk, 0], barg[blk, 0]
-
-
-def assign_nearest(x, c, *, impl: str = "auto", bn: int = _A_BN, bm: int = _A_BM):
-    """Nearest-center assignment: (idx (n,) i32, d2 (n,))."""
-    use_pallas, interpret = _resolve(impl)
-    if not use_pallas:
-        return ref.assign_nearest(x, c)
-    n, m = x.shape[0], c.shape[0]
-    bn_, bm_ = min(bn, max(8, n)), min(bm, max(8, m))
-    xp, _ = _pad_rows(x, bn_, 0.0)
-    # Pad centers at +inf-ish distance: fill with a huge coordinate so padded
-    # centers are never nearest.
-    cp, _ = _pad_rows(c, bm_, 1e18)
-    idx, d2 = assign_nearest_blocks(xp, cp, bn=bn_, bm=bm_, interpret=interpret)
-    return idx[:n, 0], d2[:n, 0]
+resolve_chunk = engine.resolve_chunk
+dist2_to_center = engine.dist2_to_center
+pairwise_dist2 = engine.pairwise_dist2
+fused_min_argmax = engine.fused_min_argmax
+assign_nearest = engine.assign_nearest
+argmin_dist2_over_rows = engine.argmin_dist2_over_rows

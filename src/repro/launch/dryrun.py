@@ -29,6 +29,7 @@ import traceback
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.configs import ARCH_IDS, SHAPES, live_cells, shape_applicable
 from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import input_specs, make_opt
@@ -270,8 +271,7 @@ def run_cell(arch: str, shape_name: str, mesh, mesh_name: str) -> dict:
     t_compile = time.time() - t0
 
     mem = _mem_dict(compiled.memory_analysis())
-    cost = compiled.cost_analysis() or {}
-    cost = {k: float(v) for k, v in cost.items()
+    cost = {k: float(v) for k, v in compat.cost_analysis(compiled).items()
             if isinstance(v, (int, float))}
     hlo = compiled.as_text()
     coll_bytes_dev, per_op = parse_collectives(hlo)

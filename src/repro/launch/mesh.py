@@ -2,13 +2,19 @@
 
 IMPORTANT: functions only — importing this module never touches jax device
 state (the dry-run sets XLA_FLAGS before any jax initialization).
+
+Version portability: mesh construction goes through ``repro.compat``
+(``jax.sharding.AxisType`` exists only on jax 0.6+; on 0.4.x every axis is
+implicitly auto — see the support matrix in ``repro/compat.py``).
 """
 from __future__ import annotations
 
 from typing import Optional, Sequence
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+from repro import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
@@ -29,7 +35,7 @@ def make_mesh(shape: Sequence[int], axes: Sequence[str]) -> Mesh:
     if len(devs) < n:
         raise ValueError(f"need {n} devices, have {len(devs)}")
     arr = np.asarray(devs[:n]).reshape(tuple(shape))
-    return Mesh(arr, tuple(axes), axis_types=(AxisType.Auto,) * len(axes))
+    return compat.make_mesh(arr, axes)
 
 
 def make_elastic_mesh(model_parallel: int = 16,
@@ -45,5 +51,4 @@ def make_elastic_mesh(model_parallel: int = 16,
     dp = n // mp
     import numpy as np
     arr = np.asarray(devices[: dp * mp]).reshape(dp, mp)
-    return Mesh(arr, ("data", "model"),
-                axis_types=(AxisType.Auto,) * 2)
+    return compat.make_mesh(arr, ("data", "model"))

@@ -16,6 +16,7 @@ from typing import Any, Dict, Optional
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.sharding import constrain
 
 from .config import ModelConfig
@@ -497,12 +498,12 @@ def apply_moe(params, x, cfg: ModelConfig, *, capacity_factor: float = 1.25):
     # pre-gathered weights instead left 43 GB/device of dp-replicated
     # expert grads on kimi-k2 — §Perf iteration 4).
     @functools.partial(
-        jax.shard_map, mesh=mesh,
+        compat.shard_map, mesh=mesh,
         in_specs=(P(dp_spec, None, None), P(None, None),
                   P(tp, dp_spec, None), P(tp, dp_spec, None),
                   P(tp, None, dp_spec)),
         out_specs=(P(dp_spec, None, None), P()),
-        check_vma=False,
+        check_replication=False,
     )
     def run(x_loc, router, wg, wu, wd):
         b, s, _ = x_loc.shape

@@ -22,6 +22,8 @@ import jax
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 _state = threading.local()
 
 DP_AXES = ("pod", "data")
@@ -39,7 +41,7 @@ def use_mesh(mesh: Optional[Mesh]):
     _state.mesh = mesh
     try:
         if mesh is not None:
-            with jax.set_mesh(mesh):
+            with compat.set_mesh(mesh):
                 yield mesh
         else:
             yield None

@@ -1,0 +1,152 @@
+"""Chunked-engine parity: streaming row-blocks must not change results.
+
+Contract (kernels/engine.py): for every op and every chunk size — including
+chunk = 1, chunk that doesn't divide n, and chunk > n — the chunked result
+equals the un-chunked reference. On the ref path elementwise outputs are
+bitwise-equal (identical per-row arithmetic, only the iteration structure
+changes); the Pallas path is validated to kernel tolerance.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import gonzalez
+from repro.core.mrg import mrg_sim
+from repro.kernels import engine, ops, ref
+
+CHUNKS = [1, 3, 8, 100, 512, 999, 1000, 4096]   # vs n=1000: tiny, odd,
+                                                # divisible, ==n, >n
+
+
+def _data(n=1000, m=13, d=7, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    c = jnp.asarray(rng.normal(size=(m, d)).astype(np.float32))
+    md = jnp.asarray(rng.uniform(0.5, 20, size=(n,)).astype(np.float32))
+    return x, c, md
+
+
+@pytest.mark.parametrize("chunk", CHUNKS)
+def test_assign_nearest_chunk_parity_ref(chunk):
+    x, c, _ = _data()
+    i0, d0 = ref.assign_nearest(x, c)
+    i1, d1 = ops.assign_nearest(x, c, impl="ref", chunk=chunk)
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+    np.testing.assert_array_equal(np.asarray(d0), np.asarray(d1))
+
+
+@pytest.mark.parametrize("chunk", CHUNKS)
+def test_fused_min_argmax_chunk_parity_ref(chunk):
+    x, c, md = _data(seed=1)
+    nm0, fv0, fi0 = ref.fused_min_argmax(x, c[0], md)
+    nm1, fv1, fi1 = ops.fused_min_argmax(x, c[0], md, impl="ref",
+                                         chunk=chunk)
+    np.testing.assert_array_equal(np.asarray(nm0), np.asarray(nm1))
+    assert int(fi0) == int(fi1)
+    assert float(fv0) == float(fv1)
+
+
+@pytest.mark.parametrize("chunk", CHUNKS)
+def test_pairwise_dist2_chunk_parity_ref(chunk):
+    x, c, _ = _data(seed=2)
+    p0 = ref.pairwise_dist2(x, c)
+    p1 = ops.pairwise_dist2(x, c, impl="ref", chunk=chunk)
+    np.testing.assert_array_equal(np.asarray(p0), np.asarray(p1))
+
+
+def test_fused_min_argmax_cross_chunk_tie_breaks_to_first():
+    # Two exactly-equal global maxima in different chunks: the chunked
+    # reduction must return the first index, like jnp.argmax.
+    x = jnp.zeros((8, 2), jnp.float32)
+    md = jnp.asarray([1.0, 5.0, 2.0, 3.0, 1.0, 5.0, 0.5, 0.5], jnp.float32)
+    c = jnp.asarray([100.0, 100.0], jnp.float32)  # far: min stays md
+    _, _, fi = ops.fused_min_argmax(x, c, md, impl="ref", chunk=2)
+    assert int(fi) == 1
+
+
+@pytest.mark.parametrize("chunk", [1, 7, 64, 2000])
+def test_assign_nearest_chunk_parity_pallas(chunk):
+    x, c, _ = _data(n=257, m=9, seed=3)
+    i0, d0 = ref.assign_nearest(x, c)
+    i1, d1 = ops.assign_nearest(x, c, impl="pallas", chunk=chunk, bn=64,
+                                bm=8)
+    np.testing.assert_allclose(np.asarray(d0), np.asarray(d1), rtol=1e-4,
+                               atol=1e-4)
+    # ties can legitimately differ; compare indices where nearest is unique
+    d2 = np.asarray(ref.pairwise_dist2(x, c))
+    part = np.partition(d2, 1, axis=1)
+    unique = part[:, 1] - part[:, 0] > 1e-5
+    assert (np.asarray(i0)[unique] == np.asarray(i1)[unique]).all()
+
+
+@pytest.mark.parametrize("chunk", CHUNKS)
+def test_argmin_dist2_over_rows_chunk_parity_ref(chunk):
+    x, c, _ = _data(seed=6)
+    i0, _ = ref.assign_nearest(c, x)   # unchunked oracle: (m,) over n rows
+    i1 = ops.argmin_dist2_over_rows(x, c, impl="ref", chunk=chunk)
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+
+
+def test_eim_chunk_invariant():
+    import jax
+    from repro.core import eim
+    x, _, _ = _data(n=2000, seed=7)
+    r0 = eim(x, 5, jax.random.PRNGKey(0), impl="ref")
+    r1 = eim(x, 5, jax.random.PRNGKey(0), impl="ref", chunk=123)
+    np.testing.assert_array_equal(np.asarray(r0.centers),
+                                  np.asarray(r1.centers))
+    assert float(r0.radius2) == float(r1.radius2)
+
+
+def test_coreset_chunk_invariant():
+    from repro.core import select_coreset
+    x, _, _ = _data(n=500, d=16, seed=8)
+    c0 = select_coreset(x, 8, impl="ref")
+    c1 = select_coreset(x, 8, impl="ref", chunk=77)
+    np.testing.assert_array_equal(np.asarray(c0.indices),
+                                  np.asarray(c1.indices))
+    np.testing.assert_array_equal(np.asarray(c0.weights),
+                                  np.asarray(c1.weights))
+
+
+def test_memory_budget_resolves_and_matches():
+    x, c, _ = _data()
+    n, d = x.shape
+    m = c.shape[0]
+    budget = 64 * 1024
+    chunk = engine.resolve_chunk(n, m, d, memory_budget=budget)
+    assert 1 <= chunk < n                       # budget actually forces
+    assert 4 * chunk * (m + d) + 4 * m * d <= budget  # streaming model holds
+    i0, d0 = ref.assign_nearest(x, c)
+    i1, d1 = ops.assign_nearest(x, c, impl="ref", memory_budget=budget)
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+    np.testing.assert_array_equal(np.asarray(d0), np.asarray(d1))
+
+
+def test_memory_budget_too_small_raises():
+    with pytest.raises(ValueError):
+        engine.resolve_chunk(1000, 1000, 128, memory_budget=1024)
+
+
+def test_chunk_invalid_raises():
+    with pytest.raises(ValueError):
+        engine.resolve_chunk(10, 3, 2, chunk=0)
+
+
+@pytest.mark.parametrize("chunk", [1, 37, 999, 1000, 4096])
+def test_gonzalez_radius_invariant_under_chunk(chunk):
+    x, _, _ = _data(seed=4)
+    g0 = gonzalez(x, 8, impl="ref")
+    g1 = gonzalez(x, 8, impl="ref", chunk=chunk)
+    np.testing.assert_array_equal(np.asarray(g0.indices),
+                                  np.asarray(g1.indices))
+    assert float(g0.radius2) == float(g1.radius2)
+
+
+def test_mrg_sim_chunk_invariant():
+    x, _, _ = _data(seed=5)
+    r0 = mrg_sim(x, 6, m=10, impl="ref")
+    r1 = mrg_sim(x, 6, m=10, impl="ref", chunk=33)
+    np.testing.assert_array_equal(np.asarray(r0.centers),
+                                  np.asarray(r1.centers))
+    assert float(r0.radius2) == float(r1.radius2)

@@ -4,14 +4,21 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import HealthCheck, given, settings
-from hypothesis import strategies as st
+
+# Only the last test is property-based; the serving/streaming tests must
+# keep running when hypothesis is absent, so the import is guarded per-test
+# rather than skipping the whole module.
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+    HAS_HYPOTHESIS = True
+    SET = settings(max_examples=10, deadline=None,
+                   suppress_health_check=[HealthCheck.too_slow])
+except ImportError:
+    HAS_HYPOTHESIS = False
 
 from repro.configs import get_config
 from repro.models import init_params
-
-SET = settings(max_examples=10, deadline=None,
-               suppress_health_check=[HealthCheck.too_slow])
 
 
 # ---------------------------------------------------------------------------
@@ -120,19 +127,24 @@ def test_streaming_guarantee_vs_gon():
     assert rad <= 8.0 * g + 1e-5  # 8-approx vs (>=OPT) baseline
 
 
-@given(n=st.integers(20, 200), k=st.integers(2, 6),
-       seed=st.integers(0, 5))
-@SET
-def test_streaming_center_separation_invariant(n, k, seed):
-    from repro.core import stream_init, stream_result, stream_update
-    rng = np.random.default_rng(seed)
-    pts = rng.normal(size=(n, 3)).astype(np.float32)
-    st = stream_init(k, 3)
-    st = stream_update(st, pts)
-    centers, r = stream_result(st)
-    assert centers.shape[0] <= k or r == 0.0
-    if centers.shape[0] > 1 and r > 0:
-        d2 = ((centers[:, None] - centers[None]) ** 2).sum(-1)
-        np.fill_diagonal(d2, np.inf)
-        # doubling invariant: pairwise separation > 4r
-        assert np.sqrt(d2.min()) > 4.0 * r - 1e-4
+if HAS_HYPOTHESIS:
+    @given(n=st.integers(20, 200), k=st.integers(2, 6),
+           seed=st.integers(0, 5))
+    @SET
+    def test_streaming_center_separation_invariant(n, k, seed):
+        from repro.core import (stream_init, stream_result, stream_update)
+        rng = np.random.default_rng(seed)
+        pts = rng.normal(size=(n, 3)).astype(np.float32)
+        st = stream_init(k, 3)
+        st = stream_update(st, pts)
+        centers, r = stream_result(st)
+        assert centers.shape[0] <= k or r == 0.0
+        if centers.shape[0] > 1 and r > 0:
+            d2 = ((centers[:, None] - centers[None]) ** 2).sum(-1)
+            np.fill_diagonal(d2, np.inf)
+            # doubling invariant: pairwise separation > 4r
+            assert np.sqrt(d2.min()) > 4.0 * r - 1e-4
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_streaming_center_separation_invariant():
+        pass

@@ -42,11 +42,20 @@ def test_coreset_curation_integration():
 
 def test_short_training_run_descends_and_checkpoints(tmp_path):
     from repro.launch.train import train_loop
+    from repro.models import init_params
+    from repro.train.metrics import make_eval_fn
     cfg = get_config("granite_3_2b", smoke=True)
+    # Descent is asserted on a *fixed* held-out eval set: per-step train
+    # losses come from different batches whose intrinsic difficulty varies
+    # by more than 12 steps of learning moves the loss, so comparing
+    # hist[-1] to hist[0] measures batch luck, not learning.
+    eval_fn = make_eval_fn(cfg, batch_size=4, seq_len=32, seed=0)
+    base = eval_fn(init_params(jax.random.PRNGKey(0), cfg))["eval_loss"]
     state, hist = train_loop(cfg, steps=12, batch_size=4, seq_len=32,
                              ckpt_dir=str(tmp_path), ckpt_every=6,
                              log_every=100)
-    assert hist[-1]["loss"] < hist[0]["loss"]
+    assert eval_fn(state["params"])["eval_loss"] < base
+    assert len(hist) == 12
     from repro.checkpoint import latest_step
     assert latest_step(str(tmp_path)) == 12
 
