@@ -2,7 +2,9 @@
 
 One section per paper table/figure + the kernel microbench + the roofline
 table (the latter reads the dry-run artifacts if present). Prints
-``name,us_per_call,derived`` CSV as required.
+``name,us_per_call,derived`` CSV as required; ``--json PATH`` additionally
+writes the same rows as a JSON list (the ``BENCH_kcenter.json`` perf
+trajectory — CI uploads it as a per-PR artifact).
 
 Default is quick mode (paper sizes / 10, fewer repeats) so the suite
 finishes on one CPU core; ``--full`` restores paper-scale sizes, ``--deep``
@@ -11,6 +13,7 @@ adds the full k×φ grids.
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -19,6 +22,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-scale n")
     ap.add_argument("--deep", action="store_true", help="full k/φ grids")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the rows as a JSON list (the "
+                         "BENCH_kcenter.json trajectory artifact)")
     ap.add_argument("--only", default=None,
                     help="comma list: tables,runtime,phi,perfcell,kernels,"
                          "chunked,roofline")
@@ -28,6 +34,13 @@ def main() -> None:
     def want(name):
         return only is None or name in only
 
+    rows: list[dict] = []
+
+    def emit(name: str, us: float, derived: str) -> None:
+        rows.append({"name": name, "us_per_call": float(us),
+                     "derived": derived})
+        print(f"{name},{us:.0f},{derived}", flush=True)
+
     print("name,us_per_call,derived")
     t_start = time.time()
 
@@ -35,7 +48,7 @@ def main() -> None:
         from . import paper_tables
         for name, n, k, algo, v in paper_tables.run(full=args.full,
                                                     quick=not args.deep):
-            print(f"{name}_n{n}_k{k}_{algo},0,value={v:.4g}", flush=True)
+            emit(f"{name}_n{n}_k{k}_{algo}", 0, f"value={v:.4g}")
 
     if want("runtime"):
         from . import runtime_scaling
@@ -43,16 +56,15 @@ def main() -> None:
         kg = (2, 10, 25, 100) if not args.deep else (2, 5, 10, 25, 50, 100)
         for k, algo, t, v in runtime_scaling.fig_runtime_over_k(
                 n=n, k_grid=kg):
-            print(f"fig2_runtime_k{k}_{algo},{t*1e6:.0f},value={v:.4g}",
-                  flush=True)
+            emit(f"fig2_runtime_k{k}_{algo}", t * 1e6, f"value={v:.4g}")
         ngrid = ((10_000, 100_000, 1_000_000) if args.full
                  else (5_000, 20_000, 50_000))
         for n_, algo, t in runtime_scaling.fig_runtime_over_n(
                 k=25, n_grid=ngrid):
-            print(f"fig4_runtime_n{n_}_{algo},{t*1e6:.0f},", flush=True)
+            emit(f"fig4_runtime_n{n_}_{algo}", t * 1e6, "")
         asym = runtime_scaling.table1_asymptotics()
         for k_, v_ in asym.items():
-            print(f"table1_{k_},0,exponent={v_:.3f}", flush=True)
+            emit(f"table1_{k_}", 0, f"exponent={v_:.3f}")
 
     if want("phi"):
         from . import phi_sweep
@@ -63,8 +75,8 @@ def main() -> None:
         for k, phi, v, t, it in phi_sweep.run(n=n, k_grid=kg,
                                               graphs=1 if not args.deep else 3,
                                               runs=1 if not args.deep else 2):
-            print(f"table6_7_phi{phi:g}_k{k},{t*1e6:.0f},"
-                  f"value={v:.4g};iters={it:.1f}", flush=True)
+            emit(f"table6_7_phi{phi:g}_k{k}", t * 1e6,
+                 f"value={v:.4g};iters={it:.1f}")
 
     if want("perfcell"):
         # §Perf cell C: paper-faithful EIM vs the beyond-paper R-compaction
@@ -75,20 +87,19 @@ def main() -> None:
         pts = gau(n, 25, seed=0)
         t1, v1, i1 = time_eim(pts, 25, eps=0.05)
         t2, v2, i2 = time_eim_compact(pts, 25, eps=0.05)
-        print(f"perfC_eim_baseline_n{n},{t1*1e6:.0f},"
-              f"value={v1:.4g};iters={i1}", flush=True)
-        print(f"perfC_eim_compact_n{n},{t2*1e6:.0f},"
-              f"value={v2:.4g};iters={i2};speedup={t1/t2:.2f}x", flush=True)
+        emit(f"perfC_eim_baseline_n{n}", t1 * 1e6, f"value={v1:.4g};iters={i1}")
+        emit(f"perfC_eim_compact_n{n}", t2 * 1e6,
+             f"value={v2:.4g};iters={i2};speedup={t1/t2:.2f}x")
 
     if want("kernels"):
         from . import kernel_bench
         for name, us, derived in kernel_bench.run():
-            print(f"{name},{us:.0f},{derived}", flush=True)
+            emit(name, us, derived)
 
     if want("chunked"):
         from . import chunked_scaling
         for name, us, derived in chunked_scaling.run(full=args.full):
-            print(f"{name},{us:.0f},{derived}", flush=True)
+            emit(name, us, derived)
 
     if want("roofline"):
         import os
@@ -97,18 +108,22 @@ def main() -> None:
         d = "experiments/dryrun_final" \
             if os.path.isdir("experiments/dryrun_final") \
             else "experiments/dryrun"
-        rows = roofline.full_table(d)
-        for r in rows:
-            print(f"roofline_{r['mesh']}_{r['arch']}_{r['shape']},0,"
-                  f"dom={r['dominant'][:-2]};mfu={r['roofline_fraction_mfu']:.3f};"
-                  f"comp={r['compute_s']:.3e};mem={r['memory_s']:.3e};"
-                  f"coll={r['collective_s']:.3e}", flush=True)
-        if not rows:
-            print("roofline_missing,0,run repro.launch.dryrun first",
-                  flush=True)
+        rows_r = roofline.full_table(d)
+        for r in rows_r:
+            emit(f"roofline_{r['mesh']}_{r['arch']}_{r['shape']}", 0,
+                 f"dom={r['dominant'][:-2]};mfu={r['roofline_fraction_mfu']:.3f};"
+                 f"comp={r['compute_s']:.3e};mem={r['memory_s']:.3e};"
+                 f"coll={r['collective_s']:.3e}")
+        if not rows_r:
+            emit("roofline_missing", 0, "run repro.launch.dryrun first")
 
-    print(f"total_wall,{(time.time()-t_start)*1e6:.0f},seconds="
-          f"{time.time()-t_start:.1f}")
+    emit("total_wall", (time.time() - t_start) * 1e6,
+         f"seconds={time.time() - t_start:.1f}")
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=1)
+        print(f"wrote {len(rows)} rows to {args.json}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -1,16 +1,26 @@
 """The paper's contribution: parallel k-center clustering in JAX.
 
-  gonzalez.py — GON, the sequential greedy 2-approximation (vectorized)
-  mrg.py      — MRG, multi-round MapReduce Gonzalez (sim + shard_map forms)
+  gonzalez.py — GON, the sequential greedy 2-approximation (vectorized;
+                also the out-of-core streamed form over a PointSource)
+  executor.py — the paper's "machines": Sim (vmap) / Mesh (shard_map) /
+                HostStream (out-of-core super-shards) executors
+  mrg.py      — MRG, multi-round MapReduce Gonzalez — one algorithm over
+                any executor (mrg_sim / mrg_distributed kept as wrappers)
   eim.py      — EIM, φ-parameterized iterative sampling (Ene et al. fixed)
   metrics.py  — covering radius, assignment, brute-force OPT (tests)
   coreset.py  — k-center coreset selection (framework data-curation hook)
 """
 from .coreset import Coreset, embed_batches, select_coreset  # noqa: F401
 from .eim import EIMResult, EIMSample, eim, eim_sample  # noqa: F401
+from .executor import (  # noqa: F401
+    Executor,
+    HostStreamExecutor,
+    MeshExecutor,
+    SimExecutor,
+)
 from .gonzalez import GonzalezResult, covering_radius, gonzalez  # noqa: F401
 from .metrics import assignment, brute_force_opt, covering_radius2  # noqa: F401
-from .mrg import MRGResult, mrg_distributed, mrg_sim, plan_rounds  # noqa: F401
+from .mrg import MRGResult, mrg, mrg_distributed, mrg_sim, plan_rounds  # noqa: F401
 from .streaming import (  # noqa: F401
     StreamState,
     stream_init,

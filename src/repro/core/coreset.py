@@ -15,10 +15,12 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh
 
+from repro.data.source import ArraySource, is_source
 from repro.kernels import ops
 
+from .executor import Executor
 from .gonzalez import gonzalez
-from .mrg import mrg_distributed, mrg_sim
+from .mrg import mrg, mrg_distributed, mrg_sim
 
 
 class Coreset(NamedTuple):
@@ -29,36 +31,76 @@ class Coreset(NamedTuple):
 
 
 def select_coreset(
-    embeddings: jnp.ndarray,
+    embeddings,
     k: int,
     *,
     mesh: Mesh | None = None,
     shard_axes: Sequence[str] = ("data",),
+    executor: Executor | None = None,
     impl: str = "auto",
     chunk: int | None = None,
+    block_rows: int | None = None,
+    memory_budget: int | None = None,
 ) -> Coreset:
     """Pick k maximally-diverse examples from ``embeddings (n,d)``.
 
     With a mesh, runs the paper's MRG across ``shard_axes`` (2 rounds,
-    4-approx); without, runs plain GON (2-approx) on one device.
-    ``chunk`` streams every O(n·k) distance pass in row-blocks
-    (kernels/engine.py) so the embedding cloud can exceed the size an
-    un-chunked (n, k) block would allow.
+    4-approx); with an ``executor``, runs MRG on that substrate (e.g.
+    ``HostStreamExecutor`` for out-of-core embedding clouds); without
+    either, runs plain GON (2-approx) — streamed if ``embeddings`` is a
+    host/disk/generator ``PointSource``, so the embedding cloud is bounded
+    by host RAM, not HBM. ``chunk`` streams every O(n·k) distance pass in
+    row-blocks (kernels/engine.py) within a block.
     """
-    emb = embeddings.astype(jnp.float32)
-    if mesh is not None:
-        centers, r2 = mrg_distributed(emb, k, mesh, shard_axes=shard_axes,
-                                      impl=impl, chunk=chunk)
+    if is_source(embeddings):
+        src = embeddings
+        streamed = not isinstance(src, ArraySource)
     else:
-        res = gonzalez(emb, k, impl=impl, chunk=chunk)
+        # Raw arrays (numpy included) keep the legacy device path — only an
+        # explicit PointSource opts into streaming.
+        src = ArraySource(embeddings)
+        streamed = False
+    if block_rows is None and memory_budget is None and executor is not None:
+        # Inherit the executor's residency budget so the reverse passes
+        # honor the same out-of-core contract as the MRG rounds.
+        block_rows = getattr(executor, "block_rows", None)
+        memory_budget = getattr(executor, "memory_budget", None)
+    if mesh is not None:
+        centers, r2 = mrg_distributed(src.materialize(), k, mesh,
+                                      shard_axes=shard_axes,
+                                      impl=impl, chunk=chunk)
+    elif executor is not None:
+        res = mrg(src, k, executor=executor, impl=impl, chunk=chunk)
+        centers, r2 = res.centers, res.radius2
+    else:
+        res = gonzalez(src, k, impl=impl, chunk=chunk, block_rows=block_rows,
+                       memory_budget=memory_budget)
         centers, r2 = res.centers, res.radius2
     # Map centers back to concrete example indices + cluster sizes. The
     # reverse pass (nearest example per center) is chunked over the n
     # axis too — assign_nearest(centers, emb) would rebuild a (k, n)
     # block on the ref path.
-    assign_idx, _ = ops.assign_nearest(emb, centers, impl=impl, chunk=chunk)
-    weights = jnp.zeros((k,), jnp.float32).at[assign_idx].add(1.0)
-    cidx = ops.argmin_dist2_over_rows(emb, centers, impl=impl, chunk=chunk)
+    if streamed:
+        # Fold both reverse passes over the source — block-bounded device
+        # residency; counts and indices match the in-memory pass exactly
+        # (first-occurrence ties, order-exact integer adds).
+        weights = jnp.zeros((k,), jnp.float32)
+        for idx, _ in ops.assign_nearest_source(src, centers, impl=impl,
+                                                chunk=chunk,
+                                                block_rows=block_rows,
+                                                memory_budget=memory_budget):
+            weights = weights.at[idx].add(1.0)
+        cidx = ops.argmin_dist2_over_source(src, centers, impl=impl,
+                                            chunk=chunk,
+                                            block_rows=block_rows,
+                                            memory_budget=memory_budget)
+    else:
+        emb = src.materialize()
+        assign_idx, _ = ops.assign_nearest(emb, centers, impl=impl,
+                                           chunk=chunk)
+        weights = jnp.zeros((k,), jnp.float32).at[assign_idx].add(1.0)
+        cidx = ops.argmin_dist2_over_rows(emb, centers, impl=impl,
+                                          chunk=chunk)
     return Coreset(cidx, centers, weights, r2)
 
 

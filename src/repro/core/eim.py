@@ -39,6 +39,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.data.source import as_device_array
 from repro.kernels import ops
 
 from .gonzalez import covering_radius, gonzalez
@@ -71,11 +72,8 @@ def _expected_caps(n: int, k: int, eps: float, slack: float = 3.0):
     return s_cap, h_cap
 
 
-@functools.partial(
-    jax.jit, static_argnames=("k", "eps", "phi", "max_iters", "impl", "chunk")
-)
 def eim_sample(
-    points: jnp.ndarray,
+    points,
     k: int,
     key: jax.Array,
     *,
@@ -87,12 +85,36 @@ def eim_sample(
 ) -> EIMSample:
     """Algorithm 2 (EIM-MapReduce-Sample) with the φ-parameterized Select.
 
+    ``points`` may be a ``PointSource``; it is materialized on device —
+    EIM's shrinking relations are masks over a fixed (n,d) array, so the
+    algorithm fundamentally needs random access (out-of-core callers
+    should reach for ``mrg`` with a ``HostStreamExecutor`` instead).
+
     ``chunk`` streams the per-iteration (n, s_cap) distance update in
     row-blocks (kernels/engine.py memory model) — the sample distribution
     is unchanged: the PRNG stream is identical and, for inputs whose
     coordinates are far below the 1e18 invalid-slot sentinel, so is every
     distance the loop compares.
     """
+    return _eim_sample_device(as_device_array(points), k, key, eps=eps,
+                              phi=phi, max_iters=max_iters, impl=impl,
+                              chunk=chunk)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "eps", "phi", "max_iters", "impl", "chunk")
+)
+def _eim_sample_device(
+    points: jnp.ndarray,
+    k: int,
+    key: jax.Array,
+    *,
+    eps: float = 0.1,
+    phi: float = 8.0,
+    max_iters: int = 64,
+    impl: str = "auto",
+    chunk: int | None = None,
+) -> EIMSample:
     n, d = points.shape
     points = points.astype(jnp.float32)
     ln_n = math.log(max(n, 2))
@@ -162,7 +184,7 @@ def eim_sample(
 
 
 def eim(
-    points: jnp.ndarray,
+    points,
     k: int,
     key: jax.Array,
     *,
@@ -175,11 +197,13 @@ def eim(
 ) -> EIMResult:
     """Full EIM: sample, then run GON on the sample (final MapReduce round).
 
-    With ``compact=True`` the sample is gathered into a dense buffer of
-    static size (the paper's |C| <= (4/ε)k·n^ε·log n + |S| bound) before
-    the final GON — this is the "send S ∪ R to one machine" round; the
-    final GON then costs O(k·|C|) instead of O(k·n).
+    ``points`` may be a ``PointSource`` (materialized on device — see
+    ``eim_sample``). With ``compact=True`` the sample is gathered into a
+    dense buffer of static size (the paper's |C| <= (4/ε)k·n^ε·log n + |S|
+    bound) before the final GON — this is the "send S ∪ R to one machine"
+    round; the final GON then costs O(k·|C|) instead of O(k·n).
     """
+    points = as_device_array(points)
     n, d = points.shape
     sample = eim_sample(points, k, key, eps=eps, phi=phi,
                         max_iters=max_iters, impl=impl, chunk=chunk)

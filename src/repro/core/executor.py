@@ -1,0 +1,305 @@
+"""Executors — the paper's "machines", unified behind one interface.
+
+The MapReduce model of the paper (§3) is: the input lives partitioned on
+``m`` machines of capacity ``c``; a round runs GON on every partition and a
+reducer combines the per-machine center sets (Lemma 2 for 2 rounds, Lemma 3
+for the multi-round generalization). Historically this repo hard-coded
+three different machine notions — vmapped blocks in ``mrg_sim``, mesh
+shards in ``mrg_distributed``, and device-resident arrays everywhere. An
+``Executor`` owns that choice, so ``repro.core.mrg.mrg`` is one algorithm
+over any substrate:
+
+=================== ======================= ===================== ==========
+executor            machines                capacity knob         input
+=================== ======================= ===================== ==========
+SimExecutor         m vmapped blocks        ``capacity`` (rows)   device
+MeshExecutor        mesh shards             shard size / axes     device
+HostStreamExecutor  sequential super-shards ``memory_budget`` /   host RAM /
+                    DMA'd from the source   ``block_rows``        disk
+=================== ======================= ===================== ==========
+
+Interface (paper correspondence in brackets):
+
+  * ``run_blocks(fn, source)`` — round 1 [map]: apply the per-machine
+    reducer ``fn(points (rows, d), mask (rows,) bool) -> (k, d)`` to every
+    machine-block of the source; returns the center union ``(M·k, d)``
+    plus a validity mask.
+  * ``combine(centers, valid, k, capacity)`` — rounds 2+ [reduce /
+    "send all points in S to a single reducer"]: while the union exceeds
+    ``capacity``, re-block and reduce again (Lemma 3, +2 to the
+    approximation factor per extra level), then run the final
+    single-machine GON. Runs device-side — the union is k·M rows, tiny
+    next to n.
+  * ``radius2(source, centers)`` — the covering-radius fold over the
+    *original* source (streamed; only one block device-resident).
+  * ``mrg(source, k)`` — the orchestration of the three. ``MeshExecutor``
+    overrides it wholesale: its rounds are one fused ``shard_map`` program
+    (all_gather instead of a host-side reduce; every device recomputes the
+    tiny final instance instead of idling).
+
+``HostStreamExecutor`` is the out-of-core form: round 1 is a sequential
+fold over super-shards DMA'd from a ``HostSource``/``MemmapSource`` (double
+buffered, see data/source.py), so ``mrg`` completes at n bounded by host
+RAM or disk — the ROADMAP's "out-of-core input" step. Its ``memory_budget``
+is the paper's machine capacity ``c`` in bytes.
+
+jax version note: the mesh path is built on ``repro.compat.shard_map`` and
+runs unchanged on jax 0.4.x and 0.6+.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
+from repro.data.source import as_source
+from repro.kernels import engine, ops
+
+from .gonzalez import covering_radius, gonzalez
+
+BlockFn = Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]
+
+
+@functools.lru_cache(maxsize=None)
+def gon_block_fn(k: int, impl: str = "auto",
+                 chunk: int | None = None) -> BlockFn:
+    """The per-machine reducer: GON restricted to a (masked) block.
+
+    Cached on ``(k, impl, chunk)`` so repeated ``mrg`` calls reuse one
+    function object — and therefore one jit cache entry per block shape.
+    """
+    def fn(points: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+        return gonzalez(points, k, mask=mask, impl=impl, chunk=chunk).centers
+    return fn
+
+
+@functools.lru_cache(maxsize=None)
+def _vmapped(fn: BlockFn):
+    return jax.jit(jax.vmap(fn))
+
+
+def _block(points: jnp.ndarray, m: int):
+    """Pad & reshape (n,d) -> (m, ceil(n/m), d) plus validity mask."""
+    n, d = points.shape
+    per = -(-n // m)
+    pad = per * m - n
+    pts = jnp.pad(points, ((0, pad), (0, 0)))
+    mask = jnp.arange(per * m) < n
+    return pts.reshape(m, per, d), mask.reshape(m, per)
+
+
+def _run_round(points_blocked: jnp.ndarray, mask_blocked: jnp.ndarray,
+               fn: BlockFn):
+    """vmapped ``fn`` over m blocks -> (m*k, d) center union + validity."""
+    centers = _vmapped(fn)(points_blocked, mask_blocked)   # (m, k, d)
+    m, k = centers.shape[0], centers.shape[1]
+    centers = centers.reshape(m * k, -1)
+    # a block with zero valid points still emits k (zero) rows; mark validity
+    any_valid = jnp.any(mask_blocked, axis=1)              # (m,)
+    valid = jnp.repeat(any_valid, k)                       # (m*k,)
+    return centers, valid
+
+
+def _mrg_round(points_blocked: jnp.ndarray, mask_blocked: jnp.ndarray,
+               k: int, m: int, impl: str, chunk: int | None = None):
+    """PR-1-compatible round entry (benchmarks/runtime_scaling.py times it)."""
+    del m  # implied by the blocking
+    return _run_round(points_blocked, mask_blocked, gon_block_fn(k, impl, chunk))
+
+
+class Executor:
+    """Base: block-mapped round 1 + shared Lemma-3 reduction."""
+
+    def run_blocks(self, fn: BlockFn, source):
+        """Round 1: map ``fn`` over the source's machine-blocks.
+
+        Returns ``(centers (M·k, d), valid (M·k,) bool)``.
+        """
+        raise NotImplementedError
+
+    def default_capacity(self, source, k: int) -> int:
+        """The paper's machine capacity ``c`` implied by this executor's
+        blocking (rows per machine, floored at 2k — §3.3 requires 2k < c
+        for the round recurrence to converge)."""
+        return 2 * k
+
+    def combine(self, centers: jnp.ndarray, valid: jnp.ndarray, k: int,
+                capacity: int, *, impl: str = "auto",
+                chunk: int | None = None):
+        """Rounds 2+: reduce the center union to k centers.
+
+        While the union exceeds ``capacity``, re-block and run another
+        vmapped GON level (paper §3.3 — each extra level adds +2 to the
+        approximation factor), then the final single-machine GON.
+        Returns ``(centers (k, d), extra_rounds)``.
+        """
+        extra = 0
+        while centers.shape[0] > capacity and centers.shape[0] > k:
+            m2 = -(-centers.shape[0] // capacity)  # >= 2 since rows > capacity
+            blocked, bmask = _block(centers, m2)
+            vpad = jnp.pad(valid, (0, bmask.size - valid.shape[0]),
+                           constant_values=False)
+            bmask = bmask & vpad.reshape(bmask.shape)
+            centers, valid = _mrg_round(blocked, bmask, k, m2, impl, chunk)
+            extra += 1
+        final = gonzalez(centers, k, mask=valid, impl=impl, chunk=chunk)
+        return final.centers, extra
+
+    def radius2(self, source, centers: jnp.ndarray, *, impl: str = "auto",
+                chunk: int | None = None) -> jnp.ndarray:
+        """Squared covering radius over ALL source points (streamed)."""
+        r = jnp.sqrt(engine.fold_min_d2(source, centers, impl=impl,
+                                        chunk=chunk))
+        return r * r
+
+    def mrg(self, source, k: int, *, capacity: int | None = None,
+            impl: str = "auto", chunk: int | None = None):
+        """Full MRG on this executor. Returns ``(centers, radius2, rounds)``."""
+        source = as_source(source)
+        if capacity is None:
+            capacity = self.default_capacity(source, k)
+        fn = gon_block_fn(k, impl, chunk)
+        centers, valid = self.run_blocks(fn, source)
+        centers, extra = self.combine(centers, valid, k, capacity,
+                                      impl=impl, chunk=chunk)
+        r2 = self.radius2(source, centers, impl=impl, chunk=chunk)
+        return centers, r2, 2 + extra
+
+
+class SimExecutor(Executor):
+    """The paper's experimental setup (§7.1): ``m`` simulated machines on
+    one device — the source is materialized and blocked into m shards, and
+    GON runs on every shard via ``vmap``."""
+
+    def __init__(self, m: int = 50):
+        if m < 1:
+            raise ValueError(f"need at least one machine, got m={m}")
+        self.m = m
+
+    def run_blocks(self, fn: BlockFn, source):
+        x = as_source(source).materialize()
+        blocked, mask = _block(x, self.m)
+        return _run_round(blocked, mask, fn)
+
+    def default_capacity(self, source, k: int) -> int:
+        return max(-(-source.n // self.m), 2 * k)
+
+    def radius2(self, source, centers, *, impl="auto", chunk=None):
+        # Device-resident input: the legacy single-pass radius (identical
+        # values; avoids re-blocking an array that is already in HBM).
+        r = covering_radius(source.materialize(), centers, impl=impl,
+                            chunk=chunk)
+        return r * r
+
+
+class HostStreamExecutor(Executor):
+    """Out-of-core machines: sequential super-shards DMA'd from the source.
+
+    Round 1 is a host-driven fold — each super-shard is uploaded (double
+    buffered), reduced to k centers by GON, and discarded; at most two
+    shards (the consumed one plus the prefetched one) and the accumulated
+    union are device-resident. ``memory_budget`` (bytes) bounds both shards
+    via the engine's ``2·4·rows·(d+1)`` model — the paper's machine
+    capacity ``c``; ``block_rows`` sets the shard size directly.
+    """
+
+    def __init__(self, block_rows: int | None = None,
+                 memory_budget: int | None = None):
+        self.block_rows = block_rows
+        self.memory_budget = memory_budget
+
+    def rows_for(self, source) -> int:
+        return engine.resolve_block_rows(source.n, source.d,
+                                         block_rows=self.block_rows,
+                                         memory_budget=self.memory_budget)
+
+    def run_blocks(self, fn: BlockFn, source):
+        rows = self.rows_for(source)
+        outs = []
+        for blk in source.blocks(rows):
+            mask = jnp.ones((blk.shape[0],), bool)
+            outs.append(fn(blk, mask))                     # (k, d) each
+        centers = jnp.concatenate(outs, axis=0)            # (M*k, d)
+        valid = jnp.ones((centers.shape[0],), bool)
+        return centers, valid
+
+    def default_capacity(self, source, k: int) -> int:
+        return max(self.rows_for(source), 2 * k)
+
+    def radius2(self, source, centers, *, impl="auto", chunk=None):
+        r = jnp.sqrt(engine.fold_min_d2(source, centers, impl=impl,
+                                        chunk=chunk,
+                                        block_rows=self.rows_for(source)))
+        return r * r
+
+
+class MeshExecutor(Executor):
+    """The production TPU form: machines are mesh shards.
+
+    Overrides ``mrg`` wholesale — round 1 (per-shard GON), round 2+
+    (all_gather of center sets + replicated GON; with ``hierarchical``,
+    axis-by-axis gathers with an intermediate GON per level, exactly
+    Lemma 3 with ICI-domain capacities) and the radius reduction are one
+    fused ``shard_map`` program, so no host round-trips and no separate
+    result-broadcast round.
+    """
+
+    def __init__(self, mesh: Mesh, shard_axes: Sequence[str] = ("data",),
+                 hierarchical: bool = False):
+        self.mesh = mesh
+        self.shard_axes = tuple(shard_axes)
+        self.hierarchical = hierarchical
+
+    def run_blocks(self, fn: BlockFn, source):
+        raise NotImplementedError(
+            "MeshExecutor's rounds are one fused shard_map program; "
+            "use .mrg() directly")
+
+    def mrg(self, source, k: int, *, capacity: int | None = None,
+            impl: str = "auto", chunk: int | None = None):
+        if capacity is not None:
+            raise ValueError(
+                "MeshExecutor's machine capacity is fixed by the mesh "
+                "blocking (shard size / gather tree); capacity= is not "
+                "supported — use shard_axes/hierarchical instead")
+        axes = self.shard_axes
+        hierarchical = self.hierarchical
+        pspec = P(axes if len(axes) > 1 else axes[0])
+
+        @functools.partial(
+            compat.shard_map,
+            mesh=self.mesh,
+            in_specs=(pspec,),
+            out_specs=(P(), P()),
+            check_replication=False,
+        )
+        def run(local):
+            res = gonzalez(local, k, impl=impl, chunk=chunk)
+            centers = res.centers
+            if hierarchical and len(axes) > 1:
+                for ax in axes:
+                    centers = jax.lax.all_gather(centers, ax, tiled=True)
+                    centers = gonzalez(centers, k, impl=impl,
+                                       chunk=chunk).centers
+            else:
+                for ax in axes:
+                    centers = jax.lax.all_gather(centers, ax, tiled=True)
+                centers = gonzalez(centers, k, impl=impl, chunk=chunk).centers
+            # local covering radius -> global max
+            _, d2 = ops.assign_nearest(local, centers, impl=impl, chunk=chunk)
+            r2 = jnp.max(d2)
+            for ax in axes:
+                r2 = jax.lax.pmax(r2, ax)
+            return centers, r2
+
+        x = as_source(source).materialize()
+        sharding = NamedSharding(self.mesh, pspec)
+        x = jax.device_put(x, sharding)
+        centers, r2 = run(x)
+        rounds = 1 + (len(axes) if hierarchical and len(axes) > 1 else 1)
+        return centers, r2, rounds

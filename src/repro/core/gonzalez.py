@@ -22,7 +22,9 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.data.source import ArraySource, is_source
 from repro.kernels import ops
 
 _NEG = jnp.float32(-3.4e38)  # sentinel: masked-out points can never be farthest
@@ -33,19 +35,32 @@ class GonzalezResult(NamedTuple):
     indices: jnp.ndarray   # (k,)  int32 indices into the input
     radius2: jnp.ndarray   # ()    squared covering radius over valid points
     min_d2: jnp.ndarray    # (n,)  final per-point squared distance to centers
+                           #       (host numpy on the out-of-core source path)
 
 
-@functools.partial(jax.jit, static_argnames=("k", "impl", "chunk"))
 def gonzalez(
-    points: jnp.ndarray,
+    points,
     k: int,
     *,
     mask: jnp.ndarray | None = None,
     first: int | jnp.ndarray = 0,
     impl: str = "auto",
     chunk: int | None = None,
+    block_rows: int | None = None,
+    memory_budget: int | None = None,
 ) -> GonzalezResult:
     """Run GON on ``points (n,d)``; optionally restricted to ``mask (n,) bool``.
+
+    ``points`` may also be any ``repro.data.source.PointSource``: a device
+    ``ArraySource`` runs the jitted in-memory algorithm unchanged, while
+    host/disk/generator sources run the out-of-core form — each of the k
+    passes streams the source block-by-block (``block_rows`` /
+    ``memory_budget``, see kernels/engine.py) with at most two blocks
+    device-resident (double-buffered DMA); the per-point distance state
+    lives on the host. The
+    selected centers and radius are identical to the in-memory run
+    (tests/test_sources.py). ``mask`` is not supported for streamed
+    sources.
 
     With a mask, invalid points are never selected as centers and are
     excluded from the covering radius. If fewer than ``k`` valid points
@@ -57,6 +72,31 @@ def gonzalez(
     transients) — the selected centers and radius are invariant to it
     (tests/test_engine.py).
     """
+    if is_source(points):
+        if isinstance(points, ArraySource):
+            points = points.materialize()
+        else:
+            if mask is not None:
+                raise ValueError(
+                    "mask is not supported for streamed PointSources")
+            return _gonzalez_source(points, k, first=int(first), impl=impl,
+                                    chunk=chunk, block_rows=block_rows,
+                                    memory_budget=memory_budget)
+    return _gonzalez_device(points, k, mask=mask, first=first, impl=impl,
+                            chunk=chunk)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "impl", "chunk"))
+def _gonzalez_device(
+    points: jnp.ndarray,
+    k: int,
+    *,
+    mask: jnp.ndarray | None = None,
+    first: int | jnp.ndarray = 0,
+    impl: str = "auto",
+    chunk: int | None = None,
+) -> GonzalezResult:
+    """The jitted in-memory algorithm (see ``gonzalez``)."""
     n, d = points.shape
     points = points.astype(jnp.float32)
     if mask is None:
@@ -90,11 +130,113 @@ def gonzalez(
     return GonzalezResult(centers, indices, radius2, jnp.maximum(min_d2, 0.0))
 
 
-def covering_radius(points: jnp.ndarray, centers: jnp.ndarray,
+def _source_row(source, idx: int, rows: int) -> np.ndarray:
+    """Row ``idx`` of a source — random access when the source offers it
+    (every built-in source does), else by streaming host blocks up to it."""
+    if not 0 <= idx < source.n:
+        raise IndexError(f"row {idx} out of range for n={source.n}")
+    if hasattr(source, "row"):
+        return np.asarray(source.row(idx), np.float32)
+    blocks = (source.host_blocks(rows) if hasattr(source, "host_blocks")
+              else source.blocks(rows))
+    off = 0
+    for blk in blocks:
+        if idx < off + blk.shape[0]:
+            return np.asarray(blk[idx - off], np.float32)
+        off += blk.shape[0]
+    raise IndexError(f"source exhausted before row {idx}")  # pragma: no cover
+
+
+def _gonzalez_source(source, k: int, *, first: int = 0, impl: str = "auto",
+                     chunk: int | None = None, block_rows: int | None = None,
+                     memory_budget: int | None = None) -> GonzalezResult:
+    """Out-of-core GON: k streamed passes over a PointSource.
+
+    Each pass folds ``fused_min_argmax`` over the source's blocks — the
+    update of the running per-point min-distance and the arg-farthest
+    search for the *next* center happen in the same pass, so selecting k
+    centers costs k passes (k·n/block DMAs), exactly the in-memory
+    algorithm's k fused passes with the n axis folded.
+
+    Device residency: at most two blocks (double-buffered DMA) plus the
+    current center. The per-point min-distance state (n floats) lives on
+    the host — n is bounded by host RAM, not HBM. Tie-breaking matches the
+    chunked engine (first occurrence), so centers, indices and radius are
+    identical to the in-memory run.
+    """
+    n, d = source.n, source.d
+    rows = ops.resolve_block_rows(n, d, block_rows=block_rows,
+                                  memory_budget=memory_budget)
+    centers = np.zeros((k, d), np.float32)
+    indices = np.zeros((k,), np.int32)
+    c0 = _source_row(source, first, rows)
+    centers[0] = c0
+    indices[0] = first
+
+    # Pass 0: distances to the first center; track the farthest point
+    # (value, global index, coordinates) — the next center.
+    md_blocks: list[np.ndarray] = []
+    cj = jnp.asarray(c0)
+    best_v, best_i, best_row = -np.inf, first, c0
+    off = 0
+    for blk in source.blocks(rows):
+        d2 = ops.dist2_to_center(blk, cj, impl=impl)
+        bi = int(jnp.argmax(d2))
+        bv = float(d2[bi])
+        if bv > best_v:  # strict: earliest block wins ties, like jnp.argmax
+            best_v, best_i, best_row = bv, off + bi, np.asarray(blk[bi])
+        md_blocks.append(np.asarray(d2))
+        off += blk.shape[0]
+    radius2 = max(best_v, 0.0)
+
+    for i in range(1, k):
+        centers[i] = best_row
+        indices[i] = best_i
+        cj = jnp.asarray(best_row)
+        best_v, nxt_i, nxt_row = -np.inf, 0, best_row
+        off = 0
+        for b, blk in enumerate(source.blocks(rows)):
+            new_md, v, bi = ops.fused_min_argmax(
+                blk, cj, jnp.asarray(md_blocks[b]), impl=impl, chunk=chunk)
+            md_blocks[b] = np.asarray(new_md)
+            v = float(v)
+            if v > best_v:
+                best_v = v
+                nxt_i = off + int(bi)
+                nxt_row = np.asarray(blk[int(bi)])
+            off += blk.shape[0]
+        radius2 = max(best_v, 0.0)
+        best_i, best_row = nxt_i, nxt_row
+
+    min_d2 = (np.maximum(np.concatenate(md_blocks), 0.0)
+              if md_blocks else np.zeros((0,), np.float32))
+    return GonzalezResult(jnp.asarray(centers), jnp.asarray(indices),
+                          jnp.float32(radius2), min_d2)
+
+
+def covering_radius(points, centers: jnp.ndarray,
                     *, mask: jnp.ndarray | None = None,
                     impl: str = "auto",
-                    chunk: int | None = None) -> jnp.ndarray:
-    """Euclidean covering radius of ``centers`` over (masked) ``points``."""
+                    chunk: int | None = None,
+                    block_rows: int | None = None,
+                    memory_budget: int | None = None) -> jnp.ndarray:
+    """Euclidean covering radius of ``centers`` over (masked) ``points``.
+
+    ``points`` may be a ``PointSource``; streamed sources fold the radius
+    block-by-block (``ops.fold_min_d2``) so the input never materializes
+    on device. ``mask`` is not supported for streamed sources.
+    """
+    if is_source(points):
+        if isinstance(points, ArraySource):
+            points = points.materialize()
+        else:
+            if mask is not None:
+                raise ValueError(
+                    "mask is not supported for streamed PointSources")
+            return jnp.sqrt(ops.fold_min_d2(points, centers, impl=impl,
+                                            chunk=chunk,
+                                            block_rows=block_rows,
+                                            memory_budget=memory_budget))
     _, d2 = ops.assign_nearest(points, centers, impl=impl, chunk=chunk)
     if mask is not None:
         d2 = jnp.where(mask, d2, 0.0)

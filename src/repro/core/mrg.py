@@ -1,41 +1,54 @@
-"""MRG — "MapReduce Gonzalez" (paper §3, Algorithm 1).
+"""MRG — "MapReduce Gonzalez" (paper §3, Algorithm 1), one algorithm.
 
-Two forms:
+``mrg(points_or_source, k, executor=...)`` runs the paper's algorithm on
+any machine substrate: round 1 maps GON over the executor's machine-blocks
+of the input, rounds 2+ reduce the center union under the capacity ``c``
+(Lemma 2 for 2 rounds ⇒ 4-approximation; Lemma 3's multi-round
+generalization adds +2 per extra level), and the covering radius is a
+streamed fold over the original source. The machine notions — vmapped
+blocks, mesh shards, or sequential out-of-core super-shards — live in
+``repro.core.executor``; the input notions — device array, host numpy,
+on-disk shards, generator program — live in ``repro.data.source``.
+
+Thin wrappers keep the historical API:
 
 * ``mrg_sim`` — the paper's experimental setup: ``m`` simulated machines on
-  one device. Points are blocked into m shards and GON runs on every shard
-  via ``vmap`` (round 1); the union of the m·k centers goes through one
-  more GON (round 2). 2 rounds ⇒ 4-approximation (Lemma 2). The multi-round
-  generalization (Lemma 3) re-blocks the center union while it exceeds the
-  capacity ``c``, adding +2 to the factor per extra round.
+  one device (``SimExecutor``: points blocked into m shards, GON on every
+  shard via ``vmap``).
+* ``mrg_distributed`` — the production TPU form (``MeshExecutor``: points
+  sharded over mesh axes, round 1 a ``shard_map`` block, round 2 an
+  ``all_gather`` + replicated GON; hierarchical gathers go axis-group by
+  axis-group, mirroring Lemma 3 with ICI-domain capacities).
 
-* ``mrg_distributed`` — the production TPU form: points sharded over mesh
-  axes, round 1 is a ``shard_map`` block running GON on the local shard,
-  round 2 is an ``all_gather`` of the per-device center sets followed by a
-  replicated GON (every device recomputes the tiny final instance instead
-  of idling — removes the result-broadcast round; see DESIGN.md §2).
-  Hierarchical (>2-round) gathers go axis-group by axis-group, exactly
-  mirroring Lemma 3's capacity argument with ICI-domain capacities.
+Out-of-core: ``mrg(HostSource(x), k)`` (or ``MemmapSource`` /
+``SyntheticSource``) defaults to ``HostStreamExecutor`` — round 1 becomes a
+sequential fold over DMA'd super-shards under a ``memory_budget``, so n is
+bounded by host RAM or disk instead of HBM.
 
-Paper correspondence: machines m = number of shards; capacity c = per-
-device working-set budget; "send all points in S to a single reducer"
-= all_gather (the gathered set is k·m points — tiny next to n).
+Paper correspondence: machines m = number of blocks; capacity c = per-
+machine working-set budget (``capacity`` rows / ``memory_budget`` bytes);
+"send all points in S to a single reducer" = ``Executor.combine`` (an
+``all_gather`` on the mesh — the gathered set is k·m points, tiny next
+to n).
 """
 from __future__ import annotations
 
-import functools
 import math
 from typing import NamedTuple, Sequence
 
-import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding
-from jax.sharding import PartitionSpec as P
+from jax.sharding import Mesh
 
-from repro import compat
-from repro.kernels import ops
+from repro.data.source import ArraySource, as_source, is_source
 
-from .gonzalez import covering_radius, gonzalez
+from .executor import (  # noqa: F401  (_block/_mrg_round re-exported for
+    Executor,            # benchmarks/runtime_scaling.py's round-timing)
+    HostStreamExecutor,
+    MeshExecutor,
+    SimExecutor,
+    _block,
+    _mrg_round,
+)
 
 
 class MRGResult(NamedTuple):
@@ -70,34 +83,41 @@ def plan_rounds(n: int, m: int, k: int, capacity: int) -> int:
 
 
 # ---------------------------------------------------------------------------
-# Single-device simulation (paper's experimental methodology, §7.1)
+# The unified algorithm
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("k", "m", "impl", "chunk"))
-def _mrg_round(points_blocked: jnp.ndarray, mask_blocked: jnp.ndarray,
-               k: int, m: int, impl: str, chunk: int | None = None):
-    """vmapped GON over m blocks -> (m*k, d) center union + validity mask."""
-    res = jax.vmap(
-        lambda p, mk: gonzalez(p, k, mask=mk, impl=impl, chunk=chunk)
-    )(points_blocked, mask_blocked)
-    centers = res.centers.reshape(m * k, -1)
-    # a block with zero valid points still emits k (zero) rows; mark validity
-    any_valid = jnp.any(mask_blocked, axis=1)             # (m,)
-    valid = jnp.repeat(any_valid, k)                      # (m*k,)
-    return centers, valid
+def mrg(points, k: int, *, executor: Executor | None = None, m: int = 50,
+        capacity: int | None = None, impl: str = "auto",
+        chunk: int | None = None) -> MRGResult:
+    """Paper Algorithm 1 over any point source and machine substrate.
+
+    ``points`` is anything ``repro.data.source.as_source`` accepts: an
+    array (device or numpy) or an explicit ``PointSource``. Without an
+    ``executor``, raw arrays and ``ArraySource`` run on ``SimExecutor(m)``
+    (the historical ``mrg_sim``); an explicit host/disk/generator source
+    runs on ``HostStreamExecutor()`` (the out-of-core fold) — only passing
+    a ``PointSource`` opts into streaming.
+
+    ``capacity`` (rows; default: the executor's machine size) triggers the
+    multi-round path when the k·m center union would not fit on one
+    machine (``MeshExecutor`` rejects it — its machine blocking is fixed
+    by the mesh). ``chunk`` streams every distance pass in row-blocks
+    within a machine (see kernels/engine.py).
+    """
+    streamed = is_source(points) and not isinstance(points, ArraySource)
+    source = as_source(points)
+    if executor is None:
+        executor = (HostStreamExecutor() if streamed else SimExecutor(m=m))
+    centers, r2, rounds = executor.mrg(source, k, capacity=capacity,
+                                       impl=impl, chunk=chunk)
+    return MRGResult(centers, r2, rounds)
 
 
-def _block(points: jnp.ndarray, m: int):
-    """Pad & reshape (n,d) -> (m, ceil(n/m), d) plus validity mask."""
-    n, d = points.shape
-    per = -(-n // m)
-    pad = per * m - n
-    pts = jnp.pad(points, ((0, pad), (0, 0)))
-    mask = jnp.arange(per * m) < n
-    return pts.reshape(m, per, d), mask.reshape(m, per)
+# ---------------------------------------------------------------------------
+# Historical wrappers (API stability)
+# ---------------------------------------------------------------------------
 
-
-def mrg_sim(points: jnp.ndarray, k: int, m: int = 50, *,
+def mrg_sim(points, k: int, m: int = 50, *,
             capacity: int | None = None, impl: str = "auto",
             chunk: int | None = None) -> MRGResult:
     """Paper Algorithm 1 with m simulated machines (single device).
@@ -106,37 +126,12 @@ def mrg_sim(points: jnp.ndarray, k: int, m: int = 50, *,
     when the k*m center union would not fit on one machine. ``chunk``
     streams every distance pass in row-blocks (see kernels/engine.py).
     """
-    n, d = points.shape
-    points = points.astype(jnp.float32)
-    if capacity is None:
-        capacity = max(-(-n // m), 2 * k)
-    levels = 1
+    return mrg(points, k, executor=SimExecutor(m=m), capacity=capacity,
+               impl=impl, chunk=chunk)
 
-    cur, mask = _block(points, m)
-    centers, valid = _mrg_round(cur, mask, k, m, impl, chunk)
-    levels += 1
-    # Multi-round: while the union exceeds capacity, re-block and reduce
-    # (paper §3.3 — each extra level adds +2 to the approximation factor).
-    while centers.shape[0] > capacity and centers.shape[0] > k:
-        m2 = -(-centers.shape[0] // capacity)  # >= 2 since rows > capacity
-        blocked, bmask = _block(centers, m2)
-        vpad = jnp.pad(valid, (0, bmask.size - valid.shape[0]),
-                       constant_values=False)
-        bmask = bmask & vpad.reshape(bmask.shape)
-        centers, valid = _mrg_round(blocked, bmask, k, m2, impl, chunk)
-        levels += 1
-
-    final = gonzalez(centers, k, mask=valid, impl=impl, chunk=chunk)
-    r = covering_radius(points, final.centers, impl=impl, chunk=chunk)
-    return MRGResult(final.centers, r * r, levels)
-
-
-# ---------------------------------------------------------------------------
-# Distributed (production) form: shard_map over mesh axes
-# ---------------------------------------------------------------------------
 
 def mrg_distributed(
-    points: jnp.ndarray,
+    points,
     k: int,
     mesh: Mesh,
     *,
@@ -164,34 +159,6 @@ def mrg_distributed(
     (``jax.experimental.shard_map``, ``check_rep``) and 0.6+
     (``jax.shard_map``, ``check_vma``) unchanged.
     """
-    axes = tuple(shard_axes)
-    pspec = P(axes if len(axes) > 1 else axes[0])
-
-    @functools.partial(
-        compat.shard_map,
-        mesh=mesh,
-        in_specs=(pspec,),
-        out_specs=(P(), P()),
-        check_replication=False,
-    )
-    def run(local):
-        res = gonzalez(local, k, impl=impl, chunk=chunk)
-        centers = res.centers
-        if hierarchical and len(axes) > 1:
-            for ax in axes:
-                centers = jax.lax.all_gather(centers, ax, tiled=True)
-                centers = gonzalez(centers, k, impl=impl, chunk=chunk).centers
-        else:
-            for ax in axes:
-                centers = jax.lax.all_gather(centers, ax, tiled=True)
-            centers = gonzalez(centers, k, impl=impl, chunk=chunk).centers
-        # local covering radius -> global max
-        _, d2 = ops.assign_nearest(local, centers, impl=impl, chunk=chunk)
-        r2 = jnp.max(d2)
-        for ax in axes:
-            r2 = jax.lax.pmax(r2, ax)
-        return centers, r2
-
-    sharding = NamedSharding(mesh, pspec)
-    points = jax.device_put(points.astype(jnp.float32), sharding)
-    return run(points)
+    ex = MeshExecutor(mesh, shard_axes=shard_axes, hierarchical=hierarchical)
+    centers, r2, _ = ex.mrg(as_source(points), k, impl=impl, chunk=chunk)
+    return centers, r2

@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.data.source import is_source
 from repro.kernels import ops
 
 
@@ -50,13 +51,36 @@ def _min_d2(x: np.ndarray, centers: np.ndarray,
     return np.asarray(d2)
 
 
-def stream_update(state: StreamState, batch: np.ndarray, *,
-                  chunk: int | None = None) -> StreamState:
+def stream_update(state: StreamState, batch, *,
+                  chunk: int | None = None,
+                  block_rows: int | None = None,
+                  memory_budget: int | None = None) -> StreamState:
     """Fold one batch of points (b,d) into the sketch.
+
+    ``batch`` may also be any ``PointSource`` (host numpy, on-disk shards,
+    or a generator program): its blocks are folded in order, so an entire
+    out-of-core dataset can be sketched without ever materializing it —
+    the natural pairing of the doubling algorithm's O(k) state with the
+    source layer's O(block) residency. ``block_rows`` / ``memory_budget``
+    set that blocking (kernels/engine.py residency model).
 
     ``chunk`` streams the per-batch coverage pass in row-blocks
     (kernels/engine.py) so arbitrarily large batches never materialize a
     (b, k) distance block."""
+    if is_source(batch):
+        rows = ops.resolve_block_rows(batch.n, batch.d,
+                                      block_rows=block_rows,
+                                      memory_budget=memory_budget)
+        # The sketch's fold runs host-side, so prefer the source's numpy
+        # blocks (no device round-trip); device-resident sources fall back
+        # to pulling their blocks down.
+        if hasattr(batch, "host_blocks"):
+            blocks = batch.host_blocks(rows)
+        else:
+            blocks = (np.asarray(b) for b in batch.blocks(rows))
+        for blk in blocks:
+            state = stream_update(state, blk, chunk=chunk)
+        return state
     centers, count, r, k = (np.array(state.centers), state.count,
                             state.r, state.k)
     batch = np.asarray(batch, np.float32)
@@ -68,7 +92,9 @@ def stream_update(state: StreamState, batch: np.ndarray, *,
         batch = batch[1:]
         count += 1
         if count == k + 1:
-            d2 = np.array(ops.ref.pairwise_dist2(
+            # the (k+1, k+1) block is tiny; route through the façade so
+            # impl resolution stays in one place (kernels/engine.py)
+            d2 = np.array(ops.pairwise_dist2(
                 jnp.asarray(centers), jnp.asarray(centers)))
             np.fill_diagonal(d2, np.inf)
             r = float(np.sqrt(d2.min())) / 2.0

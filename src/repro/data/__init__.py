@@ -1,2 +1,13 @@
 from .pipeline import host_slice, model_batch, token_batch  # noqa: F401
 from .pointsets import GENERATORS, gau, kddlike, pokerlike, unb, unif  # noqa: F401
+from .source import (  # noqa: F401
+    ArraySource,
+    HostSource,
+    MemmapSource,
+    PointSource,
+    SyntheticSource,
+    as_device_array,
+    as_source,
+    is_source,
+    synthetic_source,
+)

@@ -25,18 +25,24 @@ def unif(n: int, d: int = 2, *, seed: int = 0, side: float = 100.0):
 
 
 def gau(n: int, k_prime: int = 25, d: int = 2, *, seed: int = 0,
-        side: float = 100.0, sigma: float = 0.1):
+        side: float = 100.0, sigma: float = 0.1, centers=None):
+    """``centers`` (k', d) overrides the drawn cluster centers — used by
+    ``data/source.synthetic_source`` so every block shares one set."""
     r = _rng(seed)
-    centers = r.random((k_prime, d)) * side
+    if centers is None:
+        centers = r.random((k_prime, d)) * side
     assign = r.integers(0, k_prime, n)
     pts = centers[assign] + r.normal(0.0, sigma, (n, d))
     return pts.astype(np.float32)
 
 
 def unb(n: int, k_prime: int = 25, d: int = 2, *, seed: int = 0,
-        side: float = 100.0, sigma: float = 0.1, big_frac: float = 0.5):
+        side: float = 100.0, sigma: float = 0.1, big_frac: float = 0.5,
+        centers=None):
+    """See ``gau`` for the ``centers`` override."""
     r = _rng(seed)
-    centers = r.random((k_prime, d)) * side
+    if centers is None:
+        centers = r.random((k_prime, d)) * side
     n_big = int(n * big_frac)
     assign = np.concatenate([
         np.zeros(n_big, np.int64),

@@ -1,0 +1,366 @@
+"""Out-of-core point sources — the input side of the paper's machine model.
+
+The paper's MapReduce formulation (§3) never assumes the input is one
+resident array: points live partitioned across machines of capacity ``c``.
+A ``PointSource`` makes that explicit in the framework: it decouples *where
+points live* (device HBM, host RAM, on-disk shards, or a generator program)
+from *how algorithms consume them* (whole-array ops, or block streams
+bounded by a memory budget). Executors (``repro.core.executor``) impose the
+machine blocking on top; the chunked distance engine
+(``repro.kernels.engine``) bounds each block's per-pass working set below
+that.
+
+Sources:
+
+  * ``ArraySource``   — a device-resident array; today's behavior, zero-copy.
+  * ``HostSource``    — host-resident numpy, streamed block-by-block with
+                        double-buffered ``jax.device_put`` (the DMA of block
+                        i+1 is enqueued before block i is yielded), so n is
+                        bounded by host RAM instead of HBM.
+  * ``MemmapSource``  — one or more on-disk ``.npy`` shards opened with
+                        ``mmap_mode="r"``; n is bounded by disk. Blocks are
+                        *global* row ranges (shard boundaries are invisible
+                        to consumers, so blocking is independent of how the
+                        data was sharded on disk).
+  * ``SyntheticSource`` — a counter-based generator program; blocks are
+                        materialized on demand, so benchmarks at n = 10⁷
+                        never hold the full set even on the host. Built from
+                        the ``data/pointsets.py`` families via
+                        ``synthetic_source``.
+
+``blocks(block_rows)`` yields float32 device arrays of shape
+``(<= block_rows, d)`` covering rows ``[0, n)`` in order; it may be called
+any number of times (each call restarts the stream — memmaps re-read,
+generators regenerate deterministically). Because of the double buffering,
+up to *two* blocks are device-resident at once — the engine's
+``resolve_block_rows`` budget model accounts for both. Host-backed sources
+also expose ``host_blocks(block_rows)`` yielding numpy blocks with no
+device transfer at all, for consumers whose fold runs on the host (e.g.
+the streaming doubling sketch), and every built-in source provides
+``row(idx)`` — host-side random access to one row (the streamed GON's
+first-center fetch).
+
+Determinism: ``synthetic_source("unif", ...)`` reproduces ``pointsets.unif``
+*bitwise* for any blocking (the Philox counter is advanced to the block's
+stream offset). The ``gau``/``unb`` families share one set of cluster
+centers across blocks (drawn exactly as the monolithic generator draws
+them) but use per-block child seeds for assignments and noise, so they are
+distribution-identical, not bitwise-identical, to the monolithic call.
+"""
+from __future__ import annotations
+
+import os
+from typing import Callable, Iterator, Protocol, Sequence, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import pointsets
+
+
+@runtime_checkable
+class PointSource(Protocol):
+    """Anything with ``n``, ``d`` and restartable block iteration."""
+
+    @property
+    def n(self) -> int: ...
+
+    @property
+    def d(self) -> int: ...
+
+    def blocks(self, block_rows: int) -> Iterator[jnp.ndarray]: ...
+
+
+def is_source(x) -> bool:
+    """Duck-typed source check, safe on jax tracers and numpy arrays."""
+    return hasattr(x, "blocks") and hasattr(x, "n") and hasattr(x, "d")
+
+
+def as_source(x) -> "PointSource":
+    """Coerce to a PointSource: sources pass through, host numpy becomes a
+    ``HostSource``, anything array-like becomes a device ``ArraySource``."""
+    if is_source(x):
+        return x
+    if isinstance(x, np.ndarray):
+        return HostSource(x)
+    return ArraySource(x)
+
+
+def as_device_array(x) -> jnp.ndarray:
+    """Materialize a source (or pass an array through) as a float32 device
+    array — for algorithms that need random access (e.g. EIM's masks)."""
+    if is_source(x):
+        return x.materialize()
+    return jnp.asarray(x, jnp.float32)
+
+
+def _check_rows(block_rows: int) -> int:
+    if block_rows < 1:
+        raise ValueError(f"block_rows must be >= 1, got {block_rows}")
+    return int(block_rows)
+
+
+def _stream_device(host_blocks: Iterator[np.ndarray]) -> Iterator[jnp.ndarray]:
+    """Double-buffered host→device upload: enqueue block i+1's transfer
+    (``device_put`` is asynchronous) before yielding block i, so DMA
+    overlaps the consumer's compute on the previous block."""
+    it = iter(host_blocks)
+    try:
+        nxt = jax.device_put(next(it))
+    except StopIteration:
+        return
+    for blk in it:
+        cur, nxt = nxt, jax.device_put(blk)
+        yield cur
+    yield nxt
+
+
+class ArraySource:
+    """Device-resident ``(n, d)`` array — the legacy in-memory input."""
+
+    def __init__(self, array):
+        self._x = jnp.asarray(array, jnp.float32)
+        if self._x.ndim != 2:
+            raise ValueError(f"expected (n, d) points, got shape {self._x.shape}")
+
+    @property
+    def n(self) -> int:
+        return self._x.shape[0]
+
+    @property
+    def d(self) -> int:
+        return self._x.shape[1]
+
+    def blocks(self, block_rows: int) -> Iterator[jnp.ndarray]:
+        rows = _check_rows(block_rows)
+        for start in range(0, self.n, rows):
+            yield self._x[start:start + rows]
+
+    def row(self, idx: int) -> np.ndarray:
+        return np.asarray(self._x[idx])
+
+    def materialize(self) -> jnp.ndarray:
+        return self._x
+
+
+class HostSource:
+    """Host-resident numpy points streamed to the device block-by-block."""
+
+    def __init__(self, array: np.ndarray):
+        self._x = np.asarray(array, np.float32)
+        if self._x.ndim != 2:
+            raise ValueError(f"expected (n, d) points, got shape {self._x.shape}")
+
+    @property
+    def n(self) -> int:
+        return self._x.shape[0]
+
+    @property
+    def d(self) -> int:
+        return self._x.shape[1]
+
+    def host_blocks(self, block_rows: int) -> Iterator[np.ndarray]:
+        """Numpy blocks with no device transfer (host-side folds)."""
+        rows = _check_rows(block_rows)
+        for start in range(0, self.n, rows):
+            yield self._x[start:start + rows]
+
+    def blocks(self, block_rows: int) -> Iterator[jnp.ndarray]:
+        return _stream_device(self.host_blocks(block_rows))
+
+    def row(self, idx: int) -> np.ndarray:
+        return self._x[idx]
+
+    def materialize(self) -> jnp.ndarray:
+        return jnp.asarray(self._x)
+
+
+class MemmapSource:
+    """On-disk ``.npy`` shards, memory-mapped; n is bounded by disk.
+
+    ``paths`` is one path or an ordered sequence of shard paths; shards are
+    logically concatenated along rows. Blocks are global row ranges, so a
+    block may span a shard boundary (the pieces are concatenated on the
+    host before the device upload).
+    """
+
+    def __init__(self, paths: str | os.PathLike | Sequence[str | os.PathLike]):
+        if isinstance(paths, (str, os.PathLike)):
+            paths = [paths]
+        if not paths:
+            raise ValueError("MemmapSource needs at least one shard path")
+        self._paths = [str(p) for p in paths]
+        self._maps = [np.load(p, mmap_mode="r") for p in self._paths]
+        d = self._maps[0].shape[1]
+        for p, m in zip(self._paths, self._maps):
+            if m.ndim != 2 or m.shape[1] != d:
+                raise ValueError(
+                    f"shard {p} has shape {m.shape}, expected (rows, {d})")
+        self._offsets = np.cumsum([0] + [m.shape[0] for m in self._maps])
+
+    @property
+    def n(self) -> int:
+        return int(self._offsets[-1])
+
+    @property
+    def d(self) -> int:
+        return int(self._maps[0].shape[1])
+
+    def _slice(self, start: int, stop: int) -> np.ndarray:
+        """Rows ``[start, stop)`` of the logical concatenation, as f32."""
+        pieces = []
+        for m, off in zip(self._maps, self._offsets[:-1]):
+            lo = max(start - off, 0)
+            hi = min(stop - off, m.shape[0])
+            if lo < hi:
+                pieces.append(np.asarray(m[lo:hi], np.float32))
+        if len(pieces) == 1:
+            return pieces[0]
+        return np.concatenate(pieces, axis=0)
+
+    def host_blocks(self, block_rows: int) -> Iterator[np.ndarray]:
+        """Numpy blocks with no device transfer (host-side folds)."""
+        rows = _check_rows(block_rows)
+        for start in range(0, self.n, rows):
+            yield self._slice(start, min(start + rows, self.n))
+
+    @property
+    def num_shards(self) -> int:
+        return len(self._paths)
+
+    def blocks(self, block_rows: int) -> Iterator[jnp.ndarray]:
+        return _stream_device(self.host_blocks(block_rows))
+
+    def row(self, idx: int) -> np.ndarray:
+        return self._slice(idx, idx + 1)[0]
+
+    def materialize(self) -> jnp.ndarray:
+        return jnp.asarray(self._slice(0, self.n))
+
+    @classmethod
+    def save_shards(cls, array: np.ndarray, dirpath: str | os.PathLike, *,
+                    rows_per_shard: int) -> "MemmapSource":
+        """Write ``array`` as numbered ``.npy`` shards under ``dirpath``."""
+        rows_per_shard = _check_rows(rows_per_shard)
+        array = np.asarray(array, np.float32)
+        os.makedirs(dirpath, exist_ok=True)
+        paths = []
+        for i, start in enumerate(range(0, array.shape[0], rows_per_shard)):
+            p = os.path.join(str(dirpath), f"shard_{i:05d}.npy")
+            np.save(p, array[start:start + rows_per_shard])
+            paths.append(p)
+        return cls(paths)
+
+
+class SyntheticSource:
+    """Blocks computed on demand by ``block_fn(start, rows) -> (rows, d)``.
+
+    The full (n, d) set is never materialized anywhere — each block is
+    generated on the host and DMA'd like a ``HostSource`` block. ``block_fn``
+    must be deterministic in ``(start, rows)`` so the stream can restart.
+    """
+
+    def __init__(self, block_fn: Callable[[int, int], np.ndarray], n: int,
+                 d: int | None = None, *, name: str = "synthetic"):
+        self._fn = block_fn
+        self._n = int(n)
+        if d is None:
+            d = int(np.asarray(block_fn(0, 1)).shape[1])
+        self._d = int(d)
+        self.name = name
+
+    @property
+    def n(self) -> int:
+        return self._n
+
+    @property
+    def d(self) -> int:
+        return self._d
+
+    def host_blocks(self, block_rows: int) -> Iterator[np.ndarray]:
+        """Numpy blocks with no device transfer (host-side folds)."""
+        rows = _check_rows(block_rows)
+        for start in range(0, self._n, rows):
+            blk = np.asarray(self._fn(start, min(rows, self._n - start)),
+                             np.float32)
+            yield blk
+
+    def blocks(self, block_rows: int) -> Iterator[jnp.ndarray]:
+        return _stream_device(self.host_blocks(block_rows))
+
+    def row(self, idx: int) -> np.ndarray:
+        return np.asarray(self._fn(idx, 1), np.float32)[0]
+
+    def materialize(self) -> jnp.ndarray:
+        return jnp.concatenate(
+            [jnp.asarray(b) for b in self.host_blocks(1 << 20)], axis=0)
+
+
+def _philox_at(seed: int, offset: int) -> np.random.Generator:
+    """Generator positioned at double-draw ``offset`` of the Philox stream.
+
+    numpy's ``Philox.advance(delta)`` moves in whole 4x64 counter blocks
+    (4 doubles each), so advance to the containing block and discard the
+    remainder."""
+    bg = np.random.Philox(key=np.uint64(seed))
+    bg.advance(offset // 4)
+    g = np.random.Generator(bg)
+    if offset % 4:
+        g.random(offset % 4)
+    return g
+
+
+def _child_seed(seed: int, start: int) -> np.random.Generator:
+    ss = np.random.SeedSequence(entropy=[np.uint64(seed), np.uint64(start)])
+    return np.random.Generator(np.random.Philox(ss))
+
+
+def synthetic_source(name: str, n: int, *, seed: int = 0,
+                     **kwargs) -> SyntheticSource:
+    """Out-of-core view of a ``data/pointsets.py`` family (§7.3).
+
+    ``unif`` is bitwise-identical to ``pointsets.unif(n, ...)`` under any
+    blocking. ``gau``/``unb`` share the monolithic generator's cluster
+    centers but draw per-block assignments/noise from child seeds
+    (distribution-identical). Other families use per-block child seeds.
+    """
+    if name == "unif":
+        d = int(kwargs.get("d", 2))
+        side = float(kwargs.get("side", 100.0))
+
+        def block_fn(start: int, rows: int) -> np.ndarray:
+            g = _philox_at(seed, start * d)
+            return (g.random((rows, d)) * side).astype(np.float32)
+
+        return SyntheticSource(block_fn, n, d, name=name)
+
+    if name in ("gau", "unb"):
+        gen = pointsets.GENERATORS[name]
+        k_prime = int(kwargs.get("k_prime", 25))
+        d = int(kwargs.get("d", 2))
+        side = float(kwargs.get("side", 100.0))
+        # Centers are the monolithic generator's first draw — shared across
+        # every block so the cluster structure is global, not per-block.
+        centers = (pointsets._rng(seed).random((k_prime, d)) * side
+                   ).astype(np.float32)
+
+        def block_fn(start: int, rows: int) -> np.ndarray:
+            child = int(_child_seed(seed, start).integers(0, 2 ** 63))
+            return gen(rows, k_prime, d, seed=child, centers=centers,
+                       **{k: v for k, v in kwargs.items()
+                          if k not in ("k_prime", "d", "side")})
+
+        return SyntheticSource(block_fn, n, d, name=name)
+
+    if name in pointsets.GENERATORS:
+        gen = pointsets.GENERATORS[name]
+
+        def block_fn(start: int, rows: int) -> np.ndarray:
+            child = int(_child_seed(seed, start).integers(0, 2 ** 63))
+            return gen(rows, seed=child, **kwargs)
+
+        return SyntheticSource(block_fn, n, name=name)
+
+    raise ValueError(f"unknown generator {name!r}; "
+                     f"have {sorted(pointsets.GENERATORS)}")

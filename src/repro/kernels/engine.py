@@ -273,3 +273,115 @@ def argmin_dist2_over_rows(x, c, *, impl: str = "auto",
     init = (jnp.full((m,), _BIG), jnp.zeros((m,), jnp.int32))
     (_, idx), _ = jax.lax.scan(step, init, (xb, offs))
     return idx
+
+
+# ---------------------------------------------------------------------------
+# source folds — streamed ops over a PointSource
+#
+# A "source" here is duck-typed: anything with ``n``, ``d`` and
+# ``blocks(block_rows)`` yielding (<= block_rows, d) float32 device arrays
+# covering the rows in order (see repro/data/source.py). These folds are the
+# shared entry points the executors (repro/core/executor.py) and the
+# source-aware algorithm layer build on: at most two super-shards of the
+# input (double-buffered DMA) are ever device-resident, so n is bounded by
+# host RAM / disk, not HBM.
+#
+# Two nested capacity knobs exist by design: ``block_rows``/``memory_budget``
+# bounds the resident *input block* (this layer), while ``chunk`` bounds the
+# per-pass *distance working set* within a block (the layer above). They
+# mirror the paper's machine capacity c and its per-round working memory.
+# ---------------------------------------------------------------------------
+
+DEFAULT_BLOCK_ROWS = 1 << 16
+
+
+def resolve_block_rows(n: int, d: int, *, block_rows: int | None = None,
+                       memory_budget: int | None = None,
+                       default: int = DEFAULT_BLOCK_ROWS) -> int:
+    """Super-shard size for streaming an ``(n, d)`` source.
+
+    Explicit ``block_rows`` wins (clipped to ``[1, n]``). Otherwise a
+    ``memory_budget`` in bytes is solved against the f32 residency model
+    ``2 · 4·rows·(d + 1)`` — *two* blocks coexist under the sources'
+    double-buffered DMA (the consumed block plus the prefetched one), each
+    with one per-row reduction carry. Falls back to ``DEFAULT_BLOCK_ROWS``.
+    """
+    if block_rows is not None:
+        if block_rows < 1:
+            raise ValueError(f"block_rows must be >= 1, got {block_rows}")
+        return min(int(block_rows), max(n, 1))
+    if memory_budget is not None:
+        rows = memory_budget // (8 * (d + 1))
+        if rows < 1:
+            raise ValueError(
+                f"memory_budget={memory_budget} cannot hold even one "
+                f"{d}-dim row per buffer ({8 * (d + 1)} bytes/row "
+                f"double-buffered)")
+        return min(int(rows), max(n, 1))
+    return min(default, max(n, 1))
+
+
+def fold_min_d2(source, c, *, impl: str = "auto", chunk: int | None = None,
+                block_rows: int | None = None,
+                memory_budget: int | None = None) -> jnp.ndarray:
+    """Max over all source points of the min squared distance to ``c`` —
+    the squared covering radius, as a streamed fold.
+
+    Per-block maxima combine exactly (max is associative and order-safe),
+    so the result is bitwise-identical to the in-memory
+    ``max(assign_nearest(x, c)[1])`` for any blocking.
+    """
+    rows = resolve_block_rows(source.n, source.d, block_rows=block_rows,
+                              memory_budget=memory_budget)
+    best = None
+    for blk in source.blocks(rows):
+        _, d2 = assign_nearest(blk, c, impl=impl, chunk=chunk)
+        bmax = jnp.max(d2)
+        best = bmax if best is None else jnp.maximum(best, bmax)
+    if best is None:
+        return jnp.float32(0.0)
+    return best
+
+
+def assign_nearest_source(source, c, *, impl: str = "auto",
+                          chunk: int | None = None,
+                          block_rows: int | None = None,
+                          memory_budget: int | None = None):
+    """Streaming nearest-center assignment over a source.
+
+    Yields ``(idx (rows,) i32, d2 (rows,))`` per block, in row order —
+    callers fold (counts, sums, maxima) instead of holding an (n,) result
+    on device. Concatenating the yields equals the in-memory
+    ``assign_nearest`` output bitwise.
+    """
+    rows = resolve_block_rows(source.n, source.d, block_rows=block_rows,
+                              memory_budget=memory_budget)
+    for blk in source.blocks(rows):
+        yield assign_nearest(blk, c, impl=impl, chunk=chunk)
+
+
+def argmin_dist2_over_source(source, c, *, impl: str = "auto",
+                             chunk: int | None = None,
+                             block_rows: int | None = None,
+                             memory_budget: int | None = None) -> jnp.ndarray:
+    """``argmin_dist2_over_rows`` over a source: for each center row of
+    ``c (m, d)``, the global row index of the nearest source point.
+
+    The fold carries an (m,)-sized running (min, argmin); strict ``<``
+    keeps the earliest block on ties, and within a block ``assign_nearest``
+    resolves ties to the first row — together matching the global
+    first-occurrence semantics of ``jnp.argmin``.
+    """
+    m = c.shape[0]
+    rows = resolve_block_rows(source.n, source.d, block_rows=block_rows,
+                              memory_budget=memory_budget)
+    best_d = jnp.full((m,), _BIG)
+    best_i = jnp.zeros((m,), jnp.int32)
+    off = 0
+    for blk in source.blocks(rows):
+        bi, bd = assign_nearest(c, blk, impl=impl, chunk=chunk)
+        take = bd < best_d
+        best_d = jnp.where(take, bd, best_d)
+        best_i = jnp.where(take, bi + off, best_i)
+        off += blk.shape[0]
+    return best_i

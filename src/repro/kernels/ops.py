@@ -38,3 +38,10 @@ pairwise_dist2 = engine.pairwise_dist2
 fused_min_argmax = engine.fused_min_argmax
 assign_nearest = engine.assign_nearest
 argmin_dist2_over_rows = engine.argmin_dist2_over_rows
+
+# Source folds (engine.py): block-streamed ops over a PointSource, so the
+# input itself — not just the distance block — stays out of device memory.
+resolve_block_rows = engine.resolve_block_rows
+fold_min_d2 = engine.fold_min_d2
+assign_nearest_source = engine.assign_nearest_source
+argmin_dist2_over_source = engine.argmin_dist2_over_source

@@ -150,3 +150,53 @@ def test_mrg_sim_chunk_invariant():
     np.testing.assert_array_equal(np.asarray(r0.centers),
                                   np.asarray(r1.centers))
     assert float(r0.radius2) == float(r1.radius2)
+
+
+# ---------------------------------------------------------------------------
+# source folds (engine.py): block-streamed ops over a PointSource
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rows", [1, 77, 256, 1000, 4096])
+def test_fold_min_d2_matches_assign_max(rows):
+    from repro.data import HostSource
+    x, c, _ = _data(seed=9)
+    _, d2 = ref.assign_nearest(x, c)
+    got = ops.fold_min_d2(HostSource(np.asarray(x)), c, impl="ref",
+                          block_rows=rows)
+    assert float(jnp.max(d2)) == float(got)
+
+
+@pytest.mark.parametrize("rows", [1, 77, 256, 1000, 4096])
+def test_assign_nearest_source_concat_parity(rows):
+    from repro.data import HostSource
+    x, c, _ = _data(seed=10)
+    i0, d0 = ref.assign_nearest(x, c)
+    parts = list(ops.assign_nearest_source(HostSource(np.asarray(x)), c,
+                                           impl="ref", block_rows=rows))
+    i1 = np.concatenate([np.asarray(i) for i, _ in parts])
+    d1 = np.concatenate([np.asarray(d) for _, d in parts])
+    np.testing.assert_array_equal(np.asarray(i0), i1)
+    np.testing.assert_array_equal(np.asarray(d0), d1)
+
+
+@pytest.mark.parametrize("rows", [1, 77, 256, 1000, 4096])
+def test_argmin_dist2_over_source_parity(rows):
+    from repro.data import HostSource
+    x, c, _ = _data(seed=11)
+    i0, _ = ref.assign_nearest(c, x)   # unchunked oracle: (m,) over n rows
+    i1 = ops.argmin_dist2_over_source(HostSource(np.asarray(x)), c,
+                                      impl="ref", block_rows=rows)
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+
+
+def test_resolve_block_rows_model():
+    # explicit rows win, clipped to n
+    assert engine.resolve_block_rows(100, 8, block_rows=7) == 7
+    assert engine.resolve_block_rows(100, 8, block_rows=500) == 100
+    # budget model: 2·4·rows·(d+1) <= budget (two double-buffered blocks)
+    rows = engine.resolve_block_rows(10 ** 9, 7, memory_budget=1 << 20)
+    assert 8 * rows * 8 <= 1 << 20 < 8 * (rows + 1) * 8
+    with pytest.raises(ValueError):
+        engine.resolve_block_rows(100, 8, block_rows=0)
+    with pytest.raises(ValueError):
+        engine.resolve_block_rows(100, 1024, memory_budget=64)

@@ -1,0 +1,309 @@
+"""Out-of-core substrate: PointSources, executors, and the unified ``mrg``.
+
+Contracts under test (data/source.py + core/executor.py):
+
+  * every source reproduces the underlying rows exactly, for any blocking,
+    including blocks that straddle on-disk shard boundaries;
+  * ``mrg`` over ``ArraySource`` / ``HostSource`` / ``MemmapSource`` with
+    the same machine blocking returns *bitwise identical* centers and
+    radius to the in-memory ``mrg_sim`` (the ref path is deterministic and
+    the executors don't change any per-row arithmetic);
+  * ``HostStreamExecutor``'s realized round count equals the paper's
+    ``plan_rounds`` recurrence (§3.3 inequality (1)) for matching
+    (machines, capacity);
+  * the streamed algorithm layer (gonzalez / covering_radius /
+    select_coreset / stream_update) is exact vs the in-memory layer.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (HostStreamExecutor, SimExecutor, covering_radius,
+                        eim, gonzalez, mrg, mrg_sim, plan_rounds,
+                        select_coreset, stream_init, stream_result,
+                        stream_update)
+from repro.data import (ArraySource, HostSource, MemmapSource, as_source,
+                        synthetic_source, unif)
+
+
+def _pts(n=640, d=5, seed=0):
+    return np.random.default_rng(seed).normal(size=(n, d)).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# sources reproduce their rows
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rows", [1, 77, 128, 640, 1000])
+def test_host_and_array_sources_roundtrip(rows):
+    x = _pts()
+    for src in (ArraySource(x), HostSource(x)):
+        got = np.concatenate([np.asarray(b) for b in src.blocks(rows)])
+        np.testing.assert_array_equal(got, x)
+        assert src.n == x.shape[0] and src.d == x.shape[1]
+
+
+@pytest.mark.parametrize("shard_rows,block_rows", [(200, 77), (100, 256),
+                                                   (640, 640), (7, 64)])
+def test_memmap_source_blocks_cross_shard_boundaries(tmp_path, shard_rows,
+                                                     block_rows):
+    x = _pts()
+    src = MemmapSource.save_shards(x, tmp_path, rows_per_shard=shard_rows)
+    got = np.concatenate([np.asarray(b) for b in src.blocks(block_rows)])
+    np.testing.assert_array_equal(got, x)
+    np.testing.assert_array_equal(np.asarray(src.materialize()), x)
+
+
+def test_synthetic_unif_bitwise_matches_generator():
+    # the Philox counter is advanced to each block's stream offset, so any
+    # blocking reproduces the monolithic pointsets.unif call exactly
+    full = unif(1000, 3, seed=42)
+    src = synthetic_source("unif", 1000, d=3, seed=42)
+    for rows in (64, 250, 1000):
+        got = np.concatenate([np.asarray(b) for b in src.blocks(rows)])
+        np.testing.assert_array_equal(got, full)
+
+
+def test_synthetic_gau_restartable_and_shaped():
+    src = synthetic_source("gau", 500, d=2, seed=7, k_prime=5)
+    a = np.concatenate([np.asarray(b) for b in src.blocks(100)])
+    b = np.concatenate([np.asarray(b) for b in src.blocks(100)])
+    np.testing.assert_array_equal(a, b)   # streams restart deterministically
+    assert a.shape == (500, 2)
+
+
+def test_source_row_random_access(tmp_path):
+    x = _pts()
+    srcs = [ArraySource(x), HostSource(x),
+            MemmapSource.save_shards(x, tmp_path, rows_per_shard=100),
+            synthetic_source("unif", 1000, d=3, seed=42)]
+    full = unif(1000, 3, seed=42)
+    for src, ref in zip(srcs, [x, x, x, full]):
+        for idx in (0, 1, 99, 100, ref.shape[0] - 1):
+            np.testing.assert_array_equal(np.asarray(src.row(idx)), ref[idx])
+    with pytest.raises(IndexError):
+        from repro.core.gonzalez import _source_row
+        _source_row(HostSource(x), x.shape[0], 100)
+
+
+def test_as_source_coercion():
+    x = _pts()
+    assert isinstance(as_source(x), HostSource)
+    assert isinstance(as_source(jnp.asarray(x)), ArraySource)
+    src = HostSource(x)
+    assert as_source(src) is src
+
+
+# ---------------------------------------------------------------------------
+# mrg parity across sources/executors (the ISSUE's acceptance bar)
+# ---------------------------------------------------------------------------
+
+def test_mrg_array_source_equals_mrg_sim():
+    x = _pts()
+    r_sim = mrg_sim(jnp.asarray(x), 7, m=8, impl="ref")
+    r_arr = mrg(ArraySource(x), 7, m=8, impl="ref")
+    np.testing.assert_array_equal(np.asarray(r_sim.centers),
+                                  np.asarray(r_arr.centers))
+    assert float(r_sim.radius2) == float(r_arr.radius2)
+    assert r_sim.rounds == r_arr.rounds == 2
+
+
+def test_mrg_host_source_bitwise_equals_mrg_sim():
+    # same blocking: m=8 machines of 80 rows == super-shards of 80 rows
+    x = _pts()
+    r_sim = mrg_sim(jnp.asarray(x), 7, m=8, impl="ref")
+    r_host = mrg(HostSource(x), 7, impl="ref",
+                 executor=HostStreamExecutor(block_rows=80))
+    np.testing.assert_array_equal(np.asarray(r_sim.centers),
+                                  np.asarray(r_host.centers))
+    assert float(r_sim.radius2) == float(r_host.radius2)
+    assert r_sim.rounds == r_host.rounds
+
+
+def test_mrg_memmap_source_bitwise_equals_mrg_sim(tmp_path):
+    # shard size deliberately != machine blocking: the source's global-row
+    # blocks hide the disk layout
+    x = _pts()
+    src = MemmapSource.save_shards(x, tmp_path, rows_per_shard=200)
+    r_sim = mrg_sim(jnp.asarray(x), 7, m=8, impl="ref")
+    r_mm = mrg(src, 7, impl="ref",
+               executor=HostStreamExecutor(block_rows=80))
+    np.testing.assert_array_equal(np.asarray(r_sim.centers),
+                                  np.asarray(r_mm.centers))
+    assert float(r_sim.radius2) == float(r_mm.radius2)
+
+
+def test_mrg_multiround_parity_and_memory_budget():
+    # capacity forces Lemma-3 extra rounds; both substrates reduce the same
+    # union on the same re-blocking
+    x = _pts()
+    r_sim = mrg_sim(jnp.asarray(x), 7, m=8, capacity=20, impl="ref")
+    r_host = mrg(HostSource(x), 7, capacity=20, impl="ref",
+                 executor=HostStreamExecutor(block_rows=80))
+    assert r_sim.rounds == r_host.rounds > 2
+    np.testing.assert_array_equal(np.asarray(r_sim.centers),
+                                  np.asarray(r_host.centers))
+    assert float(r_sim.radius2) == float(r_host.radius2)
+    # a byte budget resolves to the same 80-row super-shards:
+    # 2·4·rows·(d+1) <= budget (double-buffered)  =>  rows = budget // 48
+    r_bud = mrg(HostSource(x), 7, capacity=20, impl="ref",
+                executor=HostStreamExecutor(memory_budget=80 * 8 * 6))
+    np.testing.assert_array_equal(np.asarray(r_host.centers),
+                                  np.asarray(r_bud.centers))
+
+
+def test_mrg_default_executor_picks_substrate():
+    x = _pts(n=200, d=3, seed=3)
+    r_dev = mrg(jnp.asarray(x), 5, m=4, impl="ref")   # -> SimExecutor
+    r_str = mrg(HostSource(x), 5, impl="ref",
+                executor=HostStreamExecutor(block_rows=50))
+    np.testing.assert_array_equal(np.asarray(r_dev.centers),
+                                  np.asarray(r_str.centers))
+    # default for a host source is HostStreamExecutor (65536-row shards:
+    # one block here, so rounds collapse to the 2-level classic form)
+    assert mrg(HostSource(x), 5, impl="ref").rounds == 2
+
+
+@pytest.mark.parametrize("n,rows,k,capacity", [
+    (640, 80, 7, 80),      # k*m = 56 <= 80: classic 2 rounds
+    (640, 80, 7, 20),      # 56 > 20: extra levels
+    (3000, 100, 8, 64),    # 240 > 64: deeper recursion
+    (1000, 10, 2, 5),      # k/c = 0.4: many levels
+    (512, 512, 4, 512),    # single machine
+])
+def test_plan_rounds_matches_host_stream_executor(n, rows, k, capacity):
+    """§3.3 recurrence == realized rounds on the out-of-core substrate."""
+    m = -(-n // rows)
+    expected = plan_rounds(n, m, k, capacity)
+    x = _pts(n=n, d=3, seed=n + k)
+    got = mrg(HostSource(x), k, capacity=capacity, impl="ref",
+              executor=HostStreamExecutor(block_rows=rows)).rounds
+    assert got == expected
+
+
+# ---------------------------------------------------------------------------
+# streamed algorithm layer parity
+# ---------------------------------------------------------------------------
+
+def test_gonzalez_streamed_bitwise():
+    x = _pts()
+    g0 = gonzalez(jnp.asarray(x), 7, impl="ref")
+    g1 = gonzalez(HostSource(x), 7, impl="ref", block_rows=100)
+    np.testing.assert_array_equal(np.asarray(g0.centers),
+                                  np.asarray(g1.centers))
+    np.testing.assert_array_equal(np.asarray(g0.indices),
+                                  np.asarray(g1.indices))
+    assert float(g0.radius2) == float(g1.radius2)
+    np.testing.assert_array_equal(np.asarray(g0.min_d2),
+                                  np.asarray(g1.min_d2))
+
+
+def test_gonzalez_streamed_rejects_mask():
+    x = _pts(n=64, d=2)
+    with pytest.raises(ValueError):
+        gonzalez(HostSource(x), 3, mask=jnp.ones(64, bool))
+
+
+def test_covering_radius_streamed_bitwise():
+    x = _pts()
+    c = gonzalez(jnp.asarray(x), 5, impl="ref").centers
+    r0 = float(covering_radius(jnp.asarray(x), c, impl="ref"))
+    r1 = float(covering_radius(HostSource(x), c, impl="ref", block_rows=90))
+    assert r0 == r1
+
+
+def test_select_coreset_streamed_parity():
+    x = _pts(n=500, d=16, seed=8)
+    c0 = select_coreset(jnp.asarray(x), 8, impl="ref")
+    c1 = select_coreset(HostSource(x), 8, impl="ref", block_rows=77)
+    np.testing.assert_array_equal(np.asarray(c0.indices),
+                                  np.asarray(c1.indices))
+    np.testing.assert_array_equal(np.asarray(c0.weights),
+                                  np.asarray(c1.weights))
+    assert float(c0.radius2) == float(c1.radius2)
+
+
+def test_select_coreset_executor_runs_mrg():
+    x = _pts(n=400, d=4, seed=9)
+    cs = select_coreset(HostSource(x), 6, impl="ref",
+                        executor=HostStreamExecutor(block_rows=100))
+    assert cs.centers.shape == (6, 4)
+    assert float(jnp.sum(cs.weights)) == 400.0
+    # MRG (<=4-approx) vs GON (>=OPT): radius ratio bounded by 4
+    g = gonzalez(jnp.asarray(x), 6, impl="ref")
+    assert float(jnp.sqrt(cs.radius2)) <= \
+        4.0 * float(jnp.sqrt(g.radius2)) + 1e-5
+
+
+def test_stream_update_accepts_source():
+    x = _pts(n=900, d=4, seed=10)
+    s0 = stream_init(8, 4)
+    for i in range(0, 900, 300):
+        s0 = stream_update(s0, x[i:i + 300])
+    s1 = stream_update(stream_init(8, 4), HostSource(x), block_rows=300)
+    c0, r0 = stream_result(s0)
+    c1, r1 = stream_result(s1)
+    np.testing.assert_array_equal(c0, c1)
+    assert r0 == r1
+
+
+def test_eim_accepts_source():
+    import jax
+    x = _pts(n=2000, d=3, seed=11)
+    r0 = eim(jnp.asarray(x), 5, jax.random.PRNGKey(0), impl="ref")
+    r1 = eim(ArraySource(x), 5, jax.random.PRNGKey(0), impl="ref")
+    r2 = eim(HostSource(x), 5, jax.random.PRNGKey(0), impl="ref")
+    for r in (r1, r2):
+        np.testing.assert_array_equal(np.asarray(r0.centers),
+                                      np.asarray(r.centers))
+        assert float(r0.radius2) == float(r.radius2)
+
+
+# ---------------------------------------------------------------------------
+# executor edge cases
+# ---------------------------------------------------------------------------
+
+def test_sim_executor_rejects_zero_machines():
+    with pytest.raises(ValueError):
+        SimExecutor(m=0)
+
+
+def test_mesh_executor_rejects_capacity():
+    from repro.core import MeshExecutor
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1,), ("data",))
+    with pytest.raises(ValueError, match="capacity"):
+        MeshExecutor(mesh).mrg(HostSource(_pts(n=16, d=2)), 2, capacity=8)
+
+
+class _RecordingSource(HostSource):
+    """HostSource that records every requested block size."""
+
+    def __init__(self, x):
+        super().__init__(x)
+        self.requested = set()
+
+    def blocks(self, block_rows):
+        self.requested.add(block_rows)
+        return super().blocks(block_rows)
+
+
+def test_select_coreset_reverse_passes_inherit_executor_budget():
+    # every pass — rounds, radius fold, and both reverse passes — must use
+    # the executor's blocking, not the 65536-row default
+    src = _RecordingSource(_pts(n=400, d=4, seed=13))
+    select_coreset(src, 4, impl="ref",
+                   executor=HostStreamExecutor(block_rows=50))
+    assert src.requested == {50}
+
+
+def test_host_stream_block_larger_than_n_is_one_machine():
+    x = _pts(n=100, d=3, seed=12)
+    r = mrg(HostSource(x), 4, impl="ref",
+            executor=HostStreamExecutor(block_rows=10_000))
+    # one super-shard == one simulated machine
+    r1 = mrg_sim(jnp.asarray(x), 4, m=1, impl="ref")
+    np.testing.assert_array_equal(np.asarray(r.centers),
+                                  np.asarray(r1.centers))
+    assert float(r.radius2) == float(r1.radius2)
+    assert r.rounds == r1.rounds == 2
