@@ -5,6 +5,14 @@ GAU, n = 200,000 (paper-scale; ``--quick`` divides by 10), k' = 25,
 paper's provable-bound threshold — values below it trade the w.s.p.
 10-approximation for speed (paper §8.3 observes they are often *better*,
 because sampling fewer points avoids cluster-perimeter centers).
+
+This sweep is folded into ``benchmarks/run.py`` (the ``phi`` section), so
+the φ value/runtime trade-off lands in the ``BENCH_kcenter.json`` CI
+artifact alongside the MRG rows. The timing harness
+(``runtime_scaling.time_eim``) draws from the same counter-based per-row
+sampler as ``repro.core.eim``, so the measured Round-1 cost is the
+production sampler's. Out-of-core φ runs (n past the device budget) are
+the EIM section of ``benchmarks/chunked_scaling.py``.
 """
 from __future__ import annotations
 

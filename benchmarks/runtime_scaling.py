@@ -105,8 +105,10 @@ def time_eim_compact(points, k: int, *, eps: float = 0.1, phi: float = 8.0,
             k_s, k_h = jax.random.split(key)
             p_s = jnp.minimum(9.0 * k * (n ** eps) * ln_n / nr, 1.0)
             p_h = jnp.minimum(4.0 * (n ** eps) * ln_n / nr, 1.0)
-            new_s = jax.random.bernoulli(k_s, p_s, (nr,))
-            h_mask = jax.random.bernoulli(k_h, p_h, (nr,))
+            # counter-based draws, same sampler as repro.core.eim (rows
+            # here are compacted-R positions — a fresh stream per shape)
+            new_s = ops.bernoulli_rows(k_s, 0, nr, p_s)
+            h_mask = ops.bernoulli_rows(k_h, 0, nr, p_h)
             return new_s, h_mask
         @jax.jit
         def update_filter(r_pts, d_s, new_s, h_mask):
@@ -173,8 +175,9 @@ def time_eim(points, k: int, *, eps: float = 0.1, phi: float = 8.0,
         k_s, k_h = jax.random.split(key)
         p_s = jnp.minimum(9.0 * k * (n ** eps) * ln_n / r_size, 1.0)
         p_h = jnp.minimum(4.0 * (n ** eps) * ln_n / r_size, 1.0)
-        new_s = jax.random.bernoulli(k_s, p_s, (n,)) & r_mask
-        h_mask = jax.random.bernoulli(k_h, p_h, (n,)) & r_mask
+        # same counter-based per-row sampler as repro.core.eim
+        new_s = ops.bernoulli_rows(k_s, 0, n, p_s) & r_mask
+        h_mask = ops.bernoulli_rows(k_h, 0, n, p_h) & r_mask
         return new_s, h_mask
 
     @jax.jit

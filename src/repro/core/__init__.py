@@ -6,7 +6,8 @@
                 HostStream (out-of-core super-shards) executors
   mrg.py      — MRG, multi-round MapReduce Gonzalez — one algorithm over
                 any executor (mrg_sim / mrg_distributed kept as wrappers)
-  eim.py      — EIM, φ-parameterized iterative sampling (Ene et al. fixed)
+  eim.py      — EIM, φ-parameterized iterative sampling (Ene et al. fixed;
+                device masks or streamed out-of-core over any executor)
   metrics.py  — covering radius, assignment, brute-force OPT (tests)
   coreset.py  — k-center coreset selection (framework data-curation hook)
 """

@@ -11,24 +11,38 @@ paper's two modifications:
     φ > 5.15 keeps the 10-approximation w.s.p. (paper §6); smaller φ
     trades the guarantee for fewer/cheaper iterations.
 
-TPU/JAX adaptation (DESIGN.md §2): MapReduce's shrinking relations R, S, H
-become **masks over a fixed (n,d) array** — XLA needs static shapes, so
-"remove from R" clears a mask bit and set sizes are mask sums. The
-per-iteration work is O(n · s_new) distance updates, matching the paper's
-Round-3 cost O(|R|·|S_l|/m); everything is data-parallel over n, so under
-pjit the n axis shards across the mesh and each iteration's rounds map
-onto collectives exactly as the MapReduce rounds map onto shuffles.
+Two execution forms share one algorithm (and are **bitwise identical** on
+the ref backend for the same key):
 
-The loop is a ``lax.while_loop`` with the paper's condition
-``|R| > (4/ε)·k·n^ε·log n`` (+ an iteration cap as a safety net; the paper
-proves O(1/ε) iterations w.h.p. and observes ≤ 2 in practice).
+  * **Device fast path** (raw arrays / ``ArraySource``): MapReduce's
+    shrinking relations R, S, H become masks over a fixed (n, d) array —
+    XLA needs static shapes, so "remove from R" clears a mask bit. The
+    loop is a ``lax.while_loop``; per-iteration sampled sets land in
+    fixed-capacity index buffers (expected |S_new| = 9k·n^ε·log n with 3σ
+    Poisson headroom; overflow beyond capacity is dropped and counted —
+    a <1e-6-probability event that only slows convergence).
+  * **Streamed source path** (host / disk / generator sources, or any
+    explicit ``executor=``): the MapReduce-native formulation — R, S, H
+    are host-resident per-point state (O(n) bools/floats, tiny next to the
+    (n, d) points), and every per-iteration pass is a fold over a
+    ``PointSource`` via ``Executor.run_filter_round``, mirroring how
+    ``gonzalez`` streams. The iteration maps onto the paper's rounds:
+    Round 1 (independent sampling) needs *no data pass at all* — the
+    Bernoulli draws are counter-based per global row
+    (``engine.bernoulli_rows``, Philox keyed by absolute row index, so
+    the sampled sets are invariant to blocking, the same trick
+    ``SyntheticSource("unif")`` uses) and the sampled coordinates are
+    fetched by ``source.take``; Rounds 2–3 (Select + filter) are one
+    streamed fold (masked incremental-min ``d(x, S_new)`` through
+    ``assign_nearest`` + a cross-block top-k merge for the φ·log n
+    pivot). The final "send C to one machine" GON round compacts the
+    sample through ``source.take`` — all of n is never device-resident.
 
-Per-iteration sampled sets are materialized into *fixed-capacity* index
-buffers (expected size 9k·n^ε·log n for S-samples, 4·n^ε·log n for H,
-sized with 3σ Poisson headroom). Overflow beyond capacity is dropped and
-counted (``stats.overflow``) — with the default headroom this is a
-<1e-6-probability event, and dropping only *slows* convergence, never
-breaks correctness of the returned sample.
+The loop runs while ``|R| > (4/ε)·k·n^ε·log n`` (+ an iteration cap as a
+safety net; the paper proves O(1/ε) iterations w.h.p. and observes ≤ 2 in
+practice). Both paths evaluate the condition, the sampling probabilities
+and every distance comparison in f32 with identical expressions, which is
+what makes the parity bitwise rather than approximate.
 """
 from __future__ import annotations
 
@@ -38,10 +52,12 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.data.source import as_device_array
-from repro.kernels import ops
+from repro.data.source import ArraySource, as_device_array, as_source, is_source
+from repro.kernels import engine, ops
 
+from .executor import Executor, HostStreamExecutor
 from .gonzalez import covering_radius, gonzalez
 
 _NEG = jnp.float32(-3.4e38)
@@ -49,9 +65,10 @@ _BIG = jnp.float32(3.4e38)
 
 
 class EIMSample(NamedTuple):
-    sample_mask: jnp.ndarray   # (n,) bool — C = S ∪ R_final
+    sample_mask: jnp.ndarray   # (n,) bool — C = S ∪ R_final (numpy on the
+                               #     streamed path: host-resident relations)
     s_mask: jnp.ndarray        # (n,) bool — sampled centers S
-    iters: jnp.ndarray         # ()   int32 — while-loop iterations used
+    iters: jnp.ndarray         # ()   int32 — loop iterations used
     overflow: jnp.ndarray      # ()   int32 — samples dropped by buffer caps
     sampled: jnp.ndarray       # ()   bool  — False => loop never ran (EIM≡GON)
 
@@ -72,6 +89,70 @@ def _expected_caps(n: int, k: int, eps: float, slack: float = 3.0):
     return s_cap, h_cap
 
 
+def _params(n: int, k: int, eps: float, phi: float):
+    """Shared schedule: (ln n, |R| threshold, s_cap, h_cap, pivot rank,
+    S-sample numerator, H-sample numerator)."""
+    ln_n = math.log(max(n, 2))
+    threshold = (4.0 / eps) * k * (n ** eps) * ln_n
+    s_cap, h_cap = _expected_caps(n, k, eps)
+    # Select(): pivot rank φ·log n (>=1), clipped to the H buffer.
+    rank = max(1, min(h_cap, int(round(phi * ln_n))))
+    num_s = 9.0 * k * (n ** eps) * ln_n
+    num_h = 4.0 * (n ** eps) * ln_n
+    return ln_n, threshold, s_cap, h_cap, rank, num_s, num_h
+
+
+def _sample_cap(n: int, k: int, eps: float, s_count: int) -> int:
+    """The §4 bound on the compacted sample: |C| = |R_final| + |S| with
+    |R_final| <= (4/ε)k·n^ε·log n at loop exit."""
+    ln_n = math.log(max(n, 2))
+    return int(min(n, math.ceil((4.0 / eps) * k * (n ** eps) * ln_n)
+                   + s_count))
+
+
+def _check_sample_cap(pop: int, s_count: int, n: int, k: int, eps: float,
+                      max_iters: int) -> None:
+    cap = _sample_cap(n, k, eps, s_count)
+    if pop > cap:
+        raise RuntimeError(
+            f"EIM sample overflow: |C| = {pop} exceeds the paper-§4 bound "
+            f"(4/ε)k·n^ε·log n + |S| = {cap} — the sampling loop hit "
+            f"max_iters={max_iters} before |R| fell under the threshold. "
+            f"Raise max_iters (or φ) instead of truncating the sample.")
+
+
+def _compact_cap(pop: int, n: int) -> int:
+    """Shape-stable gather capacity for the final GON: |C| rounded up to
+    the next power of two (capped at n), so repeated ``eim`` calls re-jit
+    the compact GON only per size bucket, never per exact |C|."""
+    cap = 1
+    while cap < pop:
+        cap <<= 1
+    return min(cap, n)
+
+
+def _compact_gonzalez(pts_np: np.ndarray, pop: int, cap: int, k: int, *,
+                      impl: str, chunk: int | None):
+    """GON over the compacted sample, padded to ``cap`` rows with a
+    validity mask (padding can never be selected or affect the radius —
+    and both EIM paths pick identical centers for identical valid rows)."""
+    d = pts_np.shape[1]
+    if cap > pop:
+        pts_np = np.concatenate(
+            [pts_np, np.zeros((cap - pop, d), np.float32)])
+    valid = np.zeros(cap, bool)
+    valid[:pop] = True
+    return gonzalez(jnp.asarray(pts_np), k, mask=jnp.asarray(valid),
+                    impl=impl, chunk=chunk)
+
+
+# ---------------------------------------------------------------------------
+# public API — dispatch between the device fast path and the streamed loop
+# (raw arrays / ArraySource keep the legacy device path, mirroring ``mrg``'s
+# rule: only an explicit non-device PointSource — or an explicit executor —
+# opts into streaming)
+# ---------------------------------------------------------------------------
+
 def eim_sample(
     points,
     k: int,
@@ -82,24 +163,106 @@ def eim_sample(
     max_iters: int = 64,
     impl: str = "auto",
     chunk: int | None = None,
+    executor: Executor | None = None,
 ) -> EIMSample:
     """Algorithm 2 (EIM-MapReduce-Sample) with the φ-parameterized Select.
 
-    ``points`` may be a ``PointSource``; it is materialized on device —
-    EIM's shrinking relations are masks over a fixed (n,d) array, so the
-    algorithm fundamentally needs random access (out-of-core callers
-    should reach for ``mrg`` with a ``HostStreamExecutor`` instead).
+    ``points`` is anything ``as_source`` accepts. Raw arrays and
+    ``ArraySource`` run the jitted device fast path; host / disk /
+    generator sources (or any call with an explicit ``executor=``) run the
+    streamed out-of-core loop — per-point state on the host, every pass a
+    fold over the source (``HostStreamExecutor`` by default; its
+    ``memory_budget`` bounds device residency). Both paths draw from the
+    same counter-based per-row sampler, so for the same ``key`` the
+    returned sample is bitwise identical on the ref backend regardless of
+    path or blocking.
 
-    ``chunk`` streams the per-iteration (n, s_cap) distance update in
-    row-blocks (kernels/engine.py memory model) — the sample distribution
-    is unchanged: the PRNG stream is identical and, for inputs whose
-    coordinates are far below the 1e18 invalid-slot sentinel, so is every
-    distance the loop compares.
+    ``chunk`` streams the per-iteration distance update in row-blocks
+    (kernels/engine.py memory model) — the sample is unchanged: the PRNG
+    stream is identical and, for inputs whose coordinates are far below
+    the 1e18 invalid-slot sentinel, so is every distance the loop compares.
     """
-    return _eim_sample_device(as_device_array(points), k, key, eps=eps,
-                              phi=phi, max_iters=max_iters, impl=impl,
-                              chunk=chunk)
+    streamed = is_source(points) and not isinstance(points, ArraySource)
+    if not streamed and executor is None:
+        return _eim_sample_device(as_device_array(points), k, key, eps=eps,
+                                  phi=phi, max_iters=max_iters, impl=impl,
+                                  chunk=chunk)
+    source = as_source(points)
+    if executor is None:
+        executor = HostStreamExecutor()
+    return _eim_sample_stream(source, k, key, eps=eps, phi=phi,
+                              max_iters=max_iters, executor=executor,
+                              impl=impl, chunk=chunk)
 
+
+def eim(
+    points,
+    k: int,
+    key: jax.Array,
+    *,
+    eps: float = 0.1,
+    phi: float = 8.0,
+    max_iters: int = 64,
+    impl: str = "auto",
+    chunk: int | None = None,
+    compact: bool = True,
+    executor: Executor | None = None,
+) -> EIMResult:
+    """Full EIM: sample, then run GON on the sample (final MapReduce round).
+
+    With ``compact=True`` the sample is gathered into a dense ``|C|``-row
+    buffer before the final GON — the "send S ∪ R to one machine" round;
+    the final GON then costs O(k·|C|) instead of O(k·n). |C| is checked
+    against the paper's §4 bound ``(4/ε)k·n^ε·log n + |S|`` (with the
+    realized |S|) and a ``RuntimeError`` is raised if the loop failed to
+    converge within ``max_iters`` — never a silent truncation.
+
+    Streamed sources compact through ``source.take`` (random-access
+    gather), so the full (n, d) array is never device-resident; the
+    covering radius is the executor's streamed fold. ``compact=False``
+    (GON over the masked full array) is device-path only.
+    """
+    streamed = is_source(points) and not isinstance(points, ArraySource)
+    if not streamed and executor is None:
+        return _eim_device(points, k, key, eps=eps, phi=phi,
+                           max_iters=max_iters, impl=impl, chunk=chunk,
+                           compact=compact)
+    if not compact:
+        raise ValueError(
+            "compact=False runs GON over the masked full array and needs "
+            "it device-resident; streamed EIM always compacts via "
+            "source.take")
+    source = as_source(points)
+    if executor is None:
+        executor = HostStreamExecutor()
+    sample = _eim_sample_stream(source, k, key, eps=eps, phi=phi,
+                                max_iters=max_iters, executor=executor,
+                                impl=impl, chunk=chunk)
+    idx = np.nonzero(np.asarray(sample.sample_mask))[0]
+    pop = len(idx)
+    _check_sample_cap(pop, int(np.asarray(sample.s_mask).sum()),
+                      source.n, k, eps, max_iters)
+    if pop == source.n:
+        # EIM ≡ GON (the loop never engaged): stream GON over the source
+        # instead of gathering all of n — the out-of-core contract holds
+        # even in the degenerate regime.
+        res = gonzalez(source, k, impl=impl, chunk=chunk,
+                       block_rows=(executor.rows_for(source)
+                                   if hasattr(executor, "rows_for")
+                                   else None))
+    else:
+        # Final round: C is compacted to one machine by random-access
+        # gather — O(|C|) rows move, never the full source.
+        res = _compact_gonzalez(source.take(idx), pop,
+                                _compact_cap(pop, source.n), k,
+                                impl=impl, chunk=chunk)
+    r2 = executor.radius2(source, res.centers, impl=impl, chunk=chunk)
+    return EIMResult(res.centers, r2, sample)
+
+
+# ---------------------------------------------------------------------------
+# device fast path — masks over a fixed (n, d) array, one lax.while_loop
+# ---------------------------------------------------------------------------
 
 @functools.partial(
     jax.jit, static_argnames=("k", "eps", "phi", "max_iters", "impl", "chunk")
@@ -117,26 +280,28 @@ def _eim_sample_device(
 ) -> EIMSample:
     n, d = points.shape
     points = points.astype(jnp.float32)
-    ln_n = math.log(max(n, 2))
-    threshold = (4.0 / eps) * k * (n ** eps) * ln_n
-    s_cap, h_cap = _expected_caps(n, k, eps)
-    # Select(): pivot rank φ·log n (>=1), clipped to the H buffer.
-    rank = max(1, min(h_cap, int(round(phi * ln_n))))
+    _, threshold, s_cap, _, rank, num_s, num_h = _params(n, k, eps, phi)
 
     def cond(state):
         r_mask, s_mask, d_s, key, it, ovf = state
-        return (jnp.sum(r_mask) > threshold) & (it < max_iters)
+        # f32 compare, mirrored exactly by the streamed loop's host check.
+        return ((jnp.sum(r_mask).astype(jnp.float32)
+                 > jnp.float32(threshold)) & (it < max_iters))
 
     def body(state):
         r_mask, s_mask, d_s, key, it, ovf = state
-        key, k_s, k_h = jax.random.split(key, 3)
+        keys = jax.random.split(key, 3)
+        key, k_s, k_h = keys[0], keys[1], keys[2]
         r_size = jnp.sum(r_mask).astype(jnp.float32)
 
         # --- Round 1: independent sampling within R (Alg. 2, lines 3-4) ---
-        p_s = jnp.minimum(9.0 * k * (n ** eps) * ln_n / r_size, 1.0)
-        p_h = jnp.minimum(4.0 * (n ** eps) * ln_n / r_size, 1.0)
-        new_s = jax.random.bernoulli(k_s, p_s, (n,)) & r_mask
-        h_mask = jax.random.bernoulli(k_h, p_h, (n,)) & r_mask
+        # Counter-based draws (Philox over the absolute row index): the
+        # same f32 probabilities and per-row stream as the out-of-core
+        # path, so the two paths sample identical sets.
+        p_s = jnp.minimum(jnp.float32(num_s) / r_size, jnp.float32(1.0))
+        p_h = jnp.minimum(jnp.float32(num_h) / r_size, jnp.float32(1.0))
+        new_s = engine.bernoulli_rows(k_s, 0, n, p_s) & r_mask
+        h_mask = engine.bernoulli_rows(k_h, 0, n, p_h) & r_mask
 
         # Materialize new S members into a fixed buffer (gather indices).
         s_idx = jnp.nonzero(new_s, size=s_cap, fill_value=n)[0]
@@ -183,41 +348,140 @@ def _eim_sample_device(
     return EIMSample(r_mask | s_mask, s_mask, iters, ovf, sampled)
 
 
-def eim(
-    points,
-    k: int,
-    key: jax.Array,
-    *,
-    eps: float = 0.1,
-    phi: float = 8.0,
-    max_iters: int = 64,
-    impl: str = "auto",
-    chunk: int | None = None,
-    compact: bool = True,
-) -> EIMResult:
-    """Full EIM: sample, then run GON on the sample (final MapReduce round).
-
-    ``points`` may be a ``PointSource`` (materialized on device — see
-    ``eim_sample``). With ``compact=True`` the sample is gathered into a
-    dense buffer of static size (the paper's |C| <= (4/ε)k·n^ε·log n + |S|
-    bound) before the final GON — this is the "send S ∪ R to one machine"
-    round; the final GON then costs O(k·|C|) instead of O(k·n).
-    """
+def _eim_device(points, k, key, *, eps, phi, max_iters, impl, chunk,
+                compact):
+    """Device-path eim(): jitted sample + host-side compaction."""
     points = as_device_array(points)
     n, d = points.shape
-    sample = eim_sample(points, k, key, eps=eps, phi=phi,
-                        max_iters=max_iters, impl=impl, chunk=chunk)
+    sample = _eim_sample_device(points, k, key, eps=eps, phi=phi,
+                                max_iters=max_iters, impl=impl, chunk=chunk)
     if compact:
-        ln_n = math.log(max(n, 2))
-        thr = (4.0 / eps) * k * (n ** eps) * ln_n
-        s_cap, _ = _expected_caps(n, k, eps)
-        c_cap = int(min(n, math.ceil(thr) + s_cap * (max_iters // 8 + 1)))
-        idx = jnp.nonzero(sample.sample_mask, size=c_cap, fill_value=n)[0]
-        valid = idx < n
-        pts = jnp.asarray(points, jnp.float32)[jnp.minimum(idx, n - 1)]
-        res = gonzalez(pts, k, mask=valid, impl=impl, chunk=chunk)
+        idx = np.nonzero(np.asarray(sample.sample_mask))[0]
+        pop = len(idx)
+        _check_sample_cap(pop, int(np.asarray(sample.s_mask).sum()),
+                          n, k, eps, max_iters)
+        pts = np.asarray(points[jnp.asarray(idx, jnp.int32)])
+        res = _compact_gonzalez(pts, pop, _compact_cap(pop, n), k,
+                                impl=impl, chunk=chunk)
     else:
-        res = gonzalez(jnp.asarray(points, jnp.float32), k,
-                       mask=sample.sample_mask, impl=impl, chunk=chunk)
+        res = gonzalez(points, k, mask=sample.sample_mask, impl=impl,
+                       chunk=chunk)
     r = covering_radius(points, res.centers, impl=impl, chunk=chunk)
     return EIMResult(res.centers, r * r, sample)
+
+
+# ---------------------------------------------------------------------------
+# streamed source path — host-driven iterations over Executor.run_filter_round
+# ---------------------------------------------------------------------------
+
+def _eim_sample_stream(source, k: int, key, *, eps: float, phi: float,
+                       max_iters: int, executor: Executor,
+                       impl: str = "auto",
+                       chunk: int | None = None) -> EIMSample:
+    """Out-of-core Algorithm 2: the MapReduce-native form.
+
+    Per-point relations live on the host (``r_mask``, ``s_mask`` bools and
+    ``d_s`` f32 — O(n) bytes); the (n, d) points stay wherever the source
+    keeps them. Each iteration is:
+
+      * Round 1 — sampling needs **no pass over the data**: the Bernoulli
+        decision for global row i is a pure function of (iteration key, i)
+        (``engine.bernoulli_rows``), evaluated here in index blocks; only
+        the |S_new| sampled coordinates are fetched, by ``source.take``.
+      * Rounds 2–3 — one streamed fold (``executor.run_filter_round``):
+        the masked incremental-min d(x, S_new) update and the cross-block
+        top-k merge for the φ·log n pivot share the pass; the Round-3
+        filter is then a host mask update.
+
+    Every comparison is evaluated in f32 exactly as the device path's jit
+    traces it, so the two paths return bitwise-identical samples for the
+    same key (any blocking — the sampler is counter-based and min/top-k
+    value folds are blocking-invariant).
+    """
+    if type(executor).run_filter_round is Executor.run_filter_round:
+        # Fail before the loop does any work (MeshExecutor's rounds are a
+        # fused shard_map program without the per-iteration hook).
+        raise NotImplementedError(
+            f"{type(executor).__name__} does not implement EIM's "
+            "run_filter_round; use HostStreamExecutor (streamed) or "
+            "SimExecutor (vmapped machines)")
+    n = source.n
+    _, threshold, s_cap, _, rank, num_s, num_h = _params(n, k, eps, phi)
+    rows = (executor.rows_for(source) if hasattr(executor, "rows_for")
+            else engine.resolve_block_rows(n, source.d))
+
+    r_mask = np.ones(n, bool)
+    s_mask = np.zeros(n, bool)
+    d_s = np.full(n, np.float32(_BIG), np.float32)
+    sampled = bool(n > threshold)
+    try:
+        iters, overflow = _stream_loop(
+            source, executor, jnp.asarray(key), r_mask, s_mask, d_s,
+            threshold, s_cap, rank, num_s, num_h, rows, max_iters,
+            impl, chunk)
+    finally:
+        # Release any per-source state the executor cached across the
+        # filter rounds (e.g. SimExecutor's materialized blocking).
+        executor.end_filter_rounds(source)
+    return EIMSample(r_mask | s_mask, s_mask, np.int32(iters),
+                     np.int32(overflow), sampled)
+
+
+def _stream_loop(source, executor, key, r_mask, s_mask, d_s, threshold,
+                 s_cap, rank, num_s, num_h, rows, max_iters, impl, chunk):
+    """The iteration loop of ``_eim_sample_stream`` (mutates the host
+    relations in place; returns ``(iterations, overflow)``)."""
+    n = source.n
+    overflow = 0
+    it = 0
+    while (np.float32(r_mask.sum()) > np.float32(threshold)
+           and it < max_iters):
+        keys = jax.random.split(key, 3)
+        key, k_s, k_h = keys[0], keys[1], keys[2]
+        r_size = np.float32(r_mask.sum())
+        p_s = np.minimum(np.float32(num_s) / r_size, np.float32(1.0))
+        p_h = np.minimum(np.float32(num_h) / r_size, np.float32(1.0))
+
+        # --- Round 1: counter-based sampling, no data pass --------------
+        new_s = _bernoulli_mask(k_s, n, p_s, rows) & r_mask
+        h_mask = _bernoulli_mask(k_h, n, p_h, rows) & r_mask
+        s_idx = np.nonzero(new_s)[0]
+        # The device path's fixed S-buffer drops samples past s_cap (first-
+        # index-first, a <1e-6 event at the default headroom); replicate
+        # for parity and count the drops. Padding the gathered buffer up to
+        # s_cap with the same far-away sentinel the device path uses keeps
+        # the executor's block kernel one fixed shape across iterations
+        # (padded rows can never win the distance min).
+        overflow += max(0, len(s_idx) - s_cap)
+        if len(s_idx):
+            taken = source.take(s_idx[:s_cap])
+            pad = s_cap - taken.shape[0]
+            s_new = (taken if pad == 0 else np.concatenate(
+                [taken, np.full((pad, taken.shape[1]), 1e18, np.float32)]))
+        else:
+            s_new = None
+        s_mask |= new_s
+        # Termination fix (paper §4.1): sampled points always leave R.
+        r_mask &= ~new_s
+
+        # --- Rounds 2-3: streamed d(x,S) update + pivot Select ----------
+        d_s, pivot = executor.run_filter_round(source, s_new, d_s, h_mask,
+                                               rank, impl=impl, chunk=chunk)
+        r_mask &= ~(d_s <= pivot)
+        it += 1
+
+    return it, overflow
+
+
+def _bernoulli_mask(key, n: int, p: np.float32, rows: int) -> np.ndarray:
+    """(n,) host bool mask of per-global-row Bernoulli(p) draws, generated
+    in ``rows``-sized index blocks (the mask is O(n) bits on the host; the
+    device working set is O(rows))."""
+    parts = []
+    for start in range(0, n, rows):
+        parts.append(np.asarray(engine.bernoulli_rows_block(
+            key, np.uint32(start & 0xFFFFFFFF),
+            np.uint32((start >> 32) & 0xFFFFFFFF),
+            min(rows, n - start), np.float32(p))))
+    return (np.concatenate(parts) if parts
+            else np.zeros((0,), bool))

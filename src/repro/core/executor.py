@@ -38,10 +38,22 @@ Interface (paper correspondence in brackets):
     tiny final instance instead of idling).
 
 ``HostStreamExecutor`` is the out-of-core form: round 1 is a sequential
-fold over super-shards DMA'd from a ``HostSource``/``MemmapSource`` (double
-buffered, see data/source.py), so ``mrg`` completes at n bounded by host
-RAM or disk — the ROADMAP's "out-of-core input" step. Its ``memory_budget``
-is the paper's machine capacity ``c`` in bytes.
+fold over super-shards DMA'd from a ``HostSource``/``MemmapSource``
+(prefetch-ring buffered, see data/source.py), so ``mrg`` completes at n
+bounded by host RAM or disk — the ROADMAP's "out-of-core input" step. Its
+``memory_budget`` is the paper's machine capacity ``c`` in bytes.
+
+Beyond MRG, executors own one more per-iteration primitive:
+``run_filter_round`` — EIM's MapReduce Rounds 2–3 (paper §4, Algorithm 2):
+update the host-resident ``d(x, S)`` state against the newly sampled
+centers and reduce the φ·log n-th-farthest pivot (Algorithm 3's Select) in
+the same pass. ``HostStreamExecutor`` executes it as a streamed fold under
+``memory_budget`` (the per-block top-k's merge exactly — see
+``engine.merge_top_k``); ``SimExecutor`` keeps the vmapped-machines
+simulation (per-machine update + per-machine top-k, merged like the
+MapReduce shuffle would). Both produce bitwise-identical ``d_s`` and pivot
+for the same inputs on the ref backend — value reductions (min, top-k
+values) are blocking-invariant.
 
 jax version note: the mesh path is built on ``repro.compat.shard_map`` and
 runs unchanged on jax 0.4.x and 0.6+.
@@ -49,10 +61,12 @@ runs unchanged on jax 0.4.x and 0.6+.
 from __future__ import annotations
 
 import functools
+import weakref
 from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
@@ -63,6 +77,41 @@ from repro.kernels import engine, ops
 from .gonzalez import covering_radius, gonzalez
 
 BlockFn = Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]
+
+_NEG = jnp.float32(-3.4e38)   # Select's invalid-slot sentinel (matches eim)
+_BIG = jnp.float32(3.4e38)
+
+
+@functools.partial(jax.jit, static_argnames=("rank", "impl", "chunk"))
+def _eim_filter_block(blk, c, d_blk, h_blk, top, *, rank, impl, chunk):
+    """One super-shard's share of EIM Rounds 2–3, fused: incremental-min
+    d(x, S_new) update + this block's contribution to Select's top-k.
+    ``c`` is the fixed-capacity S_new buffer (far-sentinel padded, so one
+    compilation serves every iteration)."""
+    _, d_new = ops.assign_nearest(blk, c, impl=impl, chunk=chunk)
+    d_blk = jnp.minimum(d_blk, d_new)
+    cand = jnp.where(h_blk, d_blk, _NEG)
+    return d_blk, engine.merge_top_k(top, cand, rank)
+
+
+@functools.partial(jax.jit, static_argnames=("rank",))
+def _eim_pivot_block(d_blk, h_blk, top, *, rank):
+    """Pivot-only block step for a zero-sample iteration (the distance
+    state must stay bit-for-bit untouched, like the device path's
+    ``any(s_valid)`` gate)."""
+    cand = jnp.where(h_blk, d_blk, _NEG)
+    return engine.merge_top_k(top, cand, rank)
+
+
+def _pivot_from_top(top: jnp.ndarray, rank: int) -> np.float32:
+    """Algorithm 3's pivot from a merged descending top-``rank``: the
+    rank-th largest d(·,S)^2, or -1.0 when fewer than ``rank`` valid points
+    existed (sentinel slots survive the merge) — no distance-based removals
+    that iteration, exactly the device path's ``where(pivot <= _NEG/2)``."""
+    pivot = np.float32(np.asarray(top)[rank - 1])
+    if pivot <= np.float32(_NEG) / 2:
+        return np.float32(-1.0)
+    return pivot
 
 
 @functools.lru_cache(maxsize=None)
@@ -157,6 +206,35 @@ class Executor:
                                         chunk=chunk))
         return r * r
 
+    def run_filter_round(self, source, s_new, d_s: np.ndarray,
+                         h_mask: np.ndarray, rank: int, *,
+                         impl: str = "auto", chunk: int | None = None):
+        """One EIM iteration's Rounds 2–3 over this executor's machines.
+
+        ``s_new`` is the iteration's newly sampled centers ``(m_new, d)``
+        (host numpy, possibly padded with far-away ``1e18`` sentinel rows
+        to a fixed capacity — padding can never win the distance min;
+        ``None``/empty for a zero-sample iteration — the distance state is
+        then left untouched, like the device path's ``any(s_valid)``
+        gate). ``d_s (n,) f32`` and ``h_mask (n,) bool`` are host-resident
+        per-point state. Updates ``d_s`` in place to
+        ``min(d_s, d(x, S_new)^2)`` (paper §4 Round 3's incremental
+        update) and reduces Select's pivot — the ``rank``-th largest
+        updated ``d_s`` over H (Round 2) — in the same pass.
+
+        Returns ``(d_s, pivot)`` with ``pivot`` an np.float32 (−1.0 when H
+        held fewer than ``rank`` points).
+        """
+        raise NotImplementedError(
+            f"{type(self).__name__} does not implement EIM's "
+            "run_filter_round; use HostStreamExecutor (streamed) or "
+            "SimExecutor (vmapped machines)")
+
+    def end_filter_rounds(self, source) -> None:
+        """Called once when an EIM run's iteration loop finishes — the
+        hook for executors to release any per-source state they cached
+        across ``run_filter_round`` calls. Default: nothing to release."""
+
     def mrg(self, source, k: int, *, capacity: int | None = None,
             impl: str = "auto", chunk: int | None = None):
         """Full MRG on this executor. Returns ``(centers, radius2, rounds)``."""
@@ -196,32 +274,93 @@ class SimExecutor(Executor):
                             chunk=chunk)
         return r * r
 
+    def _blocked_for(self, source):
+        """Materialize + block once per source object (EIM calls the
+        filter round every iteration with the same source; the points
+        never change across iterations). Weakref-keyed so a different
+        source object can never hit a stale cache, and released by
+        ``end_filter_rounds`` so the blocked copy does not outlive the
+        run. Un-weakref-able inputs are simply not cached."""
+        cache = getattr(self, "_eim_blocked_cache", None)
+        if cache is not None and cache[0]() is source:
+            return cache[1]
+        x = as_source(source).materialize()
+        blocked, _ = _block(x, self.m)
+        try:
+            self._eim_blocked_cache = (weakref.ref(source),
+                                       (x.shape[0], blocked))
+        except TypeError:
+            pass
+        return x.shape[0], blocked
+
+    def end_filter_rounds(self, source) -> None:
+        self._eim_blocked_cache = None
+
+    def run_filter_round(self, source, s_new, d_s, h_mask, rank, *,
+                         impl="auto", chunk=None):
+        """Vmapped-machines EIM round: each of the m blocks updates its
+        slice of d(x,S) against S_new and emits a per-machine top-k; the
+        host merge of those tops is the simulated shuffle."""
+        n, blocked = self._blocked_for(source)              # (m, per, d)
+        m, per = blocked.shape[0], blocked.shape[1]
+        pad = m * per - n
+        # Padded rows: _BIG distance but H=False, so they can't enter the
+        # pivot top-k and their d_s is dropped on the un-pad below.
+        d_b = jnp.pad(jnp.asarray(d_s), (0, pad),
+                      constant_values=_BIG).reshape(m, per)
+        h_b = jnp.pad(jnp.asarray(h_mask), (0, pad),
+                      constant_values=False).reshape(m, per)
+        have_s = s_new is not None and len(s_new) > 0
+        if have_s:
+            c = jnp.asarray(np.asarray(s_new, np.float32))
+
+            def update(pts, dvec):
+                _, dn = ops.assign_nearest(pts, c, impl=impl, chunk=chunk)
+                return jnp.minimum(dvec, dn)
+
+            d_b = jax.vmap(update)(blocked, d_b)
+            d_s[:] = np.asarray(d_b.reshape(-1)[:n])
+        cand = jnp.where(h_b, d_b, _NEG)
+        r = min(rank, per)
+        tops = jax.vmap(lambda v: jax.lax.top_k(v, r)[0])(cand)  # (m, r)
+        top = jax.lax.top_k(tops.reshape(-1), rank)[0]
+        return d_s, _pivot_from_top(top, rank)
+
 
 class HostStreamExecutor(Executor):
     """Out-of-core machines: sequential super-shards DMA'd from the source.
 
-    Round 1 is a host-driven fold — each super-shard is uploaded (double
-    buffered), reduced to k centers by GON, and discarded; at most two
-    shards (the consumed one plus the prefetched one) and the accumulated
-    union are device-resident. ``memory_budget`` (bytes) bounds both shards
-    via the engine's ``2·4·rows·(d+1)`` model — the paper's machine
-    capacity ``c``; ``block_rows`` sets the shard size directly.
+    Round 1 is a host-driven fold — each super-shard is uploaded (through
+    the source's prefetch ring), reduced to k centers by GON, and
+    discarded; at most ``1 + prefetch`` shards (the consumed one plus the
+    in-flight ring) and the accumulated union are device-resident.
+    ``memory_budget`` (bytes) bounds all of them via the engine's
+    ``(1+prefetch)·4·rows·(d+1)`` model — the paper's machine capacity
+    ``c``; ``block_rows`` sets the shard size directly.
     """
 
     def __init__(self, block_rows: int | None = None,
-                 memory_budget: int | None = None):
+                 memory_budget: int | None = None,
+                 prefetch: int = engine.DEFAULT_PREFETCH):
         self.block_rows = block_rows
         self.memory_budget = memory_budget
+        if prefetch < 1:
+            raise ValueError(f"prefetch must be >= 1, got {prefetch}")
+        self.prefetch = prefetch
 
     def rows_for(self, source) -> int:
         return engine.resolve_block_rows(source.n, source.d,
                                          block_rows=self.block_rows,
-                                         memory_budget=self.memory_budget)
+                                         memory_budget=self.memory_budget,
+                                         prefetch=self.prefetch)
+
+    def _blocks(self, source, rows: int):
+        return engine._source_blocks(source, rows, self.prefetch)
 
     def run_blocks(self, fn: BlockFn, source):
         rows = self.rows_for(source)
         outs = []
-        for blk in source.blocks(rows):
+        for blk in self._blocks(source, rows):
             mask = jnp.ones((blk.shape[0],), bool)
             outs.append(fn(blk, mask))                     # (k, d) each
         centers = jnp.concatenate(outs, axis=0)            # (M*k, d)
@@ -234,8 +373,37 @@ class HostStreamExecutor(Executor):
     def radius2(self, source, centers, *, impl="auto", chunk=None):
         r = jnp.sqrt(engine.fold_min_d2(source, centers, impl=impl,
                                         chunk=chunk,
-                                        block_rows=self.rows_for(source)))
+                                        block_rows=self.rows_for(source),
+                                        prefetch=self.prefetch))
         return r * r
+
+    def run_filter_round(self, source, s_new, d_s, h_mask, rank, *,
+                         impl="auto", chunk=None):
+        """EIM Rounds 2–3 as one out-of-core fold: each super-shard's
+        d(x, S_new) update and its contribution to Select's top-k happen
+        while the shard is device-resident; only the shard, S_new, and the
+        (rank,)-sized running top-k occupy the device. The per-point state
+        (d_s, h_mask) stays host-resident — O(n) bytes next to the (n, d)
+        points that never materialize."""
+        rows = self.rows_for(source)
+        have_s = s_new is not None and len(s_new) > 0
+        if have_s:
+            c = jnp.asarray(np.asarray(s_new, np.float32))
+        top = engine.top_k_init(rank)
+        off = 0
+        for blk in self._blocks(source, rows):
+            nb = blk.shape[0]
+            d_blk = jnp.asarray(d_s[off:off + nb])
+            h_blk = jnp.asarray(h_mask[off:off + nb])
+            if have_s:
+                d_blk, top = _eim_filter_block(blk, c, d_blk, h_blk, top,
+                                               rank=rank, impl=impl,
+                                               chunk=chunk)
+                d_s[off:off + nb] = np.asarray(d_blk)
+            else:
+                top = _eim_pivot_block(d_blk, h_blk, top, rank=rank)
+            off += nb
+        return d_s, _pivot_from_top(top, rank)
 
 
 class MeshExecutor(Executor):

@@ -31,14 +31,20 @@ Sources:
 ``blocks(block_rows)`` yields float32 device arrays of shape
 ``(<= block_rows, d)`` covering rows ``[0, n)`` in order; it may be called
 any number of times (each call restarts the stream — memmaps re-read,
-generators regenerate deterministically). Because of the double buffering,
-up to *two* blocks are device-resident at once — the engine's
-``resolve_block_rows`` budget model accounts for both. Host-backed sources
-also expose ``host_blocks(block_rows)`` yielding numpy blocks with no
-device transfer at all, for consumers whose fold runs on the host (e.g.
-the streaming doubling sketch), and every built-in source provides
-``row(idx)`` — host-side random access to one row (the streamed GON's
-first-center fetch).
+generators regenerate deterministically). Host-backed sources upload
+through a small device-side *prefetch ring* (``prefetch=2`` by default):
+up to ``prefetch`` blocks' DMAs are in flight ahead of the consumed one,
+so at the peak ``1 + prefetch`` blocks are device-resident — the engine's
+``resolve_block_rows`` residency model ``(1+prefetch)·4·rows·(d+1)``
+accounts for all of them. ``prefetch=1`` recovers the old double buffer.
+Host-backed sources also expose ``host_blocks(block_rows)`` yielding numpy
+blocks with no device transfer at all, for consumers whose fold runs on
+the host (e.g. the streaming doubling sketch). Every built-in source
+provides ``row(idx)`` — host-side random access to one row (the streamed
+GON's first-center fetch) — and ``take(indices)`` — a host-side gather of
+arbitrary rows (Memmap/Host index cheaply; Synthetic regenerates the
+containing runs), which is how the streamed EIM compacts its sample ("send
+C to one machine", paper §4 final round) without ever uploading all of n.
 
 Determinism: ``synthetic_source("unif", ...)`` reproduces ``pointsets.unif``
 *bitwise* for any blocking (the Philox counter is advanced to the block's
@@ -50,11 +56,17 @@ distribution-identical, not bitwise-identical, to the monolithic call.
 from __future__ import annotations
 
 import os
+from collections import deque
 from typing import Callable, Iterator, Protocol, Sequence, runtime_checkable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+# The single home of the ring-depth default is the engine's residency
+# model (kernels/engine.py imports nothing from repro.data, so this
+# direction is cycle-free).
+from repro.kernels.engine import DEFAULT_PREFETCH  # noqa: F401
 
 from . import pointsets
 
@@ -101,19 +113,41 @@ def _check_rows(block_rows: int) -> int:
     return int(block_rows)
 
 
-def _stream_device(host_blocks: Iterator[np.ndarray]) -> Iterator[jnp.ndarray]:
-    """Double-buffered host→device upload: enqueue block i+1's transfer
-    (``device_put`` is asynchronous) before yielding block i, so DMA
-    overlaps the consumer's compute on the previous block."""
+def _stream_device(host_blocks: Iterator[np.ndarray],
+                   prefetch: int = DEFAULT_PREFETCH) -> Iterator[jnp.ndarray]:
+    """Ring-buffered host→device upload: keep up to ``prefetch`` blocks'
+    transfers in flight ahead of the consumed one (``device_put`` is
+    asynchronous), so DMA overlaps the consumer's compute across several
+    blocks of lookahead. At the moment a block is yielded, it plus the
+    ``prefetch`` ring slots are device-resident — the ``(1+prefetch)``
+    residency model of ``engine.resolve_block_rows``. ``prefetch=1`` is
+    the classic double buffer."""
+    if prefetch < 1:
+        raise ValueError(f"prefetch must be >= 1, got {prefetch}")
     it = iter(host_blocks)
-    try:
-        nxt = jax.device_put(next(it))
-    except StopIteration:
-        return
-    for blk in it:
-        cur, nxt = nxt, jax.device_put(blk)
+    ring: deque = deque()
+
+    def fill() -> None:
+        while len(ring) < prefetch:
+            try:
+                ring.append(jax.device_put(next(it)))
+            except StopIteration:
+                return
+
+    fill()
+    while ring:
+        cur = ring.popleft()
+        fill()          # top the ring back up before handing over control
         yield cur
-    yield nxt
+
+
+def _check_take_indices(indices, n: int) -> np.ndarray:
+    idx = np.asarray(indices, np.int64).reshape(-1)
+    if idx.size and (idx.min() < 0 or idx.max() >= n):
+        raise IndexError(
+            f"take indices out of range [0, {n}): "
+            f"min={idx.min()}, max={idx.max()}")
+    return idx
 
 
 class ArraySource:
@@ -132,13 +166,21 @@ class ArraySource:
     def d(self) -> int:
         return self._x.shape[1]
 
-    def blocks(self, block_rows: int) -> Iterator[jnp.ndarray]:
+    def blocks(self, block_rows: int, *,
+               prefetch: int = DEFAULT_PREFETCH) -> Iterator[jnp.ndarray]:
+        del prefetch  # already device-resident: slicing is zero-copy
         rows = _check_rows(block_rows)
         for start in range(0, self.n, rows):
             yield self._x[start:start + rows]
 
     def row(self, idx: int) -> np.ndarray:
         return np.asarray(self._x[idx])
+
+    def take(self, indices) -> np.ndarray:
+        """Gather rows ``indices`` (host numpy result, device-side gather)."""
+        idx = _check_take_indices(indices, self.n)
+        return np.asarray(jnp.take(self._x, jnp.asarray(idx, jnp.int32),
+                                   axis=0))
 
     def materialize(self) -> jnp.ndarray:
         return self._x
@@ -166,11 +208,16 @@ class HostSource:
         for start in range(0, self.n, rows):
             yield self._x[start:start + rows]
 
-    def blocks(self, block_rows: int) -> Iterator[jnp.ndarray]:
-        return _stream_device(self.host_blocks(block_rows))
+    def blocks(self, block_rows: int, *,
+               prefetch: int = DEFAULT_PREFETCH) -> Iterator[jnp.ndarray]:
+        return _stream_device(self.host_blocks(block_rows), prefetch)
 
     def row(self, idx: int) -> np.ndarray:
         return self._x[idx]
+
+    def take(self, indices) -> np.ndarray:
+        """Gather rows ``indices`` — a plain numpy fancy index."""
+        return self._x[_check_take_indices(indices, self.n)]
 
     def materialize(self) -> jnp.ndarray:
         return jnp.asarray(self._x)
@@ -229,11 +276,25 @@ class MemmapSource:
     def num_shards(self) -> int:
         return len(self._paths)
 
-    def blocks(self, block_rows: int) -> Iterator[jnp.ndarray]:
-        return _stream_device(self.host_blocks(block_rows))
+    def blocks(self, block_rows: int, *,
+               prefetch: int = DEFAULT_PREFETCH) -> Iterator[jnp.ndarray]:
+        return _stream_device(self.host_blocks(block_rows), prefetch)
 
     def row(self, idx: int) -> np.ndarray:
         return self._slice(idx, idx + 1)[0]
+
+    def take(self, indices) -> np.ndarray:
+        """Gather rows ``indices`` across shards — each shard is fancy-
+        indexed once with its share of the (order-preserved) indices, so
+        the cost is O(|indices|) reads, never a shard scan."""
+        idx = _check_take_indices(indices, self.n)
+        out = np.empty((idx.size, self.d), np.float32)
+        shard = np.searchsorted(self._offsets, idx, side="right") - 1
+        for s in np.unique(shard):
+            sel = shard == s
+            out[sel] = np.asarray(
+                self._maps[s][idx[sel] - self._offsets[s]], np.float32)
+        return out
 
     def materialize(self) -> jnp.ndarray:
         return jnp.asarray(self._slice(0, self.n))
@@ -286,11 +347,28 @@ class SyntheticSource:
                              np.float32)
             yield blk
 
-    def blocks(self, block_rows: int) -> Iterator[jnp.ndarray]:
-        return _stream_device(self.host_blocks(block_rows))
+    def blocks(self, block_rows: int, *,
+               prefetch: int = DEFAULT_PREFETCH) -> Iterator[jnp.ndarray]:
+        return _stream_device(self.host_blocks(block_rows), prefetch)
 
     def row(self, idx: int) -> np.ndarray:
         return np.asarray(self._fn(idx, 1), np.float32)[0]
+
+    def take(self, indices) -> np.ndarray:
+        """Gather rows ``indices`` by regeneration: each maximal run of
+        consecutive indices costs one ``block_fn`` call (EIM's sampled
+        index sets arrive sorted, so runs are common)."""
+        idx = _check_take_indices(indices, self.n)
+        out = np.empty((idx.size, self._d), np.float32)
+        i = 0
+        while i < idx.size:
+            j = i + 1
+            while j < idx.size and idx[j] == idx[j - 1] + 1:
+                j += 1
+            out[i:j] = np.asarray(self._fn(int(idx[i]), int(j - i)),
+                                  np.float32)
+            i = j
+        return out
 
     def materialize(self) -> jnp.ndarray:
         return jnp.concatenate(

@@ -32,6 +32,8 @@ in ``repro.compat``).
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
@@ -46,6 +48,7 @@ from .pairwise import DEFAULT_BN as _P_BN
 from .pairwise import pairwise_dist2 as _pairwise_pallas
 
 _BIG = jnp.float32(3.4e38)
+_NEG = jnp.float32(-3.4e38)
 
 
 # ---------------------------------------------------------------------------
@@ -276,15 +279,149 @@ def argmin_dist2_over_rows(x, c, *, impl: str = "auto",
 
 
 # ---------------------------------------------------------------------------
+# counter-based per-row sampling — Philox-4x32-10 keyed by absolute row index
+#
+# EIM's Round-1 Bernoulli draws must be *blocking-invariant*: the streamed
+# out-of-core path sees the input in super-shards, and the decision for
+# global row i may not depend on which shard i landed in (the same trick
+# ``SyntheticSource("unif")`` uses with numpy's Philox counter advance).
+# ``jax.random.bernoulli`` can't give that — its counters are positions in
+# one fixed-shape draw — so this is a counter-based generator whose only
+# inputs are (key, absolute row index). Pure uint32 jnp (16-bit limb
+# multiplies, no uint64), so it runs identically with JAX_ENABLE_X64 off,
+# on any backend, traced or eager — the device fast path and the host-
+# driven stream produce bitwise-identical samples.
+# ---------------------------------------------------------------------------
+
+_PHILOX_M0 = jnp.uint32(0xD2511F53)
+_PHILOX_M1 = jnp.uint32(0xCD9E8D57)
+_PHILOX_W0 = jnp.uint32(0x9E3779B9)
+_PHILOX_W1 = jnp.uint32(0xBB67AE85)
+
+
+def _mulhilo32(a, b):
+    """Full 32x32 -> 64 multiply as (hi, lo) uint32 words, via 16-bit limbs
+    (jnp uint64 needs x64 mode; uint32 arithmetic wraps mod 2^32)."""
+    a_lo, a_hi = a & 0xFFFF, a >> 16
+    b_lo, b_hi = b & 0xFFFF, b >> 16
+    lo = a * b
+    t = a_hi * b_lo + ((a_lo * b_lo) >> 16)        # < 2^32, no wrap
+    u = (t & 0xFFFF) + a_lo * b_hi                 # < 2^32, no wrap
+    hi = a_hi * b_hi + (t >> 16) + (u >> 16)
+    return hi, lo
+
+
+def _philox_rows(k0, k1, c0, c1):
+    """One Philox-4x32-10 output word per counter (c0 = row lo, c1 = row hi)."""
+    x0, x1 = c0, c1
+    x2 = jnp.zeros_like(c0)
+    x3 = jnp.zeros_like(c0)
+    for _ in range(10):
+        hi0, lo0 = _mulhilo32(_PHILOX_M0, x0)
+        hi1, lo1 = _mulhilo32(_PHILOX_M1, x2)
+        x0, x1, x2, x3 = hi1 ^ x1 ^ k0, lo1, hi0 ^ x3 ^ k1, lo0
+        k0 = k0 + _PHILOX_W0
+        k1 = k1 + _PHILOX_W1
+    return x0
+
+
+def _key_words(key):
+    """Two uint32 key words from a jax PRNG key (legacy or typed) or a raw
+    (2,) uint32 array."""
+    key = jnp.asarray(key) if not isinstance(key, jnp.ndarray) else key
+    if key.dtype != jnp.uint32:
+        key = jax.random.key_data(key)
+    key = key.reshape(-1)
+    return key[0], key[1]
+
+
+def _uniform_rows_words(k0, k1, lo, hi, rows: int) -> jnp.ndarray:
+    """``uniform_rows`` with the 64-bit start pre-split into uint32 words
+    (``lo``/``hi`` may be traced — jit callers pass them as operands so one
+    compilation serves every block offset)."""
+    c0 = lo + jnp.arange(rows, dtype=jnp.uint32)
+    carry = (c0 < lo).astype(jnp.uint32)
+    c1 = hi + carry
+    bits = _philox_rows(k0, k1, c0, c1)
+    # 24 high-entropy bits -> f32 in [0, 1): exact scale, matches the
+    # resolution jax.random.uniform uses for f32.
+    return (bits >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(2.0 ** -24)
+
+
+def uniform_rows(key, start: int, rows: int) -> jnp.ndarray:
+    """Counter-based U[0,1) for absolute rows ``[start, start + rows)``.
+
+    Row i's value depends only on ``(key, i)`` — never on ``start``'s
+    blocking — so concatenating per-block calls over any partition of
+    ``[0, n)`` is bitwise identical to one full-range call. ``start`` is a
+    host int (the 64-bit row index is split into uint32 counter words with
+    an explicit carry, so blocks may cross the 2^32 row boundary).
+    """
+    if rows < 0:
+        raise ValueError(f"rows must be >= 0, got {rows}")
+    k0, k1 = _key_words(key)
+    return _uniform_rows_words(k0, k1, jnp.uint32(start & 0xFFFFFFFF),
+                               jnp.uint32((start >> 32) & 0xFFFFFFFF), rows)
+
+
+def bernoulli_rows(key, start: int, rows: int, p) -> jnp.ndarray:
+    """Per-global-row Bernoulli(p) draws for rows ``[start, start + rows)``
+    — ``uniform_rows(key, start, rows) < p`` in f32, so callers on the
+    device fast path and the streamed path agree bitwise as long as they
+    feed the same f32 ``p``."""
+    return uniform_rows(key, start, rows) < jnp.asarray(p, jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("rows",))
+def bernoulli_rows_block(key, start_lo, start_hi, rows: int, p):
+    """Jitted ``bernoulli_rows`` for host-driven block loops: the 64-bit
+    block start arrives pre-split into two uint32 *operands* (``start_lo``,
+    ``start_hi``), so one compilation serves every block offset — the form
+    the streamed EIM's per-iteration mask generation uses."""
+    k0, k1 = _key_words(key)
+    u = _uniform_rows_words(k0, k1, start_lo, start_hi, rows)
+    return u < jnp.asarray(p, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# streamed top-k merge — EIM's Round-2 Select pivot as a cross-block fold
+# ---------------------------------------------------------------------------
+
+def top_k_init(k: int) -> jnp.ndarray:
+    """Identity carry for ``merge_top_k``: k slots at the -inf sentinel."""
+    return jnp.full((k,), _NEG)
+
+
+def merge_top_k(carry: jnp.ndarray, vals: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Fold step: merge a block's values into a running descending top-k.
+
+    Top-k *values* of a multiset are blocking-invariant (unlike arg-
+    reductions, no tie-break subtlety), so folding per-block top-k's equals
+    the monolithic ``lax.top_k`` over the concatenation bitwise.
+    """
+    return jax.lax.top_k(jnp.concatenate([carry, vals.reshape(-1)]), k)[0]
+
+
+def fold_top_k(value_blocks, k: int) -> jnp.ndarray:
+    """Top-k values over an iterable of value blocks (descending, padded
+    with the -inf sentinel when fewer than k values exist)."""
+    top = top_k_init(k)
+    for v in value_blocks:
+        top = merge_top_k(top, jnp.asarray(v), k)
+    return top
+
+
+# ---------------------------------------------------------------------------
 # source folds — streamed ops over a PointSource
 #
 # A "source" here is duck-typed: anything with ``n``, ``d`` and
 # ``blocks(block_rows)`` yielding (<= block_rows, d) float32 device arrays
 # covering the rows in order (see repro/data/source.py). These folds are the
 # shared entry points the executors (repro/core/executor.py) and the
-# source-aware algorithm layer build on: at most two super-shards of the
-# input (double-buffered DMA) are ever device-resident, so n is bounded by
-# host RAM / disk, not HBM.
+# source-aware algorithm layer build on: at most ``1 + prefetch``
+# super-shards of the input (the consumed block plus the device-side
+# prefetch ring) are ever device-resident, so n is bounded by host RAM /
+# disk, not HBM.
 #
 # Two nested capacity knobs exist by design: ``block_rows``/``memory_budget``
 # bounds the resident *input block* (this layer), while ``chunk`` bounds the
@@ -293,37 +430,57 @@ def argmin_dist2_over_rows(x, c, *, impl: str = "auto",
 # ---------------------------------------------------------------------------
 
 DEFAULT_BLOCK_ROWS = 1 << 16
+# Default lookahead depth of the sources' device-side prefetch ring (the
+# single home of the constant — repro/data/source.py imports it); at the
+# peak 1 + DEFAULT_PREFETCH blocks are device-resident.
+DEFAULT_PREFETCH = 2
 
 
 def resolve_block_rows(n: int, d: int, *, block_rows: int | None = None,
                        memory_budget: int | None = None,
-                       default: int = DEFAULT_BLOCK_ROWS) -> int:
+                       default: int = DEFAULT_BLOCK_ROWS,
+                       prefetch: int = DEFAULT_PREFETCH) -> int:
     """Super-shard size for streaming an ``(n, d)`` source.
 
     Explicit ``block_rows`` wins (clipped to ``[1, n]``). Otherwise a
     ``memory_budget`` in bytes is solved against the f32 residency model
-    ``2 · 4·rows·(d + 1)`` — *two* blocks coexist under the sources'
-    double-buffered DMA (the consumed block plus the prefetched one), each
-    with one per-row reduction carry. Falls back to ``DEFAULT_BLOCK_ROWS``.
+    ``(1 + prefetch) · 4·rows·(d + 1)`` — the consumed block plus up to
+    ``prefetch`` in-flight blocks coexist under the sources' device-side
+    prefetch ring, each with one per-row reduction carry. Falls back to
+    ``DEFAULT_BLOCK_ROWS``.
     """
     if block_rows is not None:
         if block_rows < 1:
             raise ValueError(f"block_rows must be >= 1, got {block_rows}")
         return min(int(block_rows), max(n, 1))
+    if prefetch < 1:
+        raise ValueError(f"prefetch must be >= 1, got {prefetch}")
     if memory_budget is not None:
-        rows = memory_budget // (8 * (d + 1))
+        rows = memory_budget // (4 * (1 + prefetch) * (d + 1))
         if rows < 1:
             raise ValueError(
                 f"memory_budget={memory_budget} cannot hold even one "
-                f"{d}-dim row per buffer ({8 * (d + 1)} bytes/row "
-                f"double-buffered)")
+                f"{d}-dim row per buffer ({4 * (1 + prefetch) * (d + 1)} "
+                f"bytes/row across {1 + prefetch} ring slots)")
         return min(int(rows), max(n, 1))
     return min(default, max(n, 1))
 
 
+def _source_blocks(source, rows: int, prefetch: int | None):
+    """``source.blocks(rows)``, forwarding ``prefetch`` when the source
+    supports the keyword (the protocol only requires ``blocks(rows)``)."""
+    if prefetch is not None:
+        try:
+            return source.blocks(rows, prefetch=prefetch)
+        except TypeError:
+            pass
+    return source.blocks(rows)
+
+
 def fold_min_d2(source, c, *, impl: str = "auto", chunk: int | None = None,
                 block_rows: int | None = None,
-                memory_budget: int | None = None) -> jnp.ndarray:
+                memory_budget: int | None = None,
+                prefetch: int | None = None) -> jnp.ndarray:
     """Max over all source points of the min squared distance to ``c`` —
     the squared covering radius, as a streamed fold.
 
@@ -332,9 +489,10 @@ def fold_min_d2(source, c, *, impl: str = "auto", chunk: int | None = None,
     ``max(assign_nearest(x, c)[1])`` for any blocking.
     """
     rows = resolve_block_rows(source.n, source.d, block_rows=block_rows,
-                              memory_budget=memory_budget)
+                              memory_budget=memory_budget,
+                              prefetch=prefetch or DEFAULT_PREFETCH)
     best = None
-    for blk in source.blocks(rows):
+    for blk in _source_blocks(source, rows, prefetch):
         _, d2 = assign_nearest(blk, c, impl=impl, chunk=chunk)
         bmax = jnp.max(d2)
         best = bmax if best is None else jnp.maximum(best, bmax)
@@ -346,7 +504,8 @@ def fold_min_d2(source, c, *, impl: str = "auto", chunk: int | None = None,
 def assign_nearest_source(source, c, *, impl: str = "auto",
                           chunk: int | None = None,
                           block_rows: int | None = None,
-                          memory_budget: int | None = None):
+                          memory_budget: int | None = None,
+                          prefetch: int | None = None):
     """Streaming nearest-center assignment over a source.
 
     Yields ``(idx (rows,) i32, d2 (rows,))`` per block, in row order —
@@ -355,15 +514,17 @@ def assign_nearest_source(source, c, *, impl: str = "auto",
     ``assign_nearest`` output bitwise.
     """
     rows = resolve_block_rows(source.n, source.d, block_rows=block_rows,
-                              memory_budget=memory_budget)
-    for blk in source.blocks(rows):
+                              memory_budget=memory_budget,
+                              prefetch=prefetch or DEFAULT_PREFETCH)
+    for blk in _source_blocks(source, rows, prefetch):
         yield assign_nearest(blk, c, impl=impl, chunk=chunk)
 
 
 def argmin_dist2_over_source(source, c, *, impl: str = "auto",
                              chunk: int | None = None,
                              block_rows: int | None = None,
-                             memory_budget: int | None = None) -> jnp.ndarray:
+                             memory_budget: int | None = None,
+                             prefetch: int | None = None) -> jnp.ndarray:
     """``argmin_dist2_over_rows`` over a source: for each center row of
     ``c (m, d)``, the global row index of the nearest source point.
 
@@ -374,11 +535,12 @@ def argmin_dist2_over_source(source, c, *, impl: str = "auto",
     """
     m = c.shape[0]
     rows = resolve_block_rows(source.n, source.d, block_rows=block_rows,
-                              memory_budget=memory_budget)
+                              memory_budget=memory_budget,
+                              prefetch=prefetch or DEFAULT_PREFETCH)
     best_d = jnp.full((m,), _BIG)
     best_i = jnp.zeros((m,), jnp.int32)
     off = 0
-    for blk in source.blocks(rows):
+    for blk in _source_blocks(source, rows, prefetch):
         bi, bd = assign_nearest(c, blk, impl=impl, chunk=chunk)
         take = bd < best_d
         best_d = jnp.where(take, bd, best_d)

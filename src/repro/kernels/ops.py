@@ -45,3 +45,13 @@ resolve_block_rows = engine.resolve_block_rows
 fold_min_d2 = engine.fold_min_d2
 assign_nearest_source = engine.assign_nearest_source
 argmin_dist2_over_source = engine.argmin_dist2_over_source
+
+# Counter-based per-row sampling + streamed top-k (engine.py): the
+# blocking-invariant Bernoulli draws and the cross-block pivot Select that
+# the out-of-core EIM sampler is built on.
+uniform_rows = engine.uniform_rows
+bernoulli_rows = engine.bernoulli_rows
+bernoulli_rows_block = engine.bernoulli_rows_block
+top_k_init = engine.top_k_init
+merge_top_k = engine.merge_top_k
+fold_top_k = engine.fold_top_k

@@ -1,0 +1,230 @@
+"""Streamed (out-of-core) EIM: sampler invariance + path parity.
+
+Contracts under test (core/eim.py + core/executor.py + kernels/engine.py):
+
+  * the counter-based per-row Bernoulli sampler is *blocking-invariant*:
+    concatenating per-block draws over any partition of [0, n) is bitwise
+    identical to one full-range draw (Philox keyed by absolute row index —
+    this is what makes the sampled sets independent of the super-shard
+    size), and runs identically eager vs jitted, legacy vs typed keys,
+    with JAX_ENABLE_X64 off (pure uint32 limb arithmetic);
+  * ``eim_sample`` over Array/Host/Memmap sources on ``HostStreamExecutor``
+    (any ``block_rows``) and over ``SimExecutor``'s vmapped machines is
+    **bitwise identical** to the jitted device path for the same key on
+    the ref backend — masks, iteration count and overflow all match;
+  * the streamed cross-block top-k merge equals the monolithic
+    ``lax.top_k`` values;
+  * EIM completes out-of-core: at an n whose (n, d) f32 array exceeds a
+    stated device budget, the streamed path finishes with only
+    budget-bounded super-shards device-resident;
+  * the compact-buffer §4 bound raises instead of silently truncating.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import HostStreamExecutor, SimExecutor, eim, eim_sample
+from repro.core.eim import _sample_cap
+from repro.data import ArraySource, HostSource, MemmapSource, synthetic_source
+from repro.kernels import engine
+
+
+def _pts(n, d=2, seed=0):
+    return np.random.default_rng(seed).normal(size=(n, d)).astype(np.float32)
+
+
+# n chosen so the sampling loop engages: threshold (4/ε)k·n^ε·ln n < n
+N_SAMPLING, K, KEY_SEED = 20_000, 4, 1
+
+
+@pytest.fixture(scope="module")
+def device_sample():
+    x = _pts(N_SAMPLING, seed=8)
+    key = jax.random.PRNGKey(KEY_SEED)
+    s = eim_sample(jnp.asarray(x), K, key, eps=0.1, phi=8.0, impl="ref")
+    assert bool(s.sampled) and int(s.iters) >= 1
+    return x, key, s
+
+
+# ---------------------------------------------------------------------------
+# counter-based sampler: blocking invariance + determinism
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rows", [1, 13, 999, 4096, 10_000])
+def test_bernoulli_rows_blocking_invariance(rows):
+    key = jax.random.PRNGKey(7)
+    p = np.float32(0.3)
+    full = np.asarray(engine.bernoulli_rows(key, 0, 10_000, p))
+    parts = [np.asarray(engine.bernoulli_rows(key, s, min(rows, 10_000 - s), p))
+             for s in range(0, 10_000, rows)]
+    np.testing.assert_array_equal(np.concatenate(parts), full)
+
+
+def test_uniform_rows_blocking_invariance_across_2_32_boundary():
+    # global row indices are 64-bit: the uint32 counter carries into the
+    # high word, so blocks may straddle the 2^32 row boundary
+    key = jax.random.PRNGKey(3)
+    start = (1 << 32) - 5
+    whole = np.asarray(engine.uniform_rows(key, start, 10))
+    lo = np.asarray(engine.uniform_rows(key, start, 5))
+    hi = np.asarray(engine.uniform_rows(key, 1 << 32, 5))
+    np.testing.assert_array_equal(np.concatenate([lo, hi]), whole)
+
+
+def test_uniform_rows_key_forms_and_jit_agree():
+    legacy = jax.random.PRNGKey(9)
+    typed = jax.random.key(9)
+    raw = np.asarray(legacy)                     # (2,) uint32 key data
+    eager = np.asarray(engine.uniform_rows(legacy, 0, 512))
+    for k in (typed, raw):
+        np.testing.assert_array_equal(
+            np.asarray(engine.uniform_rows(k, 0, 512)), eager)
+    jitted = jax.jit(lambda k, p: engine.bernoulli_rows(k, 0, 512, p))
+    np.testing.assert_array_equal(
+        np.asarray(jitted(legacy, jnp.float32(0.25))),
+        np.asarray(engine.bernoulli_rows(legacy, 0, 512, np.float32(0.25))))
+
+
+def test_uniform_rows_distribution():
+    u = np.asarray(engine.uniform_rows(jax.random.PRNGKey(0), 0, 200_000))
+    assert 0.0 <= u.min() and u.max() < 1.0
+    assert abs(u.mean() - 0.5) < 0.005
+    b = np.asarray(engine.bernoulli_rows(jax.random.PRNGKey(1), 0, 200_000,
+                                         np.float32(0.1)))
+    assert abs(b.mean() - 0.1) < 0.005
+
+
+def test_fold_top_k_matches_monolithic():
+    v = _pts(3000, d=1, seed=4).reshape(-1)
+    want = np.asarray(jax.lax.top_k(jnp.asarray(v), 17)[0])
+    got = np.asarray(engine.fold_top_k([v[:100], v[100:1234], v[1234:]], 17))
+    np.testing.assert_array_equal(got, want)
+    # fewer values than k: sentinel padding survives the merge
+    short = np.asarray(engine.fold_top_k([v[:5]], 9))
+    assert (short[5:] <= -3e38).all()
+
+
+# ---------------------------------------------------------------------------
+# streamed eim_sample == device path, bitwise (the ISSUE acceptance bar)
+# ---------------------------------------------------------------------------
+
+def _assert_sample_equal(dev, got):
+    np.testing.assert_array_equal(np.asarray(dev.sample_mask),
+                                  np.asarray(got.sample_mask))
+    np.testing.assert_array_equal(np.asarray(dev.s_mask),
+                                  np.asarray(got.s_mask))
+    assert int(dev.iters) == int(got.iters)
+    assert int(dev.overflow) == int(got.overflow)
+    assert bool(dev.sampled) == bool(got.sampled)
+
+
+@pytest.mark.parametrize("block_rows", [1000, 3777, 8192, 50_000])
+def test_eim_sample_host_stream_bitwise_any_blocking(device_sample,
+                                                     block_rows):
+    # the sampler is counter-based and the d(x,S)/pivot folds are value
+    # reductions, so parity holds for *any* super-shard size — not just
+    # the device blocking
+    x, key, dev = device_sample
+    got = eim_sample(HostSource(x), K, key, eps=0.1, phi=8.0, impl="ref",
+                     executor=HostStreamExecutor(block_rows=block_rows))
+    _assert_sample_equal(dev, got)
+
+
+def test_eim_sample_memmap_bitwise(tmp_path, device_sample):
+    x, key, dev = device_sample
+    src = MemmapSource.save_shards(x, tmp_path, rows_per_shard=1500)
+    got = eim_sample(src, K, key, eps=0.1, phi=8.0, impl="ref",
+                     executor=HostStreamExecutor(block_rows=4096))
+    _assert_sample_equal(dev, got)
+
+
+def test_eim_sample_sim_executor_bitwise(device_sample):
+    # SimExecutor keeps the vmapped-machines simulation; its per-machine
+    # top-k merge is the simulated shuffle and must reduce the same pivot
+    x, key, dev = device_sample
+    got = eim_sample(ArraySource(x), K, key, eps=0.1, phi=8.0, impl="ref",
+                     executor=SimExecutor(m=8))
+    _assert_sample_equal(dev, got)
+
+
+def test_eim_full_streamed_bitwise(device_sample):
+    x, key, _ = device_sample
+    r_dev = eim(jnp.asarray(x), K, key, impl="ref")
+    r_str = eim(HostSource(x), K, key, impl="ref",
+                executor=HostStreamExecutor(block_rows=2048))
+    np.testing.assert_array_equal(np.asarray(r_dev.centers),
+                                  np.asarray(r_str.centers))
+    assert float(r_dev.radius2) == float(r_str.radius2)
+    _assert_sample_equal(r_dev.sample, r_str.sample)
+
+
+def test_eim_degenerate_small_n_streamed():
+    # below the threshold the loop never runs: C = everything, EIM == GON;
+    # the streamed path must degrade identically
+    x = _pts(500, d=3, seed=7)
+    key = jax.random.PRNGKey(0)
+    r_dev = eim(jnp.asarray(x), 8, key, impl="ref")
+    r_str = eim(HostSource(x), 8, key, impl="ref",
+                executor=HostStreamExecutor(block_rows=100))
+    assert not bool(r_str.sample.sampled)
+    np.testing.assert_array_equal(np.asarray(r_dev.centers),
+                                  np.asarray(r_str.centers))
+    assert float(r_dev.radius2) == float(r_str.radius2)
+
+
+# ---------------------------------------------------------------------------
+# out-of-core: EIM past a stated device budget
+# ---------------------------------------------------------------------------
+
+def test_eim_completes_past_device_budget():
+    # the stated HBM budget cannot hold the (n, d) f32 points, so the
+    # legacy materializing path is structurally impossible; the streamed
+    # path completes with super-shards bounded well under the budget
+    n, d, k = 65_536, 8, 4
+    device_budget = 1 << 20                       # 1 MiB
+    assert 4 * n * d > device_budget
+    src = synthetic_source("unif", n, d=d, seed=5)
+    ex = HostStreamExecutor(memory_budget=device_budget // 4)
+    rows = ex.rows_for(src)
+    assert 4 * rows * d * (1 + ex.prefetch) <= device_budget
+    res = eim(src, k, jax.random.PRNGKey(2), impl="ref", executor=ex)
+    assert bool(res.sample.sampled) and int(res.sample.iters) >= 1
+    assert res.centers.shape == (k, d)
+    assert float(res.radius2) > 0.0
+    # paper-§4 size bound on the compacted sample actually held
+    pop = int(np.asarray(res.sample.sample_mask).sum())
+    s_count = int(np.asarray(res.sample.s_mask).sum())
+    assert pop <= _sample_cap(n, k, 0.1, s_count)
+
+
+def test_eim_streamed_rejects_uncompacted():
+    x = _pts(1000, d=2, seed=1)
+    with pytest.raises(ValueError, match="compact"):
+        eim(HostSource(x), 4, jax.random.PRNGKey(0), compact=False)
+
+
+def test_eim_rejects_executor_without_filter_round():
+    # MeshExecutor's rounds are one fused shard_map program without the
+    # per-iteration hook — the streamed loop must fail fast, not mid-run
+    from repro.core import MeshExecutor
+    from repro.launch.mesh import make_mesh
+    x = _pts(1000, d=2, seed=2)
+    with pytest.raises(NotImplementedError, match="run_filter_round"):
+        eim_sample(HostSource(x), 4, jax.random.PRNGKey(0),
+                   executor=MeshExecutor(make_mesh((1,), ("data",))))
+
+
+# ---------------------------------------------------------------------------
+# compact-buffer bound: hard error, not silent truncation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("streamed", [False, True])
+def test_eim_compact_cap_hard_error(streamed, device_sample):
+    # max_iters=0 in the sampling regime leaves |R| = n > threshold, so
+    # |C| exceeds the §4 bound (4/ε)k·n^ε·log n + |S| — both paths must
+    # refuse to truncate
+    x, key, _ = device_sample
+    points = HostSource(x) if streamed else jnp.asarray(x)
+    with pytest.raises(RuntimeError, match="max_iters"):
+        eim(points, K, key, impl="ref", max_iters=0)

@@ -193,10 +193,17 @@ def test_resolve_block_rows_model():
     # explicit rows win, clipped to n
     assert engine.resolve_block_rows(100, 8, block_rows=7) == 7
     assert engine.resolve_block_rows(100, 8, block_rows=500) == 100
-    # budget model: 2·4·rows·(d+1) <= budget (two double-buffered blocks)
+    # budget model: (1+prefetch)·4·rows·(d+1) <= budget (the consumed block
+    # plus the prefetch ring; default prefetch=2 => 3 resident blocks)
     rows = engine.resolve_block_rows(10 ** 9, 7, memory_budget=1 << 20)
-    assert 8 * rows * 8 <= 1 << 20 < 8 * (rows + 1) * 8
+    assert 12 * rows * 8 <= 1 << 20 < 12 * (rows + 1) * 8
+    # prefetch=1 recovers the PR-2 double-buffer model
+    rows1 = engine.resolve_block_rows(10 ** 9, 7, memory_budget=1 << 20,
+                                      prefetch=1)
+    assert 8 * rows1 * 8 <= 1 << 20 < 8 * (rows1 + 1) * 8
     with pytest.raises(ValueError):
         engine.resolve_block_rows(100, 8, block_rows=0)
     with pytest.raises(ValueError):
         engine.resolve_block_rows(100, 1024, memory_budget=64)
+    with pytest.raises(ValueError):
+        engine.resolve_block_rows(100, 8, memory_budget=1 << 20, prefetch=0)

@@ -86,6 +86,48 @@ def test_source_row_random_access(tmp_path):
         _source_row(HostSource(x), x.shape[0], 100)
 
 
+def test_source_take_random_access_gather(tmp_path):
+    x = _pts()
+    idx = np.array([5, 0, 639, 100, 101, 102, 7])   # unsorted, with a run
+    srcs = [ArraySource(x), HostSource(x),
+            MemmapSource.save_shards(x, tmp_path, rows_per_shard=100)]
+    for src in srcs:
+        np.testing.assert_array_equal(src.take(idx), x[idx])
+        np.testing.assert_array_equal(src.take([]),
+                                      np.zeros((0, x.shape[1]), np.float32))
+    # synthetic take regenerates the containing runs bitwise
+    full = unif(1000, 3, seed=42)
+    syn = synthetic_source("unif", 1000, d=3, seed=42)
+    np.testing.assert_array_equal(syn.take(idx), full[idx])
+    for src in srcs + [syn]:
+        with pytest.raises(IndexError):
+            src.take([src.n])
+        with pytest.raises(IndexError):
+            src.take([-1])
+
+
+@pytest.mark.parametrize("prefetch", [1, 2, 4])
+def test_blocks_prefetch_ring_reproduces_rows(tmp_path, prefetch):
+    # the ring is a transfer-scheduling detail: any depth yields the same
+    # rows in the same order (prefetch=1 is the PR-2 double buffer)
+    x = _pts()
+    for src in (HostSource(x),
+                MemmapSource.save_shards(x, tmp_path, rows_per_shard=150),
+                synthetic_source("unif", 640, d=5, seed=3)):
+        ref = np.concatenate([np.asarray(b) for b in src.blocks(77)])
+        got = np.concatenate(
+            [np.asarray(b) for b in src.blocks(77, prefetch=prefetch)])
+        np.testing.assert_array_equal(got, ref)
+
+
+def test_prefetch_validation():
+    x = _pts(n=32, d=2)
+    with pytest.raises(ValueError):
+        list(HostSource(x).blocks(8, prefetch=0))
+    with pytest.raises(ValueError):
+        HostStreamExecutor(prefetch=0)
+
+
 def test_as_source_coercion():
     x = _pts()
     assert isinstance(as_source(x), HostSource)
@@ -145,9 +187,10 @@ def test_mrg_multiround_parity_and_memory_budget():
                                   np.asarray(r_host.centers))
     assert float(r_sim.radius2) == float(r_host.radius2)
     # a byte budget resolves to the same 80-row super-shards:
-    # 2·4·rows·(d+1) <= budget (double-buffered)  =>  rows = budget // 48
+    # (1+prefetch)·4·rows·(d+1) <= budget with the default prefetch=2 ring
+    # =>  rows = budget // 72
     r_bud = mrg(HostSource(x), 7, capacity=20, impl="ref",
-                executor=HostStreamExecutor(memory_budget=80 * 8 * 6))
+                executor=HostStreamExecutor(memory_budget=80 * 12 * 6))
     np.testing.assert_array_equal(np.asarray(r_host.centers),
                                   np.asarray(r_bud.centers))
 
