@@ -27,6 +27,13 @@ at an n past the same kind of asserted budget (its per-point relations
 live on the host; the counter-based Round-1 sampler needs no data pass),
 plus a bitwise device-vs-streamed sample parity anchor.
 
+The **compacted-R section** (``eim_compaction_rows``) asserts the
+shrinking-|R| iteration cost of the production path: per-iteration pass
+row-counts (metered at ``run_filter_round``) must shrink monotonically
+below n once ``compact_threshold`` engages, the view's gathers must stay
+within the budget-derived super-shard, and the compacted sample must be
+bitwise the fixed-shape streamed sample.
+
 Run: ``PYTHONPATH=src python -m benchmarks.chunked_scaling [--full]``
 (``--full`` pushes n to 10⁷; default tops out at 10⁶ to stay friendly to
 one CPU core). Also callable as ``run()`` yielding benchmarks/run.py-style
@@ -226,6 +233,90 @@ def eim_out_of_core_rows(full: bool, rng: np.random.Generator):
            f"bitwise={'exact' if exact else 'DRIFT'};"
            f"iters={int(s_str.iters)};"
            f"sample={int(np.asarray(s_str.sample_mask).sum())}")
+
+    yield from eim_compaction_rows(full, rng)
+
+
+class _MeteredExecutor(HostStreamExecutor):
+    """Records the view size each filter round streams (= the rows the
+    per-iteration pass touches)."""
+
+    def __init__(self, **kw):
+        super().__init__(**kw)
+        self.pass_rows = []
+
+    def run_filter_round(self, source, *a, **kw):
+        self.pass_rows.append(source.n)
+        return super().run_filter_round(source, *a, **kw)
+
+
+class _MeteredSource(HostSource):
+    """HostSource recording the largest single block/gather it served."""
+
+    def __init__(self, x):
+        super().__init__(x)
+        self.max_block = 0
+
+    def host_blocks(self, block_rows):
+        for blk in super().host_blocks(block_rows):
+            self.max_block = max(self.max_block, blk.shape[0])
+            yield blk
+
+    def take(self, indices):
+        out = super().take(indices)
+        self.max_block = max(self.max_block, out.shape[0])
+        return out
+
+
+def eim_compaction_rows(full: bool, rng: np.random.Generator):
+    """Compacted-R streamed EIM (paper §4's shrinking round cost).
+
+    The fixed-shape streamed loop pays O(n·|S_new|) every iteration; with
+    ``compact_threshold`` the fold re-points at an ``IndexedSource`` of
+    the survivors, so iteration l touches |R_l| rows — *asserted* here by
+    metering the view size of every filter round (it must shrink
+    monotonically below n), while a metered source asserts the out-of-core
+    budget still holds during the view's gathers (no block or take ever
+    exceeds the budget-derived super-shard). Both runs are the production
+    path and must return bitwise-identical samples.
+    """
+    k, eps, phi = 4, 0.05, 5.0
+    n = 400_000 if full else 120_000
+    device_budget = (32 if full else 8) * 2 ** 20
+    ex_budget = device_budget // 4
+    x = rng.normal(size=(n, D)).astype(np.float32)
+    key = jax.random.PRNGKey(3)
+
+    def timed_run(compact_threshold):
+        src = _MeteredSource(x)
+        ex = _MeteredExecutor(memory_budget=ex_budget)
+        t0 = time.time()
+        s = eim_sample(src, k, key, eps=eps, phi=phi, impl="ref",
+                       executor=ex, compact_threshold=compact_threshold)
+        return time.time() - t0, s, ex, src
+
+    t_base, s_base, ex_base, _ = timed_run(0.0)
+    t_comp, s_comp, ex_comp, src_comp = timed_run(1.0)
+
+    rows = _MeteredExecutor(memory_budget=ex_budget).rows_for(HostSource(x))
+    assert ex_base.pass_rows == [n] * int(s_base.iters), \
+        "baseline pass must touch all n rows every iteration"
+    passes = ex_comp.pass_rows
+    assert passes[0] == n and passes[-1] < n and \
+        all(a >= b for a, b in zip(passes, passes[1:])), \
+        f"per-iteration pass row-count failed to shrink: {passes}"
+    assert src_comp.max_block <= rows, \
+        "a gathered block exceeded the memory-budget super-shard"
+    assert (np.array_equal(np.asarray(s_base.sample_mask),
+                           np.asarray(s_comp.sample_mask))
+            and int(s_base.iters) == int(s_comp.iters)), \
+        "compacted sample drifted from the fixed-shape streamed path"
+    yield (f"compactR_eim_baseline_n{n}", t_base * 1e6,
+           f"iters={int(s_base.iters)};pass_rows={n}x{int(s_base.iters)}")
+    yield (f"compactR_eim_n{n}", t_comp * 1e6,
+           f"pass_rows={'/'.join(str(p) for p in passes)};"
+           f"max_block={src_comp.max_block}<=shard={rows};"
+           f"speedup={t_base / t_comp:.2f}x")
 
 
 def main() -> None:

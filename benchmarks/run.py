@@ -79,14 +79,22 @@ def main() -> None:
                  f"value={v:.4g};iters={it:.1f}")
 
     if want("perfcell"):
-        # §Perf cell C: paper-faithful EIM vs the beyond-paper R-compaction
+        # §Perf cell C: fixed-shape streamed EIM vs the compacted-R
+        # production path (compact_threshold graduated from the old
+        # host-side prototype into core/eim.py). k/φ are chosen so the
+        # Select filter engages at ε=0.05 (rank=φ·ln n must not exceed
+        # E|H|=4·n^ε·ln n, and n^ε<2 here), giving the paper's geometric
+        # |R| shrink; both rows are the *same* production algorithm — the
+        # sample is bitwise invariant to the knob.
         from repro.data import gau
 
-        from .runtime_scaling import time_eim, time_eim_compact
+        from .runtime_scaling import time_eim_stream
         n = 200_000 if args.full else 100_000
         pts = gau(n, 25, seed=0)
-        t1, v1, i1 = time_eim(pts, 25, eps=0.05)
-        t2, v2, i2 = time_eim_compact(pts, 25, eps=0.05)
+        t1, v1, i1 = time_eim_stream(pts, 4, eps=0.05, phi=5.0,
+                                     compact_threshold=0.0)
+        t2, v2, i2 = time_eim_stream(pts, 4, eps=0.05, phi=5.0,
+                                     compact_threshold=1.0)
         emit(f"perfC_eim_baseline_n{n}", t1 * 1e6, f"value={v1:.4g};iters={i1}")
         emit(f"perfC_eim_compact_n{n}", t2 * 1e6,
              f"value={v2:.4g};iters={i2};speedup={t1/t2:.2f}x")

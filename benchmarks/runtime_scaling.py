@@ -79,86 +79,46 @@ def _eim_rounds(n: int, k: int, eps: float):
     return ln_n, threshold, s_cap, h_cap
 
 
-def time_eim_compact(points, k: int, *, eps: float = 0.1, phi: float = 8.0,
-                     m: int = M, seed: int = 0, max_iters: int = 64):
-    """Beyond-paper optimization of EIM's dominant Round 3 (§Perf cell C).
+def time_eim_stream(points, k: int, *, eps: float = 0.1, phi: float = 8.0,
+                    seed: int = 0, max_iters: int = 64,
+                    compact_threshold: float = 0.5,
+                    block_rows: int | None = None, reps: int = 2):
+    """Production streamed EIM (§Perf cell C) — ``repro.core.eim`` over a
+    ``HostSource`` on ``HostStreamExecutor``, wall-clocked end to end.
 
-    The paper's Round-3 cost is O(|R_l|·|S_new|/m) but a fixed-shape SPMD
-    implementation pays O(n·|S_new|) every iteration because XLA shapes
-    are static. Here R is *compacted on the host between iterations*
-    (per-iteration re-jit on the shrunken shape): with |R_{l+1}| ≈
-    |R_l|/n^ε the total drops from T·n·s to ~n·s·(1-n^-ε)^-1 — i.e. the
-    paper's own asymptotic, realized. Returns (time, value, iters).
+    ``compact_threshold=0`` is the fixed-shape baseline (every fold pass
+    touches all n rows, T times); ``compact_threshold=1`` compacts the
+    relation into an ``IndexedSource`` view after every shrinking
+    iteration — the paper's own O(|R_l|·|S_new|/m) Round-3 charge realized
+    in the shipped algorithm. (A host-side prototype of this trick used to
+    live here as ``time_eim_compact``; it graduated into ``core/eim.py``
+    and this now times the production path.) The sampled sets — and hence
+    the returned value and iteration count — are bitwise invariant to the
+    knob. Returns (time, value, iters).
     """
-    pts = jnp.asarray(points, jnp.float32)
-    n, d = pts.shape
-    ln_n, threshold, s_cap, h_cap = _eim_rounds(n, k, eps)
-    rank = max(1, min(h_cap, int(round(phi * ln_n))))
+    from repro.core import HostStreamExecutor
+    from repro.core.eim import eim
+    from repro.data import HostSource
 
-    @jax.jit
-    def gather(arr, idx):
-        return arr[idx]
-
-    def rounds_for(nr):
-        @jax.jit
-        def round1(key, r_pts_n):
-            k_s, k_h = jax.random.split(key)
-            p_s = jnp.minimum(9.0 * k * (n ** eps) * ln_n / nr, 1.0)
-            p_h = jnp.minimum(4.0 * (n ** eps) * ln_n / nr, 1.0)
-            # counter-based draws, same sampler as repro.core.eim (rows
-            # here are compacted-R positions — a fresh stream per shape)
-            new_s = ops.bernoulli_rows(k_s, 0, nr, p_s)
-            h_mask = ops.bernoulli_rows(k_h, 0, nr, p_h)
-            return new_s, h_mask
-        @jax.jit
-        def update_filter(r_pts, d_s, new_s, h_mask):
-            s_idx = jnp.nonzero(new_s, size=s_cap, fill_value=nr)[0]
-            s_valid = s_idx < nr
-            s_pts = r_pts[jnp.minimum(s_idx, nr - 1)]
-            d_new = ops.pairwise_dist2(r_pts, s_pts)
-            d_new = jnp.where(s_valid[None, :], d_new, _BIG)
-            d_s = jnp.minimum(d_s, jnp.min(d_new, axis=1))
-            d_h = jnp.where(h_mask, d_s, _NEG)
-            top = jax.lax.top_k(d_h, min(rank, nr))[0]
-            pivot = top[min(rank, nr) - 1]
-            pivot = jnp.where(pivot <= _NEG / 2, -1.0, pivot)
-            keep = (~new_s) & (d_s > pivot)
-            return keep, new_s, d_s
-        return round1, update_filter
-
+    x = np.asarray(points, np.float32)
     key = jax.random.PRNGKey(seed)
-    r_pts = pts
-    d_s = jnp.full((n,), _BIG)
-    sample_pts = []
-    t_par = t_seq = 0.0
-    iters = 0
-    while r_pts.shape[0] > threshold and iters < max_iters:
-        nr = r_pts.shape[0]
-        round1, update_filter = rounds_for(nr)
-        key, sub = jax.random.split(key)
-        # warmup (compile) — not a MapReduce cost
-        jax.block_until_ready(update_filter(r_pts, d_s,
-                                            *round1(sub, float(nr))))
-        t0 = time.perf_counter()
-        new_s, h_mask = jax.block_until_ready(round1(sub, float(nr)))
-        keep, new_s, d_s = jax.block_until_ready(
-            update_filter(r_pts, d_s, new_s, h_mask))
-        t_par += (time.perf_counter() - t0) / m
-        t0 = time.perf_counter()
-        keep_np = np.asarray(keep)
-        sample_pts.append(np.asarray(r_pts)[np.asarray(new_s)])
-        r_pts = jnp.asarray(np.asarray(r_pts)[keep_np])
-        d_s = jnp.asarray(np.asarray(d_s)[keep_np])
-        t_seq += time.perf_counter() - t0  # host compaction (shuffle cost)
-        iters += 1
 
-    sample = np.concatenate(sample_pts + [np.asarray(r_pts)], axis=0) \
-        if sample_pts else np.asarray(r_pts)
-    t0 = time.perf_counter()
-    res = jax.block_until_ready(gonzalez(jnp.asarray(sample), k))
-    t_seq += time.perf_counter() - t0
-    val = float(covering_radius(pts, res.centers))
-    return t_par + t_seq, val, iters
+    def run():
+        return eim(HostSource(x), k, key, eps=eps, phi=phi,
+                   max_iters=max_iters,
+                   executor=HostStreamExecutor(block_rows=block_rows),
+                   compact_threshold=compact_threshold)
+
+    res = run()                  # warmup: the loop trajectory is
+    jax.block_until_ready(res.centers)   # deterministic, so this compiles
+    ts = []                              # every block shape the timed
+    for _ in range(reps):                # reps will see
+        t0 = time.perf_counter()
+        res = run()
+        jax.block_until_ready(res.centers)
+        ts.append(time.perf_counter() - t0)
+    val = float(np.sqrt(np.float32(res.radius2)))
+    return float(np.mean(ts)), val, int(res.sample.iters)
 
 
 def time_eim(points, k: int, *, eps: float = 0.1, phi: float = 8.0,

@@ -54,11 +54,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.data.source import ArraySource, as_device_array, as_source, is_source
+from repro.data.source import (ArraySource, IndexedSource, as_device_array,
+                               as_source, is_source)
 from repro.kernels import engine, ops
 
 from .executor import Executor, HostStreamExecutor
-from .gonzalez import covering_radius, gonzalez
+from .gonzalez import gonzalez
 
 _NEG = jnp.float32(-3.4e38)
 _BIG = jnp.float32(3.4e38)
@@ -153,6 +154,14 @@ def _compact_gonzalez(pts_np: np.ndarray, pop: int, cap: int, k: int, *,
 # opts into streaming)
 # ---------------------------------------------------------------------------
 
+def _check_compact_threshold(compact_threshold: float) -> float:
+    if not 0.0 <= compact_threshold <= 1.0:
+        raise ValueError(
+            f"compact_threshold must be in [0, 1], got {compact_threshold} "
+            "(0 = never compact, 1 = compact whenever R shrank)")
+    return float(compact_threshold)
+
+
 def eim_sample(
     points,
     k: int,
@@ -164,6 +173,7 @@ def eim_sample(
     impl: str = "auto",
     chunk: int | None = None,
     executor: Executor | None = None,
+    compact_threshold: float = 0.5,
 ) -> EIMSample:
     """Algorithm 2 (EIM-MapReduce-Sample) with the φ-parameterized Select.
 
@@ -177,11 +187,23 @@ def eim_sample(
     returned sample is bitwise identical on the ref backend regardless of
     path or blocking.
 
+    ``compact_threshold`` (streamed path only) controls the shrinking-|R|
+    iteration cost (paper §4: Round 3 is charged O(|R_l|·|S_new|/m), not
+    O(n·|S_new|)): when the surviving |R| falls under this fraction of the
+    current view, the fold is re-pointed at an ``IndexedSource`` of the
+    survivors, so later passes touch |R| rows instead of n. ``0`` never
+    compacts, ``1`` compacts after every shrinking iteration; the sampled
+    sets are bitwise invariant to the choice (Round-1 draws are keyed by
+    *original* absolute row index — ``engine.bernoulli_rows_at`` — and
+    the d(x,S)/pivot folds are per-row/value reductions). The device fast
+    path has no views (masks over a fixed array) and ignores the knob.
+
     ``chunk`` streams the per-iteration distance update in row-blocks
     (kernels/engine.py memory model) — the sample is unchanged: the PRNG
     stream is identical and, for inputs whose coordinates are far below
     the 1e18 invalid-slot sentinel, so is every distance the loop compares.
     """
+    compact_threshold = _check_compact_threshold(compact_threshold)
     streamed = is_source(points) and not isinstance(points, ArraySource)
     if not streamed and executor is None:
         return _eim_sample_device(as_device_array(points), k, key, eps=eps,
@@ -192,7 +214,8 @@ def eim_sample(
         executor = HostStreamExecutor()
     return _eim_sample_stream(source, k, key, eps=eps, phi=phi,
                               max_iters=max_iters, executor=executor,
-                              impl=impl, chunk=chunk)
+                              impl=impl, chunk=chunk,
+                              compact_threshold=compact_threshold)
 
 
 def eim(
@@ -207,6 +230,7 @@ def eim(
     chunk: int | None = None,
     compact: bool = True,
     executor: Executor | None = None,
+    compact_threshold: float = 0.5,
 ) -> EIMResult:
     """Full EIM: sample, then run GON on the sample (final MapReduce round).
 
@@ -221,7 +245,11 @@ def eim(
     gather), so the full (n, d) array is never device-resident; the
     covering radius is the executor's streamed fold. ``compact=False``
     (GON over the masked full array) is device-path only.
+    ``compact_threshold`` is the streamed loop's shrinking-|R| knob (see
+    ``eim_sample``) — unrelated to ``compact``, which is about the *final*
+    GON round.
     """
+    compact_threshold = _check_compact_threshold(compact_threshold)
     streamed = is_source(points) and not isinstance(points, ArraySource)
     if not streamed and executor is None:
         return _eim_device(points, k, key, eps=eps, phi=phi,
@@ -237,7 +265,8 @@ def eim(
         executor = HostStreamExecutor()
     sample = _eim_sample_stream(source, k, key, eps=eps, phi=phi,
                                 max_iters=max_iters, executor=executor,
-                                impl=impl, chunk=chunk)
+                                impl=impl, chunk=chunk,
+                                compact_threshold=compact_threshold)
     idx = np.nonzero(np.asarray(sample.sample_mask))[0]
     pop = len(idx)
     _check_sample_cap(pop, int(np.asarray(sample.s_mask).sum()),
@@ -366,8 +395,11 @@ def _eim_device(points, k, key, *, eps, phi, max_iters, impl, chunk,
     else:
         res = gonzalez(points, k, mask=sample.sample_mask, impl=impl,
                        chunk=chunk)
-    r = covering_radius(points, res.centers, impl=impl, chunk=chunk)
-    return EIMResult(res.centers, r * r, sample)
+    # Squared fold directly — the sqrt→square round-trip of
+    # ``covering_radius`` is lossy in f32 and must match the executors'
+    # ``radius2`` bitwise (cross-path parity tests compare these).
+    _, d2 = ops.assign_nearest(points, res.centers, impl=impl, chunk=chunk)
+    return EIMResult(res.centers, jnp.max(d2), sample)
 
 
 # ---------------------------------------------------------------------------
@@ -377,7 +409,8 @@ def _eim_device(points, k, key, *, eps, phi, max_iters, impl, chunk,
 def _eim_sample_stream(source, k: int, key, *, eps: float, phi: float,
                        max_iters: int, executor: Executor,
                        impl: str = "auto",
-                       chunk: int | None = None) -> EIMSample:
+                       chunk: int | None = None,
+                       compact_threshold: float = 0.5) -> EIMSample:
     """Out-of-core Algorithm 2: the MapReduce-native form.
 
     Per-point relations live on the host (``r_mask``, ``s_mask`` bools and
@@ -386,16 +419,26 @@ def _eim_sample_stream(source, k: int, key, *, eps: float, phi: float,
 
       * Round 1 — sampling needs **no pass over the data**: the Bernoulli
         decision for global row i is a pure function of (iteration key, i)
-        (``engine.bernoulli_rows``), evaluated here in index blocks; only
-        the |S_new| sampled coordinates are fetched, by ``source.take``.
-      * Rounds 2–3 — one streamed fold (``executor.run_filter_round``):
-        the masked incremental-min d(x, S_new) update and the cross-block
-        top-k merge for the φ·log n pivot share the pass; the Round-3
-        filter is then a host mask update.
+        (``engine.bernoulli_rows`` / the gather-form
+        ``engine.bernoulli_rows_at`` once the relation is compacted),
+        evaluated here in index blocks; only the |S_new| sampled
+        coordinates are fetched, by ``source.take``.
+      * Rounds 2–3 — one streamed fold (``executor.run_filter_round``)
+        over the *current view* of the relation: the masked
+        incremental-min d(x, S_new) update and the cross-block top-k merge
+        for the φ·log n pivot share the pass; the Round-3 filter is then a
+        host mask update.
+
+    The paper charges Round 3 only O(|R_l|·|S_new|/m) because R shrinks
+    every iteration — so the loop tracks the live row set and, when the
+    survivors fall under ``compact_threshold`` of the current view,
+    re-points the fold at an ``IndexedSource`` of the survivors (their
+    *original* row indices): later passes touch |R∪H| rows, not n.
 
     Every comparison is evaluated in f32 exactly as the device path's jit
     traces it, so the two paths return bitwise-identical samples for the
-    same key (any blocking — the sampler is counter-based and min/top-k
+    same key (any blocking, compacted or not — the sampler is counter-
+    based on original row ids, the d(x,S) update is per-row, and min/top-k
     value folds are blocking-invariant).
     """
     if type(executor).run_filter_round is Executor.run_filter_round:
@@ -418,7 +461,7 @@ def _eim_sample_stream(source, k: int, key, *, eps: float, phi: float,
         iters, overflow = _stream_loop(
             source, executor, jnp.asarray(key), r_mask, s_mask, d_s,
             threshold, s_cap, rank, num_s, num_h, rows, max_iters,
-            impl, chunk)
+            impl, chunk, compact_threshold)
     finally:
         # Release any per-source state the executor cached across the
         # filter rounds (e.g. SimExecutor's materialized blocking).
@@ -428,24 +471,47 @@ def _eim_sample_stream(source, k: int, key, *, eps: float, phi: float,
 
 
 def _stream_loop(source, executor, key, r_mask, s_mask, d_s, threshold,
-                 s_cap, rank, num_s, num_h, rows, max_iters, impl, chunk):
+                 s_cap, rank, num_s, num_h, rows, max_iters, impl, chunk,
+                 compact_threshold):
     """The iteration loop of ``_eim_sample_stream`` (mutates the host
-    relations in place; returns ``(iterations, overflow)``)."""
+    relations in place; returns ``(iterations, overflow)``).
+
+    ``view_idx`` tracks the fold substrate: ``None`` means the identity
+    view (every pass touches all n source rows, the pre-compaction
+    behavior); otherwise it holds the sorted *original* row indices of the
+    current ``IndexedSource`` view and ``d_view`` the matching slice of
+    ``d_s``. Invariant: the live relation R (``r_mask``) is always a
+    subset of the view — views are created from R and R only shrinks — so
+    sampling, the pivot's H, and the Round-3 filter see exactly the same
+    rows the full pass would.
+    """
     n = source.n
     overflow = 0
     it = 0
-    while (np.float32(r_mask.sum()) > np.float32(threshold)
+    view = source          # current fold substrate (IndexedSource once compacted)
+    view_idx = None        # None => identity view over all n rows
+    d_view = d_s           # per-view slice of d_s (aliases d_s when identity)
+    while (np.float32(int(r_mask.sum())) > np.float32(threshold)
            and it < max_iters):
         keys = jax.random.split(key, 3)
         key, k_s, k_h = keys[0], keys[1], keys[2]
-        r_size = np.float32(r_mask.sum())
+        r_size = np.float32(int(r_mask.sum()))
         p_s = np.minimum(np.float32(num_s) / r_size, np.float32(1.0))
         p_h = np.minimum(np.float32(num_h) / r_size, np.float32(1.0))
 
         # --- Round 1: counter-based sampling, no data pass --------------
-        new_s = _bernoulli_mask(k_s, n, p_s, rows) & r_mask
-        h_mask = _bernoulli_mask(k_h, n, p_h, rows) & r_mask
-        s_idx = np.nonzero(new_s)[0]
+        # Draws are keyed by the *original* absolute row index (the view's
+        # ``indices``), so the sampled sets are bitwise invariant to
+        # whether/when compaction happened.
+        if view_idx is None:
+            new_s = _bernoulli_mask(k_s, n, p_s, rows) & r_mask
+            h_view = _bernoulli_mask(k_h, n, p_h, rows) & r_mask
+            s_idx = np.nonzero(new_s)[0]
+        else:
+            sub_r = r_mask[view_idx]
+            new_s = _bernoulli_mask_at(k_s, view_idx, p_s, rows) & sub_r
+            h_view = _bernoulli_mask_at(k_h, view_idx, p_h, rows) & sub_r
+            s_idx = view_idx[new_s]
         # The device path's fixed S-buffer drops samples past s_cap (first-
         # index-first, a <1e-6 event at the default headroom); replicate
         # for parity and count the drops. Padding the gathered buffer up to
@@ -460,16 +526,43 @@ def _stream_loop(source, executor, key, r_mask, s_mask, d_s, threshold,
                 [taken, np.full((pad, taken.shape[1]), 1e18, np.float32)]))
         else:
             s_new = None
-        s_mask |= new_s
         # Termination fix (paper §4.1): sampled points always leave R.
-        r_mask &= ~new_s
+        if view_idx is None:
+            s_mask |= new_s
+            r_mask &= ~new_s
+        else:
+            s_mask[s_idx] = True
+            r_mask[s_idx] = False
 
         # --- Rounds 2-3: streamed d(x,S) update + pivot Select ----------
-        d_s, pivot = executor.run_filter_round(source, s_new, d_s, h_mask,
-                                               rank, impl=impl, chunk=chunk)
-        r_mask &= ~(d_s <= pivot)
+        # One fold over the *view* — |view| rows move, not n.
+        d_view, pivot = executor.run_filter_round(view, s_new, d_view,
+                                                  h_view, rank, impl=impl,
+                                                  chunk=chunk)
+        if view_idx is None:
+            r_mask &= ~(d_s <= pivot)      # d_view aliases d_s here
+        else:
+            r_mask[view_idx[d_view <= pivot]] = False
         it += 1
 
+        # --- compact the relation between iterations (paper §4's
+        # shrinking |R|) --------------------------------------------------
+        live = int(r_mask.sum())
+        if np.float32(live) <= np.float32(threshold):
+            break                          # loop is over; skip the re-view
+        cur = n if view_idx is None else len(view_idx)
+        if live < compact_threshold * cur and live < cur:
+            if view is not source:
+                # Release per-view executor caches (e.g. SimExecutor's
+                # blocked copy) before the old view is dropped.
+                executor.end_filter_rounds(view)
+            if view_idx is not None:
+                d_s[view_idx] = d_view     # scatter state back first
+            view_idx = np.nonzero(r_mask)[0]
+            view = IndexedSource(source, view_idx)
+            d_view = d_s[view_idx]
+    if view is not source:
+        executor.end_filter_rounds(view)
     return it, overflow
 
 
@@ -485,3 +578,24 @@ def _bernoulli_mask(key, n: int, p: np.float32, rows: int) -> np.ndarray:
             min(rows, n - start), np.float32(p))))
     return (np.concatenate(parts) if parts
             else np.zeros((0,), bool))
+
+
+def _bernoulli_mask_at(key, idx: np.ndarray, p: np.float32,
+                       rows: int) -> np.ndarray:
+    """Gather-form ``_bernoulli_mask``: per-row Bernoulli(p) draws at the
+    given *original* absolute row indices (a compacted view's survivors),
+    in ``rows``-sized blocks padded to one fixed shape — so one
+    compilation of the jitted gather sampler serves every view size, and
+    draw i is bitwise the full-range draw at row ``idx[i]``."""
+    out = np.empty(idx.size, bool)
+    for start in range(0, idx.size, rows):
+        sub = idx[start:start + rows]
+        nb = sub.size
+        lo, hi = engine.split_index_words(sub)
+        if nb < rows:
+            lo = np.pad(lo, (0, rows - nb))
+            hi = np.pad(hi, (0, rows - nb))
+        blk = np.asarray(engine.bernoulli_rows_at_block(
+            key, lo, hi, np.float32(p)))
+        out[start:start + nb] = blk[:nb]
+    return out

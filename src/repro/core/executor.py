@@ -61,6 +61,7 @@ runs unchanged on jax 0.4.x and 0.6+.
 from __future__ import annotations
 
 import functools
+import warnings
 import weakref
 from typing import Callable, Sequence
 
@@ -74,7 +75,7 @@ from repro import compat
 from repro.data.source import as_source
 from repro.kernels import engine, ops
 
-from .gonzalez import covering_radius, gonzalez
+from .gonzalez import gonzalez
 
 BlockFn = Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]
 
@@ -161,6 +162,38 @@ def _mrg_round(points_blocked: jnp.ndarray, mask_blocked: jnp.ndarray,
     return _run_round(points_blocked, mask_blocked, gon_block_fn(k, impl, chunk))
 
 
+_DIVERGED_MSG = ("combine diverged (k too close to capacity; "
+                 "paper §3.3 requires 2k < c)")
+
+
+def check_combine_capacity(k: int, capacity: int, *,
+                           warn: bool = True) -> None:
+    """Feasibility of the Lemma-3 reduction under machine capacity ``c``.
+
+    Mirrors ``plan_rounds``' checks so ``mrg()``/``combine`` fail up front
+    instead of looping forever: a level re-blocks M rows into
+    ``m2 = ceil(M / capacity)`` machines and emits ``m2·k`` rows, so with
+    ``capacity <= k`` the union never shrinks (e.g. ``mrg(x, 8,
+    capacity=4)``: 400 rows → m2=100 → 800 rows, growing every level) —
+    hard error. With ``k < capacity < 2k`` the recurrence may still stall
+    on the ceil (§3.3 requires ``2k < c`` for convergence) — warn (unless
+    ``warn=False``; ``mrg`` pre-checks with it off so the warning fires
+    once, from ``combine``), and let the divergence guard in ``combine``
+    raise if it does.
+    """
+    if capacity <= k:
+        raise ValueError(
+            f"infeasible: k={k} needs single-machine capacity > k, got "
+            f"{capacity} — every combine level re-blocks M rows into "
+            "ceil(M/capacity) machines of k centers each, so the center "
+            "union never shrinks")
+    if warn and capacity < 2 * k:
+        warnings.warn(
+            f"capacity={capacity} < 2k={2 * k}: paper §3.3 requires "
+            "2k < c for the round recurrence to converge; combine may "
+            "stall and raise", RuntimeWarning, stacklevel=3)
+
+
 class Executor:
     """Base: block-mapped round 1 + shared Lemma-3 reduction."""
 
@@ -186,10 +219,23 @@ class Executor:
         vmapped GON level (paper §3.3 — each extra level adds +2 to the
         approximation factor), then the final single-machine GON.
         Returns ``(centers (k, d), extra_rounds)``.
+
+        ``capacity`` is validated up front (``check_combine_capacity``):
+        ``capacity <= k`` makes every level *grow* the union, so it raises
+        instead of looping forever; ``capacity < 2k`` warns (§3.3) and a
+        divergence guard raises if a level fails to shrink the union (or
+        more than 64 levels accumulate — the same bound ``plan_rounds``
+        enforces).
         """
+        check_combine_capacity(k, capacity)
         extra = 0
         while centers.shape[0] > capacity and centers.shape[0] > k:
             m2 = -(-centers.shape[0] // capacity)  # >= 2 since rows > capacity
+            if m2 * k >= centers.shape[0] or extra >= 64:
+                # With capacity >= 2k a level always shrinks the union
+                # (m2*k <= M/2 + k < M); reaching here means the warned
+                # k < capacity < 2k regime stalled on the ceil.
+                raise ValueError(_DIVERGED_MSG)
             blocked, bmask = _block(centers, m2)
             vpad = jnp.pad(valid, (0, bmask.size - valid.shape[0]),
                            constant_values=False)
@@ -201,10 +247,14 @@ class Executor:
 
     def radius2(self, source, centers: jnp.ndarray, *, impl: str = "auto",
                 chunk: int | None = None) -> jnp.ndarray:
-        """Squared covering radius over ALL source points (streamed)."""
-        r = jnp.sqrt(engine.fold_min_d2(source, centers, impl=impl,
-                                        chunk=chunk))
-        return r * r
+        """Squared covering radius over ALL source points (streamed).
+
+        Returns the squared fold ``max(min_d2)`` *directly* — no
+        ``sqrt(d2)`` → ``r*r`` round-trip, which is lossy in f32 (the fold
+        is already squared). All executor paths return the same exact
+        value, which is what the cross-path bitwise parity tests compare.
+        """
+        return engine.fold_min_d2(source, centers, impl=impl, chunk=chunk)
 
     def run_filter_round(self, source, s_new, d_s: np.ndarray,
                          h_mask: np.ndarray, rank: int, *,
@@ -241,6 +291,10 @@ class Executor:
         source = as_source(source)
         if capacity is None:
             capacity = self.default_capacity(source, k)
+        # Fail on an infeasible capacity *before* the round-1 pass over
+        # all of n, not inside combine's reduction loop (warn=False:
+        # combine's own check owns the §3.3 warning).
+        check_combine_capacity(k, capacity, warn=False)
         fn = gon_block_fn(k, impl, chunk)
         centers, valid = self.run_blocks(fn, source)
         centers, extra = self.combine(centers, valid, k, capacity,
@@ -268,11 +322,13 @@ class SimExecutor(Executor):
         return max(-(-source.n // self.m), 2 * k)
 
     def radius2(self, source, centers, *, impl="auto", chunk=None):
-        # Device-resident input: the legacy single-pass radius (identical
-        # values; avoids re-blocking an array that is already in HBM).
-        r = covering_radius(source.materialize(), centers, impl=impl,
-                            chunk=chunk)
-        return r * r
+        # Device-resident input: one single-pass fold (avoids re-blocking
+        # an array that is already in HBM). Returns the squared max
+        # directly — the sqrt→square round-trip of ``covering_radius`` is
+        # lossy in f32 and would break cross-path bitwise parity.
+        _, d2 = ops.assign_nearest(source.materialize(), centers, impl=impl,
+                                   chunk=chunk)
+        return jnp.max(d2)
 
     def _blocked_for(self, source):
         """Materialize + block once per source object (EIM calls the
@@ -361,7 +417,15 @@ class HostStreamExecutor(Executor):
         rows = self.rows_for(source)
         outs = []
         for blk in self._blocks(source, rows):
-            mask = jnp.ones((blk.shape[0],), bool)
+            nb = blk.shape[0]
+            if nb < rows:
+                # Pad the ragged final block to the common shape and mask
+                # the padding off: one compilation of the per-machine GON
+                # serves every block (the mask is a traced operand, and a
+                # masked GON picks bitwise-identical centers — padded rows
+                # sit at the _NEG sentinel and can never be selected).
+                blk = jnp.pad(blk, ((0, rows - nb), (0, 0)))
+            mask = jnp.arange(rows) < nb
             outs.append(fn(blk, mask))                     # (k, d) each
         centers = jnp.concatenate(outs, axis=0)            # (M*k, d)
         valid = jnp.ones((centers.shape[0],), bool)
@@ -371,11 +435,9 @@ class HostStreamExecutor(Executor):
         return max(self.rows_for(source), 2 * k)
 
     def radius2(self, source, centers, *, impl="auto", chunk=None):
-        r = jnp.sqrt(engine.fold_min_d2(source, centers, impl=impl,
-                                        chunk=chunk,
-                                        block_rows=self.rows_for(source),
-                                        prefetch=self.prefetch))
-        return r * r
+        return engine.fold_min_d2(source, centers, impl=impl, chunk=chunk,
+                                  block_rows=self.rows_for(source),
+                                  prefetch=self.prefetch)
 
     def run_filter_round(self, source, s_new, d_s, h_mask, rank, *,
                          impl="auto", chunk=None):
@@ -384,7 +446,14 @@ class HostStreamExecutor(Executor):
         while the shard is device-resident; only the shard, S_new, and the
         (rank,)-sized running top-k occupy the device. The per-point state
         (d_s, h_mask) stays host-resident — O(n) bytes next to the (n, d)
-        points that never materialize."""
+        points that never materialize.
+
+        ``source`` may be a compacted ``IndexedSource`` view (``d_s`` /
+        ``h_mask`` then hold the per-view slices). Every block is padded
+        to the resolved ``rows`` shape — padded lanes carry ``H=False``
+        (never enter the pivot top-k) and their distance update is
+        discarded — so one compilation of the fused block kernel serves
+        all iterations over a given view, ragged tail included."""
         rows = self.rows_for(source)
         have_s = s_new is not None and len(s_new) > 0
         if have_s:
@@ -393,13 +462,21 @@ class HostStreamExecutor(Executor):
         off = 0
         for blk in self._blocks(source, rows):
             nb = blk.shape[0]
-            d_blk = jnp.asarray(d_s[off:off + nb])
-            h_blk = jnp.asarray(h_mask[off:off + nb])
+            d_np = d_s[off:off + nb]
+            h_np = h_mask[off:off + nb]
+            if nb < rows:
+                pad = rows - nb
+                blk = jnp.pad(blk, ((0, pad), (0, 0)))
+                d_np = np.concatenate(
+                    [d_np, np.full(pad, np.float32(3.4e38), np.float32)])
+                h_np = np.concatenate([h_np, np.zeros(pad, bool)])
+            d_blk = jnp.asarray(d_np)
+            h_blk = jnp.asarray(h_np)
             if have_s:
                 d_blk, top = _eim_filter_block(blk, c, d_blk, h_blk, top,
                                                rank=rank, impl=impl,
                                                chunk=chunk)
-                d_s[off:off + nb] = np.asarray(d_blk)
+                d_s[off:off + nb] = np.asarray(d_blk)[:nb]
             else:
                 top = _eim_pivot_block(d_blk, h_blk, top, rank=rank)
             off += nb

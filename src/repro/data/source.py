@@ -255,9 +255,20 @@ class MemmapSource:
         return int(self._maps[0].shape[1])
 
     def _slice(self, start: int, stop: int) -> np.ndarray:
-        """Rows ``[start, stop)`` of the logical concatenation, as f32."""
+        """Rows ``[start, stop)`` of the logical concatenation, as f32.
+
+        Only the shards overlapping the range are touched — located by
+        ``np.searchsorted`` on the cumulative ``_offsets`` (the same index
+        ``take`` uses), so a block stream costs O(blocks + shards) shard
+        visits total instead of O(blocks · shards)."""
+        if stop <= start:
+            return np.zeros((0, self.d), np.float32)
+        first = int(np.searchsorted(self._offsets, start, side="right")) - 1
+        last = int(np.searchsorted(self._offsets, stop, side="left"))
         pieces = []
-        for m, off in zip(self._maps, self._offsets[:-1]):
+        for s in range(max(first, 0), last):
+            off = int(self._offsets[s])
+            m = self._maps[s]
             lo = max(start - off, 0)
             hi = min(stop - off, m.shape[0])
             if lo < hi:
@@ -373,6 +384,89 @@ class SyntheticSource:
     def materialize(self) -> jnp.ndarray:
         return jnp.concatenate(
             [jnp.asarray(b) for b in self.host_blocks(1 << 20)], axis=0)
+
+
+class IndexedSource:
+    """A view of a parent source through a sorted global-row index array.
+
+    This is how the compacted-R streamed EIM makes a shrunken relation a
+    first-class ``PointSource``: view-row ``j`` is parent-row
+    ``indices[j]``, so a fold over the view touches only the surviving
+    rows while every per-row identity (the Philox counter the Round-1
+    sampler keys on) stays the *parent's* absolute index.
+
+    ``indices`` must be strictly increasing (sorted, duplicate-free) — the
+    view preserves global row order, which is what keeps cross-block value
+    folds (min / top-k) bitwise identical to the uncompacted pass, and
+    what lets ``take`` exploit maximal consecutive runs in the parent
+    (``SyntheticSource.take`` regenerates one run per ``block_fn`` call;
+    ``MemmapSource.take`` fancy-indexes each shard once).
+
+    Nested views compose: ``IndexedSource(IndexedSource(p, a), b)``
+    re-points at ``p`` through ``a[b]``, so chained compactions never
+    stack gather layers.
+    """
+
+    def __init__(self, parent, indices):
+        idx = np.asarray(indices, np.int64).reshape(-1)
+        if idx.size:
+            if idx[0] < 0 or idx[-1] >= parent.n:
+                # (idx is checked sorted below, so min/max are the ends —
+                # but report honest bounds even for unsorted input)
+                raise IndexError(
+                    f"view indices out of range [0, {parent.n}): "
+                    f"min={idx.min()}, max={idx.max()}")
+            if idx.size > 1 and (np.diff(idx) <= 0).any():
+                raise ValueError(
+                    "IndexedSource indices must be strictly increasing "
+                    "(sorted, no duplicates) — the view preserves global "
+                    "row order")
+        if isinstance(parent, IndexedSource):
+            idx = parent._idx[idx]
+            parent = parent._parent
+        self._parent = parent
+        self._idx = idx
+
+    @property
+    def parent(self):
+        return self._parent
+
+    @property
+    def indices(self) -> np.ndarray:
+        """The (root-composed) global row indices this view selects."""
+        return self._idx
+
+    @property
+    def n(self) -> int:
+        return int(self._idx.size)
+
+    @property
+    def d(self) -> int:
+        return self._parent.d
+
+    def host_blocks(self, block_rows: int) -> Iterator[np.ndarray]:
+        """Numpy blocks gathered from the parent (``take`` exploits
+        maximal runs), no device transfer."""
+        rows = _check_rows(block_rows)
+        for start in range(0, self.n, rows):
+            yield self._parent.take(self._idx[start:start + rows])
+
+    def blocks(self, block_rows: int, *,
+               prefetch: int = DEFAULT_PREFETCH) -> Iterator[jnp.ndarray]:
+        return _stream_device(self.host_blocks(block_rows), prefetch)
+
+    def row(self, idx: int) -> np.ndarray:
+        if not 0 <= idx < self.n:
+            raise IndexError(f"row {idx} out of range for n={self.n}")
+        return self._parent.row(int(self._idx[idx]))
+
+    def take(self, indices) -> np.ndarray:
+        """Gather view rows — composes through to the parent's indices."""
+        idx = _check_take_indices(indices, self.n)
+        return self._parent.take(self._idx[idx])
+
+    def materialize(self) -> jnp.ndarray:
+        return jnp.asarray(self._parent.take(self._idx))
 
 
 def _philox_at(seed: int, offset: int) -> np.random.Generator:

@@ -36,6 +36,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import ref
 from .assign import DEFAULT_BM as _A_BM
@@ -381,6 +382,60 @@ def bernoulli_rows_block(key, start_lo, start_hi, rows: int, p):
     k0, k1 = _key_words(key)
     u = _uniform_rows_words(k0, k1, start_lo, start_hi, rows)
     return u < jnp.asarray(p, jnp.float32)
+
+
+def split_index_words(indices) -> tuple[np.ndarray, np.ndarray]:
+    """Host-side split of 64-bit absolute row indices into uint32 counter
+    words (jnp cannot hold int64 with JAX_ENABLE_X64 off — the split
+    happens in numpy before anything touches the device). The words are
+    the operand form ``bernoulli_rows_at_block`` consumes."""
+    idx = np.asarray(indices, np.uint64).reshape(-1)
+    return ((idx & np.uint64(0xFFFFFFFF)).astype(np.uint32),
+            (idx >> np.uint64(32)).astype(np.uint32))
+
+
+def _uniform_at_words(k0, k1, c_lo, c_hi) -> jnp.ndarray:
+    bits = _philox_rows(k0, k1, c_lo, c_hi)
+    return (bits >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(2.0 ** -24)
+
+
+def uniform_rows_at(key, indices) -> jnp.ndarray:
+    """Gather-form ``uniform_rows``: counter-based U[0,1) at *arbitrary*
+    absolute row indices.
+
+    Row i's draw is the same pure function of ``(key, i)`` as
+    ``uniform_rows`` evaluates, so for any index array ``idx``::
+
+        uniform_rows_at(key, idx) == uniform_rows(key, 0, n)[idx]
+
+    bitwise. This is what keeps the compacted-R streamed EIM's Round-1
+    sampling identical to the full-view path: a survivor's Bernoulli
+    decision is keyed by its *original* global row index, never by its
+    position inside the compacted view. ``indices`` is host numpy
+    (64-bit indices are split into uint32 counter words on the host, so
+    the call is x64-off safe).
+    """
+    k0, k1 = _key_words(key)
+    lo, hi = split_index_words(indices)
+    return _uniform_at_words(k0, k1, jnp.asarray(lo), jnp.asarray(hi))
+
+
+def bernoulli_rows_at(key, indices, p) -> jnp.ndarray:
+    """Per-row Bernoulli(p) draws at arbitrary absolute row indices —
+    ``uniform_rows_at(key, indices) < p`` in f32, bitwise identical to
+    ``bernoulli_rows(key, 0, n, p)[indices]`` for the same f32 ``p``."""
+    return uniform_rows_at(key, indices) < jnp.asarray(p, jnp.float32)
+
+
+@jax.jit
+def bernoulli_rows_at_block(key, idx_lo, idx_hi, p):
+    """Jitted gather-form Bernoulli block: the index words arrive as
+    *operands* (uint32 arrays of one fixed block shape — callers pad the
+    tail), so one compilation per block shape serves every iteration and
+    every compacted view."""
+    k0, k1 = _key_words(key)
+    return _uniform_at_words(k0, k1, idx_lo, idx_hi) < jnp.asarray(
+        p, jnp.float32)
 
 
 # ---------------------------------------------------------------------------

@@ -52,6 +52,10 @@ argmin_dist2_over_source = engine.argmin_dist2_over_source
 uniform_rows = engine.uniform_rows
 bernoulli_rows = engine.bernoulli_rows
 bernoulli_rows_block = engine.bernoulli_rows_block
+split_index_words = engine.split_index_words
+uniform_rows_at = engine.uniform_rows_at
+bernoulli_rows_at = engine.bernoulli_rows_at
+bernoulli_rows_at_block = engine.bernoulli_rows_at_block
 top_k_init = engine.top_k_init
 merge_top_k = engine.merge_top_k
 fold_top_k = engine.fold_top_k

@@ -26,8 +26,9 @@ import pytest
 
 from repro.core import HostStreamExecutor, SimExecutor, eim, eim_sample
 from repro.core.eim import _sample_cap
-from repro.data import ArraySource, HostSource, MemmapSource, synthetic_source
-from repro.kernels import engine
+from repro.data import (ArraySource, HostSource, MemmapSource,
+                        SyntheticSource, synthetic_source)
+from repro.kernels import engine, ops
 
 
 def _pts(n, d=2, seed=0):
@@ -95,6 +96,45 @@ def test_uniform_rows_distribution():
     assert abs(b.mean() - 0.1) < 0.005
 
 
+def test_uniform_rows_at_is_gather_of_full_range():
+    # the gather-form sampler is the same pure function of (key, row id):
+    # evaluating at arbitrary indices == indexing the full-range draw
+    key = jax.random.PRNGKey(11)
+    full = np.asarray(engine.uniform_rows(key, 0, 10_000))
+    idx = np.sort(np.random.default_rng(3).choice(10_000, 3000,
+                                                  replace=False))
+    np.testing.assert_array_equal(
+        np.asarray(engine.uniform_rows_at(key, idx)), full[idx])
+    p = np.float32(0.25)
+    np.testing.assert_array_equal(
+        np.asarray(engine.bernoulli_rows_at(key, idx, p)),
+        np.asarray(engine.bernoulli_rows(key, 0, 10_000, p))[idx])
+
+
+def test_uniform_rows_at_crosses_2_32_boundary():
+    # indices are 64-bit: the split into uint32 counter words must carry
+    key = jax.random.PRNGKey(3)
+    idx = np.array([(1 << 32) - 2, (1 << 32) - 1, 1 << 32, (1 << 32) + 1],
+                   np.uint64)
+    whole = np.asarray(engine.uniform_rows(key, (1 << 32) - 2, 4))
+    np.testing.assert_array_equal(
+        np.asarray(engine.uniform_rows_at(key, idx)), whole)
+
+
+def test_bernoulli_rows_at_block_padded_operands_agree():
+    # the jitted fixed-shape block form (padded index words as operands)
+    # must agree with the unjitted gather form on the live lanes
+    key = jax.random.PRNGKey(5)
+    idx = np.array([3, 17, 256, 9000], np.uint64)
+    lo, hi = engine.split_index_words(idx)
+    lo = np.pad(lo, (0, 4))     # pad to a fixed 8-lane block
+    hi = np.pad(hi, (0, 4))
+    got = np.asarray(engine.bernoulli_rows_at_block(key, lo, hi,
+                                                    np.float32(0.4)))[:4]
+    want = np.asarray(engine.bernoulli_rows_at(key, idx, np.float32(0.4)))
+    np.testing.assert_array_equal(got, want)
+
+
 def test_fold_top_k_matches_monolithic():
     v = _pts(3000, d=1, seed=4).reshape(-1)
     want = np.asarray(jax.lax.top_k(jnp.asarray(v), 17)[0])
@@ -148,6 +188,139 @@ def test_eim_sample_sim_executor_bitwise(device_sample):
     _assert_sample_equal(dev, got)
 
 
+# ---------------------------------------------------------------------------
+# compacted-R parity grid: compact_threshold ∈ {0 never, 0.5, 1 always} ×
+# Host/Memmap/Synthetic sources × block_rows — all bitwise vs the device path
+# ---------------------------------------------------------------------------
+
+THRESHOLDS = [0.0, 0.5, 1.0]
+
+
+@pytest.mark.parametrize("compact_threshold", THRESHOLDS)
+@pytest.mark.parametrize("block_rows", [3777, 8192])
+def test_eim_sample_compacted_host_bitwise(device_sample, compact_threshold,
+                                           block_rows):
+    # Round-1 draws are keyed by *original* row ids and the fold rounds
+    # are per-row/value reductions, so the sample is invariant to
+    # whether/when the relation was compacted into an IndexedSource view
+    x, key, dev = device_sample
+    got = eim_sample(HostSource(x), K, key, eps=0.1, phi=8.0, impl="ref",
+                     executor=HostStreamExecutor(block_rows=block_rows),
+                     compact_threshold=compact_threshold)
+    _assert_sample_equal(dev, got)
+
+
+@pytest.mark.parametrize("compact_threshold", THRESHOLDS)
+def test_eim_sample_compacted_memmap_bitwise(tmp_path, device_sample,
+                                             compact_threshold):
+    x, key, dev = device_sample
+    src = MemmapSource.save_shards(x, tmp_path, rows_per_shard=1500)
+    got = eim_sample(src, K, key, eps=0.1, phi=8.0, impl="ref",
+                     executor=HostStreamExecutor(block_rows=4096),
+                     compact_threshold=compact_threshold)
+    _assert_sample_equal(dev, got)
+
+
+@pytest.mark.parametrize("compact_threshold", THRESHOLDS)
+def test_eim_sample_compacted_synthetic_bitwise(device_sample,
+                                                compact_threshold):
+    # generator-backed source: the view's gathers regenerate runs on the
+    # host — the sample must still be bitwise the device path's
+    x, key, dev = device_sample
+    src = SyntheticSource(lambda start, rows: x[start:start + rows],
+                          N_SAMPLING, x.shape[1], name="fixture")
+    got = eim_sample(src, K, key, eps=0.1, phi=8.0, impl="ref",
+                     executor=HostStreamExecutor(block_rows=4096),
+                     compact_threshold=compact_threshold)
+    _assert_sample_equal(dev, got)
+
+
+@pytest.mark.parametrize("compact_threshold", [0.5, 1.0])
+def test_eim_sample_compacted_sim_executor_bitwise(device_sample,
+                                                   compact_threshold):
+    # SimExecutor re-materializes its blocked cache per view object (the
+    # weakref key changes on every compaction switch) — stale-state-free
+    x, key, dev = device_sample
+    got = eim_sample(ArraySource(x), K, key, eps=0.1, phi=8.0, impl="ref",
+                     executor=SimExecutor(m=8),
+                     compact_threshold=compact_threshold)
+    _assert_sample_equal(dev, got)
+
+
+class _MeteredSource(HostSource):
+    """HostSource that counts rows served per blocks() pass and via take."""
+
+    def __init__(self, x):
+        super().__init__(x)
+        self.pass_rows = []        # rows yielded per blocks() stream
+        self.take_rows = 0
+        self.max_block = 0
+
+    def host_blocks(self, block_rows):
+        self.pass_rows.append(0)
+        for blk in super().host_blocks(block_rows):
+            self.pass_rows[-1] += blk.shape[0]
+            self.max_block = max(self.max_block, blk.shape[0])
+            yield blk
+
+    def take(self, indices):
+        out = super().take(indices)
+        self.take_rows += out.shape[0]
+        self.max_block = max(self.max_block, out.shape[0])
+        return out
+
+
+class _MeteredExecutor(HostStreamExecutor):
+    """Records the view size (rows the pass touches) per filter round."""
+
+    def __init__(self, **kw):
+        super().__init__(**kw)
+        self.filter_pass_rows = []
+
+    def run_filter_round(self, source, *a, **kw):
+        self.filter_pass_rows.append(source.n)
+        return super().run_filter_round(source, *a, **kw)
+
+
+def test_eim_compaction_shrinks_per_iteration_pass_rows(device_sample):
+    # the tentpole's point: with compaction the fold's per-iteration pass
+    # touches |R∪H| rows, not n — and the view's gathers stay under the
+    # executor's block budget
+    x, key, dev = device_sample
+    rows = 4096
+    ex0 = _MeteredExecutor(block_rows=rows)
+    eim_sample(HostSource(x), K, key, eps=0.1, phi=8.0, impl="ref",
+               executor=ex0, compact_threshold=0.0)
+    src = _MeteredSource(x)
+    ex1 = _MeteredExecutor(block_rows=rows)
+    got = eim_sample(src, K, key, eps=0.1, phi=8.0, impl="ref",
+                     executor=ex1, compact_threshold=1.0)
+    _assert_sample_equal(dev, got)
+    iters = int(dev.iters)
+    # baseline: every filter pass touches all n rows, T times
+    assert ex0.filter_pass_rows == [N_SAMPLING] * iters
+    # compacted: the first pass sees all n, every later pass the shrunken
+    # view — monotone non-increasing and strictly below n by the end
+    passes = ex1.filter_pass_rows
+    assert len(passes) == iters
+    assert passes[0] == N_SAMPLING
+    assert all(a >= b for a, b in zip(passes, passes[1:]))
+    assert passes[-1] < N_SAMPLING
+    assert sum(passes) < iters * N_SAMPLING
+    # out-of-core discipline holds during the view's gathers: every block
+    # DMA'd (directly or via IndexedSource.take) is within the budget
+    assert src.max_block <= rows
+
+
+def test_eim_compact_threshold_validation():
+    x = _pts(1000, seed=3)
+    with pytest.raises(ValueError, match="compact_threshold"):
+        eim_sample(HostSource(x), 4, jax.random.PRNGKey(0),
+                   compact_threshold=1.5)
+    with pytest.raises(ValueError, match="compact_threshold"):
+        eim(HostSource(x), 4, jax.random.PRNGKey(0), compact_threshold=-0.1)
+
+
 def test_eim_full_streamed_bitwise(device_sample):
     x, key, _ = device_sample
     r_dev = eim(jnp.asarray(x), K, key, impl="ref")
@@ -157,6 +330,19 @@ def test_eim_full_streamed_bitwise(device_sample):
                                   np.asarray(r_str.centers))
     assert float(r_dev.radius2) == float(r_str.radius2)
     _assert_sample_equal(r_dev.sample, r_str.sample)
+
+
+def test_eim_radius2_is_exact_squared_fold(device_sample):
+    # radius2 must be max(min_d2) exactly — no sqrt(d2)→r*r f32 round-trip
+    # — on the device path and every executor path (they move together)
+    x, key, _ = device_sample
+    for res in (eim(jnp.asarray(x), K, key, impl="ref"),
+                eim(HostSource(x), K, key, impl="ref",
+                    executor=HostStreamExecutor(block_rows=4096)),
+                eim(ArraySource(x), K, key, impl="ref",
+                    executor=SimExecutor(m=8))):
+        _, d2 = ops.assign_nearest(jnp.asarray(x), res.centers, impl="ref")
+        assert float(res.radius2) == float(jnp.max(d2))
 
 
 def test_eim_degenerate_small_n_streamed():

@@ -22,8 +22,8 @@ from repro.core import (HostStreamExecutor, SimExecutor, covering_radius,
                         eim, gonzalez, mrg, mrg_sim, plan_rounds,
                         select_coreset, stream_init, stream_result,
                         stream_update)
-from repro.data import (ArraySource, HostSource, MemmapSource, as_source,
-                        synthetic_source, unif)
+from repro.data import (ArraySource, HostSource, IndexedSource, MemmapSource,
+                        as_source, synthetic_source, unif)
 
 
 def _pts(n=640, d=5, seed=0):
@@ -134,6 +134,89 @@ def test_as_source_coercion():
     assert isinstance(as_source(jnp.asarray(x)), ArraySource)
     src = HostSource(x)
     assert as_source(src) is src
+
+
+# ---------------------------------------------------------------------------
+# IndexedSource: sorted global-row views (the compacted-R substrate)
+# ---------------------------------------------------------------------------
+
+def _view_parents(tmp_path):
+    x = _pts()
+    full = unif(640, 5, seed=21)
+    return [(HostSource(x), x),
+            (ArraySource(x), x),
+            (MemmapSource.save_shards(x, tmp_path, rows_per_shard=100), x),
+            (synthetic_source("unif", 640, d=5, seed=21), full)]
+
+
+@pytest.mark.parametrize("block_rows", [1, 7, 64, 1000])
+def test_indexed_source_blocks_match_fancy_index(tmp_path, block_rows):
+    idx = np.unique(np.random.default_rng(5).choice(640, 200, replace=False))
+    for parent, ref in _view_parents(tmp_path):
+        v = IndexedSource(parent, idx)
+        assert v.n == idx.size and v.d == 5
+        got = np.concatenate([np.asarray(b) for b in v.blocks(block_rows)])
+        np.testing.assert_array_equal(got, ref[idx])
+        np.testing.assert_array_equal(np.asarray(v.materialize()), ref[idx])
+
+
+def test_indexed_source_row_and_take_compose_indices(tmp_path):
+    idx = np.array([0, 5, 6, 7, 100, 639])
+    for parent, ref in _view_parents(tmp_path):
+        v = IndexedSource(parent, idx)
+        for j in range(idx.size):
+            np.testing.assert_array_equal(np.asarray(v.row(j)), ref[idx[j]])
+        np.testing.assert_array_equal(v.take([5, 0, 2]),
+                                      ref[idx][[5, 0, 2]])
+        with pytest.raises(IndexError):
+            v.take([idx.size])
+        with pytest.raises(IndexError):
+            v.row(idx.size)
+
+
+def test_indexed_source_rejects_duplicates_unsorted_and_oob():
+    src = HostSource(_pts())
+    with pytest.raises(ValueError, match="strictly increasing"):
+        IndexedSource(src, [1, 1, 2])           # duplicate
+    with pytest.raises(ValueError, match="strictly increasing"):
+        IndexedSource(src, [5, 3])              # unsorted
+    with pytest.raises(IndexError, match="out of range"):
+        IndexedSource(src, [0, 640])            # past n
+    with pytest.raises(IndexError, match="out of range"):
+        IndexedSource(src, [-1, 0])
+
+
+def test_indexed_source_nested_views_compose():
+    x = _pts()
+    src = HostSource(x)
+    outer = IndexedSource(src, np.arange(0, 640, 2))     # evens
+    inner = IndexedSource(outer, np.array([0, 3, 10, 319]))
+    # the nested view re-points at the root parent with composed indices
+    assert inner.parent is src
+    np.testing.assert_array_equal(inner.indices, np.array([0, 6, 20, 638]))
+    np.testing.assert_array_equal(np.asarray(inner.materialize()),
+                                  x[[0, 6, 20, 638]])
+    # empty view is legal (a fully-filtered relation)
+    empty = IndexedSource(src, np.zeros((0,), np.int64))
+    assert empty.n == 0
+    assert list(empty.blocks(8)) == []
+
+
+def test_memmap_many_shards_slice_visits_only_overlaps(tmp_path):
+    # 64+ shards: block streams and materialize must stay bitwise while
+    # _slice locates overlapping shards by searchsorted instead of
+    # scanning every shard per block
+    x = _pts(n=1280, d=3, seed=17)
+    src = MemmapSource.save_shards(x, tmp_path, rows_per_shard=20)
+    assert src.num_shards == 64
+    for rows in (1, 19, 20, 33, 256, 1280):
+        got = np.concatenate([np.asarray(b) for b in src.blocks(rows)])
+        np.testing.assert_array_equal(got, x)
+    np.testing.assert_array_equal(np.asarray(src.materialize()), x)
+    np.testing.assert_array_equal(src._slice(19, 21), x[19:21])
+    np.testing.assert_array_equal(src._slice(0, 1), x[0:1])
+    np.testing.assert_array_equal(src._slice(1279, 1280), x[1279:1280])
+    assert src._slice(7, 7).shape == (0, 3)
 
 
 # ---------------------------------------------------------------------------
@@ -338,6 +421,96 @@ def test_select_coreset_reverse_passes_inherit_executor_budget():
     select_coreset(src, 4, impl="ref",
                    executor=HostStreamExecutor(block_rows=50))
     assert src.requested == {50}
+
+
+def test_mrg_infeasible_capacity_raises_instead_of_hanging():
+    # regression: mrg(x, 8, capacity=4) used to loop forever in combine
+    # (400 rows -> m2=100 -> 800 rows: the union grows every level)
+    x = _pts(n=400, d=3, seed=20)
+    with pytest.raises(ValueError, match="infeasible"):
+        mrg(jnp.asarray(x), 8, capacity=4, impl="ref")
+    with pytest.raises(ValueError, match="infeasible"):
+        mrg(jnp.asarray(x), 8, capacity=8, impl="ref")   # capacity == k
+    with pytest.raises(ValueError, match="infeasible"):
+        mrg(HostSource(x), 8, capacity=4, impl="ref",
+            executor=HostStreamExecutor(block_rows=50))
+    # mrg(x, k, capacity=k//2) — the ISSUE's acceptance form
+    with pytest.raises(ValueError, match="infeasible"):
+        mrg(jnp.asarray(x), 8, capacity=4, impl="ref", m=8)
+
+
+def test_combine_capacity_below_2k_warns_and_divergence_raises():
+    # §3.3 requires 2k < c; k < capacity < 2k may stall on the ceil —
+    # warn up front, and the divergence guard raises instead of spinning
+    x = _pts(n=400, d=3, seed=21)
+    with pytest.warns(RuntimeWarning, match="2k"):
+        with pytest.raises(ValueError, match="diverged"):
+            mrg(jnp.asarray(x), 8, m=8, capacity=12, impl="ref")
+    # a feasible capacity >= 2k neither warns nor raises
+    import warnings as _w
+    with _w.catch_warnings():
+        _w.simplefilter("error")
+        r = mrg(jnp.asarray(x), 8, m=8, capacity=16, impl="ref")
+    assert r.rounds >= 2
+
+
+def test_combine_validates_directly():
+    from repro.core.executor import Executor, check_combine_capacity
+    with pytest.raises(ValueError, match="infeasible"):
+        check_combine_capacity(8, 4)
+    centers = jnp.asarray(_pts(n=64, d=2, seed=5))
+    valid = jnp.ones(64, bool)
+    with pytest.raises(ValueError, match="infeasible"):
+        Executor().combine(centers, valid, 8, 4, impl="ref")
+
+
+class _ShapeSpyFn:
+    """BlockFn wrapper recording every block shape it is fed."""
+
+    def __init__(self, fn):
+        self.fn = fn
+        self.shapes = []
+
+    def __call__(self, pts, mask):
+        self.shapes.append(tuple(pts.shape))
+        return self.fn(pts, mask)
+
+
+def test_run_blocks_pads_ragged_tail_to_one_shape():
+    # jit-churn fix: the ragged final block is padded to `rows` with the
+    # mask argument carrying validity, so the per-machine GON compiles
+    # once per block shape instead of once per distinct tail size —
+    # the spy shape set is the compile-count proxy
+    from repro.core.executor import gon_block_fn
+    x = _pts(n=400, d=3, seed=22)               # 400 = 150+150+100 tail
+    spy = _ShapeSpyFn(gon_block_fn(4, "ref"))
+    ex = HostStreamExecutor(block_rows=150)
+    centers, valid = ex.run_blocks(spy, HostSource(x))
+    assert set(spy.shapes) == {(150, 3)}
+    assert centers.shape == (12, 3) and bool(valid.all())
+    # padding is invisible in the result: the tail machine's centers are
+    # the unpadded GON of the tail rows
+    tail = gonzalez(jnp.asarray(x[300:]), 4, impl="ref").centers
+    np.testing.assert_array_equal(np.asarray(centers[8:]), np.asarray(tail))
+
+
+def test_executor_radius2_is_exact_squared_fold():
+    # precision fix: radius2 returns max(min_d2) itself — not the lossy
+    # f32 sqrt→square round-trip — identically on every executor path
+    from repro.kernels import ops
+    x = _pts(n=500, d=4, seed=23)
+    c = gonzalez(jnp.asarray(x), 6, impl="ref").centers
+    _, d2 = ops.assign_nearest(jnp.asarray(x), c, impl="ref")
+    want = float(jnp.max(d2))
+    assert float(SimExecutor(m=4).radius2(ArraySource(x), c,
+                                          impl="ref")) == want
+    assert float(HostStreamExecutor(block_rows=77).radius2(
+        HostSource(x), c, impl="ref")) == want
+    # and mrg surfaces that exact value
+    r_mrg = mrg(HostSource(x), 6, impl="ref",
+                executor=HostStreamExecutor(block_rows=77))
+    _, d2m = ops.assign_nearest(jnp.asarray(x), r_mrg.centers, impl="ref")
+    assert float(r_mrg.radius2) == float(jnp.max(d2m))
 
 
 def test_host_stream_block_larger_than_n_is_one_machine():
