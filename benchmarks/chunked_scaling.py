@@ -34,6 +34,13 @@ below n once ``compact_threshold`` engages, the view's gathers must stay
 within the budget-derived super-shard, and the compacted sample must be
 bitwise the fixed-shape streamed sample.
 
+The **sharded section** (``sharded_out_of_core_rows``) closes the loop on
+the paper's machine model: per-host shard sources feed a 4-shard
+``MeshExecutor`` (subprocess with forced host devices) under an asserted
+per-shard ``memory_budget`` — a source-read spy proves no host-side
+full-n (or even full-shard) materialization on the path, and a
+smaller-n anchor pins the sharded result bitwise against ``mrg_sim``.
+
 Run: ``PYTHONPATH=src python -m benchmarks.chunked_scaling [--full]``
 (``--full`` pushes n to 10⁷; default tops out at 10⁶ to stay friendly to
 one CPU core). Also callable as ``run()`` yielding benchmarks/run.py-style
@@ -108,6 +115,7 @@ def run(full: bool = False):
     del x
 
     yield from out_of_core_rows(full)
+    yield from sharded_out_of_core_rows(full)
 
 
 def out_of_core_rows(full: bool = False):
@@ -317,6 +325,122 @@ def eim_compaction_rows(full: bool, rng: np.random.Generator):
            f"pass_rows={'/'.join(str(p) for p in passes)};"
            f"max_block={src_comp.max_block}<=shard={rows};"
            f"speedup={t_base / t_comp:.2f}x")
+
+
+_SHARDED_PROG = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={devices}"
+import json, time
+import jax
+import jax.numpy as jnp
+import numpy as np
+from repro import compat
+from repro.core import MeshExecutor, mrg, mrg_sim
+from repro.data import HostSource, ShardedSource, shard_source
+
+
+class SpyShard(HostSource):
+    def __init__(self, x):
+        super().__init__(x)
+        self.max_read = 0
+        self.materialized = False
+
+    def host_blocks(self, block_rows):
+        for blk in super().host_blocks(block_rows):
+            self.max_read = max(self.max_read, blk.shape[0])
+            yield blk
+
+    def take(self, indices):
+        out = super().take(indices)
+        self.max_read = max(self.max_read, out.shape[0])
+        return out
+
+    def materialize(self):
+        self.materialized = True
+        return super().materialize()
+
+
+S, D, k = {devices}, {D}, 16
+n, device_budget = {n}, {budget}
+full_bytes = 4 * n * D
+assert full_bytes > device_budget, "sharded demo misconfigured"
+shard_budget = device_budget // (2 * S)
+mesh = compat.make_mesh(np.array(jax.devices()[:S]), ("data",))
+rng = np.random.default_rng(11)
+x = rng.normal(size=(n, D)).astype(np.float32)
+per = -(-n // S)
+shards = [SpyShard(x[i * per:(i + 1) * per]) for i in range(S)]
+sh = ShardedSource.from_per_host_shards(shards)
+ex = MeshExecutor(mesh, memory_budget=shard_budget)
+rows = ex.rows_for(sh)
+assert rows * 4 * (D + 1) * (1 + ex.prefetch) <= shard_budget
+t0 = time.time()
+res = mrg(sh, k, executor=ex, impl="ref")
+jax.block_until_ready(res.centers)
+t = time.time() - t0
+assert all(s.max_read <= rows for s in shards), "spy: oversized shard read"
+assert not any(s.materialized for s in shards), "spy: full-shard materialize"
+
+# parity anchor: one block per shard == mrg_sim's m-machine blocking
+n_s = 65536
+xs = rng.normal(size=(n_s, D)).astype(np.float32)
+r_sim = mrg_sim(jnp.asarray(xs), k, m=S, impl="ref")
+r_sh = mrg(shard_source(HostSource(xs), S), k,
+           executor=MeshExecutor(mesh, block_rows=n_s // S), impl="ref")
+exact = (np.asarray(r_sim.centers) == np.asarray(r_sh.centers)).all() \\
+    and float(r_sim.radius2) == float(r_sh.radius2)
+print(json.dumps([
+    {{"name": "sharded_mrg_mesh_n%d" % n, "us": t * 1e6,
+      "derived": "shards=%d;points=%.0fMiB>budget=%.0fMiB;"
+                 "per_shard=%.1fMiB;rows=%d;max_read=%d;radius=%.4g"
+                 % (S, full_bytes / 2**20, device_budget / 2**20,
+                    shard_budget / 2**20, rows,
+                    max(s.max_read for s in shards),
+                    float(jnp.sqrt(res.radius2)))}},
+    {{"name": "sharded_parity_n%d" % n_s, "us": 0,
+      "derived": "bitwise=%s;vs=mrg_sim_m%d"
+                 % ("exact" if exact else "DRIFT", S)}},
+]))
+assert exact, "sharded mesh MRG drifted from mrg_sim"
+"""
+
+
+def sharded_out_of_core_rows(full: bool = False):
+    """Sharded out-of-core MRG: no host ever holds n (paper §3's model).
+
+    Runs in a subprocess with ``--xla_force_host_platform_device_count``
+    (the main process keeps its single-device view, like
+    tests/test_distributed.py): per-host ``SpyShard`` sources feed a
+    4-shard ``MeshExecutor`` under an *asserted* per-shard
+    ``memory_budget`` — the spy proves no shard ever served a read larger
+    than the budget-derived super-shard and nothing materialized a full
+    shard, while the whole (n, d) array is asserted not to fit the stated
+    device budget. A smaller-n anchor pins the sharded path bitwise
+    against ``mrg_sim``'s m-machine blocking.
+    """
+    import json
+    import os
+    import subprocess
+    import sys
+
+    import repro
+
+    devices = 4
+    n = 12_000_000 if full else 1_200_000
+    budget = (256 if full else 32) * 2 ** 20
+    prog = _SHARDED_PROG.format(devices=devices, D=D, n=n, budget=budget)
+    env = dict(os.environ)
+    # repro is a namespace package (no __init__.py): locate it by __path__.
+    src_dir = os.path.dirname(os.path.abspath(list(repro.__path__)[0]))
+    env["PYTHONPATH"] = src_dir + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    out = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                         text=True, env=env, timeout=3600)
+    if out.returncode != 0:
+        raise RuntimeError(
+            f"sharded out-of-core cell failed:\n{out.stderr[-3000:]}")
+    for row in json.loads(out.stdout.strip().splitlines()[-1]):
+        yield (row["name"], row["us"], row["derived"])
 
 
 def main() -> None:

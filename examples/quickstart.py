@@ -1,23 +1,34 @@
-"""Quickstart: the paper's three k-center algorithms on clustered data.
+"""Quickstart: the paper's three k-center algorithms on clustered data,
+on the source × executor substrate.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [--n N]
 
 Generates a GAU point set (25 planted clusters, paper §7.3), runs
-GON / MRG / EIM, and prints covering radii + timings — a miniature of the
-paper's Tables 2-4 experiment.
+GON / MRG / EIM three ways — in memory, out-of-core (``HostSource`` on a
+``HostStreamExecutor``), and sharded (``shard_source`` on a streamed
+``MeshExecutor``: each mesh shard streams its own per-host source, no
+host-side full-n pass) — and prints covering radii + timings: a miniature
+of the paper's Tables 2-4 experiment plus the repo's out-of-core
+contract. The streamed runs are *bitwise* the in-memory machine blocking,
+which the script asserts.
 """
+import argparse
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core import eim, gonzalez, mrg_sim
-from repro.data import gau
+from repro import compat
+from repro.core import (HostStreamExecutor, MeshExecutor, eim, gonzalez,
+                        mrg, mrg_sim)
+from repro.data import HostSource, gau, shard_source
 
 
-def main():
-    n, k_prime, k = 100_000, 25, 25
-    pts = jnp.asarray(gau(n, k_prime, seed=0))
+def main(n: int = 100_000) -> None:
+    k_prime = k = 25
+    x_np = np.asarray(gau(n, k_prime, seed=0), np.float32)
+    pts = jnp.asarray(x_np)
     print(f"GAU data: n={n}, planted clusters={k_prime}, k={k}\n")
 
     t0 = time.time()
@@ -26,11 +37,16 @@ def main():
     print(f"GON  (2-approx, sequential)      radius={g_r:8.4f}  "
           f"wall={time.time()-t0:6.2f}s")
 
+    m = 50
     t0 = time.time()
-    m = mrg_sim(pts, k, m=50)
-    m_r = float(jnp.sqrt(m.radius2))
-    print(f"MRG  (4-approx, {m.rounds} rounds, m=50)  radius={m_r:8.4f}  "
-          f"wall={time.time()-t0:6.2f}s (simulated machines)")
+    res_sim = mrg_sim(pts, k, m=m)
+    m_r = float(jnp.sqrt(res_sim.radius2))
+    # Lemma 3: 2 rounds give 4-approx, +2 per extra combine level (small
+    # --n forces extra levels because the k·m union outgrows ceil(n/m)).
+    m_approx = 2 * res_sim.rounds
+    print(f"MRG  ({m_approx}-approx, {res_sim.rounds} rounds, m={m})  "
+          f"radius={m_r:8.4f}  wall={time.time()-t0:6.2f}s "
+          f"(simulated machines)")
 
     t0 = time.time()
     e = eim(pts, k, jax.random.PRNGKey(0), eps=0.1, phi=8.0)
@@ -38,12 +54,42 @@ def main():
     print(f"EIM  (10-approx w.s.p., φ=8)     radius={e_r:8.4f}  "
           f"wall={time.time()-t0:6.2f}s "
           f"(iters={int(e.sample.iters)}, "
-          f"sample={int(e.sample.sample_mask.sum())})")
+          f"sample={int(np.asarray(e.sample.sample_mask).sum())})")
 
-    print("\nWith k = k', all three should find the planted clusters "
-          "(radius ≈ cluster σ-scale, paper Table 2's k=25 row).")
-    assert m_r <= 4 * g_r and e_r <= 10 * g_r
+    # --- out-of-core: same machine blocking as mrg_sim, streamed ---------
+    per = -(-n // m)
+    ex = HostStreamExecutor(block_rows=per)
+    t0 = time.time()
+    res_ooc = mrg(HostSource(x_np), k, executor=ex)
+    print(f"MRG  out-of-core (HostSource)    "
+          f"radius={float(jnp.sqrt(res_ooc.radius2)):8.4f}  "
+          f"wall={time.time()-t0:6.2f}s "
+          f"(super-shards of {per} rows, bitwise the m={m} blocking)")
+    assert np.array_equal(np.asarray(res_ooc.centers),
+                          np.asarray(res_sim.centers))
+    assert float(res_ooc.radius2) == float(res_sim.radius2)
+
+    # --- sharded: the paper's machine model — input partitioned across
+    # machines, each mesh shard streaming its own source ------------------
+    mesh = compat.make_mesh(np.array(jax.devices()[:1]), ("data",))
+    mex = MeshExecutor(mesh, block_rows=per)
+    t0 = time.time()
+    res_sh = mrg(shard_source(HostSource(x_np), mesh), k, executor=mex)
+    print(f"MRG  sharded (MeshExecutor)      "
+          f"radius={float(jnp.sqrt(res_sh.radius2)):8.4f}  "
+          f"wall={time.time()-t0:6.2f}s "
+          f"({mex.num_shards} mesh shard(s), per-shard streams)")
+    assert float(res_sh.radius2) == float(res_ooc.radius2)
+
+    print("\nWith k = k', all three algorithms should find the planted "
+          "clusters\n(radius ≈ cluster σ-scale, paper Table 2's k=25 row); "
+          "streamed runs are\nbitwise their in-memory machine blocking.")
+    assert m_r <= m_approx * g_r and e_r <= 10 * g_r
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(
+        description="k-center quickstart (GON / MRG / EIM, three substrates)")
+    ap.add_argument("--n", type=int, default=100_000,
+                    help="points to generate (default 100k)")
+    main(ap.parse_args().n)

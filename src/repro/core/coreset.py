@@ -51,6 +51,20 @@ def select_coreset(
     host/disk/generator ``PointSource``, so the embedding cloud is bounded
     by host RAM, not HBM. ``chunk`` streams every O(n·k) distance pass in
     row-blocks (kernels/engine.py) within a block.
+
+    Returns a ``Coreset`` ``(indices (k,) i32, centers (k, d),
+    weights (k,) — cluster sizes, summing to n, radius2 ())``. Reverse
+    passes (weights, center→example indices) inherit the executor's
+    ``block_rows``/``memory_budget``, so the out-of-core contract holds
+    end to end.
+
+    >>> import numpy as np
+    >>> emb = np.random.default_rng(0).normal(size=(100, 8)).astype(np.float32)
+    >>> cs = select_coreset(emb, 10)
+    >>> cs.indices.shape, cs.centers.shape
+    ((10,), (10, 8))
+    >>> int(cs.weights.sum())      # every example lands in one cluster
+    100
     """
     if is_source(embeddings):
         src = embeddings

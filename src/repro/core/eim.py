@@ -248,6 +248,19 @@ def eim(
     ``compact_threshold`` is the streamed loop's shrinking-|R| knob (see
     ``eim_sample``) — unrelated to ``compact``, which is about the *final*
     GON round.
+
+    Returns an ``EIMResult`` ``(centers (k, d), radius2 (), sample)``;
+    ``sample.sampled`` is False when n is too small for the sampling
+    regime to engage (the loop guard ``|R| > (4/ε)k·n^ε·log n`` — then
+    EIM degenerates to GON, as the paper observes for large k):
+
+    >>> import numpy as np, jax
+    >>> x = np.random.default_rng(0).normal(size=(512, 3)).astype(np.float32)
+    >>> res = eim(x, 8, jax.random.PRNGKey(1))
+    >>> res.centers.shape
+    (8, 3)
+    >>> bool(res.sample.sampled)   # n = 512 is below the sampling regime
+    False
     """
     compact_threshold = _check_compact_threshold(compact_threshold)
     streamed = is_source(points) and not isinstance(points, ArraySource)
@@ -442,12 +455,12 @@ def _eim_sample_stream(source, k: int, key, *, eps: float, phi: float,
     value folds are blocking-invariant).
     """
     if type(executor).run_filter_round is Executor.run_filter_round:
-        # Fail before the loop does any work (MeshExecutor's rounds are a
-        # fused shard_map program without the per-iteration hook).
+        # Fail before the loop does any work (a bare Executor subclass
+        # without the per-iteration hook cannot run the filter rounds).
         raise NotImplementedError(
             f"{type(executor).__name__} does not implement EIM's "
-            "run_filter_round; use HostStreamExecutor (streamed) or "
-            "SimExecutor (vmapped machines)")
+            "run_filter_round; use HostStreamExecutor (streamed), "
+            "SimExecutor (vmapped machines) or MeshExecutor (sharded)")
     n = source.n
     _, threshold, s_cap, _, rank, num_s, num_h = _params(n, k, eps, phi)
     rows = (executor.rows_for(source) if hasattr(executor, "rows_for")

@@ -9,14 +9,19 @@ shards in ``mrg_distributed``, and device-resident arrays everywhere. An
 ``Executor`` owns that choice, so ``repro.core.mrg.mrg`` is one algorithm
 over any substrate:
 
-=================== ======================= ===================== ==========
+=================== ======================= ===================== ===========
 executor            machines                capacity knob         input
-=================== ======================= ===================== ==========
+=================== ======================= ===================== ===========
 SimExecutor         m vmapped blocks        ``capacity`` (rows)   device
 MeshExecutor        mesh shards             shard size / axes     device
+(fused device path)                         (``hierarchical``)
+MeshExecutor        mesh shards, each       ``memory_budget`` /   per-shard
+(sharded streamed)  streaming its own       ``block_rows``        sources —
+                    per-shard source        (per shard) +         no host
+                                            ``capacity`` (rows)   holds n
 HostStreamExecutor  sequential super-shards ``memory_budget`` /   host RAM /
                     DMA'd from the source   ``block_rows``        disk
-=================== ======================= ===================== ==========
+=================== ======================= ===================== ===========
 
 Interface (paper correspondence in brackets):
 
@@ -42,6 +47,12 @@ fold over super-shards DMA'd from a ``HostSource``/``MemmapSource``
 (prefetch-ring buffered, see data/source.py), so ``mrg`` completes at n
 bounded by host RAM or disk — the ROADMAP's "out-of-core input" step. Its
 ``memory_budget`` is the paper's machine capacity ``c`` in bytes.
+
+``MeshExecutor`` additionally owns the *sharded streamed* form — the
+paper's model verbatim: the input arrives as a ``ShardedSource`` (one
+``PointSource`` per mesh shard; ``data/source.py``), each shard streams
+its own blocks into its own mesh address space, and no host ever holds
+all n rows. ``memory_budget`` is then the per-*shard* capacity ``c``.
 
 Beyond MRG, executors own one more per-iteration primitive:
 ``run_filter_round`` — EIM's MapReduce Rounds 2–3 (paper §4, Algorithm 2):
@@ -72,7 +83,8 @@ from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
-from repro.data.source import as_source
+from repro.data.source import (ArraySource, ShardedSource, as_source,
+                               shard_source, stream_device)
 from repro.kernels import engine, ops
 
 from .gonzalez import gonzalez
@@ -277,8 +289,8 @@ class Executor:
         """
         raise NotImplementedError(
             f"{type(self).__name__} does not implement EIM's "
-            "run_filter_round; use HostStreamExecutor (streamed) or "
-            "SimExecutor (vmapped machines)")
+            "run_filter_round; use HostStreamExecutor (streamed), "
+            "SimExecutor (vmapped machines) or MeshExecutor (sharded)")
 
     def end_filter_rounds(self, source) -> None:
         """Called once when an EIM run's iteration loop finishes — the
@@ -486,35 +498,307 @@ class HostStreamExecutor(Executor):
 class MeshExecutor(Executor):
     """The production TPU form: machines are mesh shards.
 
-    Overrides ``mrg`` wholesale — round 1 (per-shard GON), round 2+
-    (all_gather of center sets + replicated GON; with ``hierarchical``,
-    axis-by-axis gathers with an intermediate GON per level, exactly
-    Lemma 3 with ICI-domain capacities) and the radius reduction are one
-    fused ``shard_map`` program, so no host round-trips and no separate
-    result-broadcast round.
+    Two input regimes share the executor:
+
+    * **Device-resident** (raw arrays / ``ArraySource``): ``mrg`` is one
+      fused ``shard_map`` program — round 1 (per-shard GON), round 2+
+      (all_gather of center sets + replicated GON; with ``hierarchical``,
+      axis-by-axis gathers with an intermediate GON per level, exactly
+      Lemma 3 with ICI-domain capacities) and the radius reduction, with
+      no host round-trips. The input is materialized then resharded, so
+      n is bounded by single-host RAM — the historical behavior.
+    * **Sharded / streamed** (a ``ShardedSource``, or any host/disk/
+      generator source — auto-split by ``shard_source`` into the paper's
+      contiguous machine ranges): round 1 streams each shard's blocks
+      host→device *into that shard's mesh address space* through the
+      sources' prefetch ring (``compat.global_array_from_shards`` — per-
+      shard DMA, no global host staging buffer), one ``shard_map`` program
+      of per-shard GONs per step. **No host buffer ever holds all n
+      rows**: per-shard residency is bounded by ``memory_budget`` via the
+      same ``(1+prefetch)·4·rows·(d+1)`` model as ``HostStreamExecutor``,
+      applied per shard. Rounds 2+ reuse the shared Lemma-3 ``combine``
+      (``capacity`` is honored on this path), the covering radius is a
+      per-step sharded fold, and EIM's ``run_filter_round`` streams the
+      same way — so ``mrg``/``eim`` over a ``ShardedSource`` are
+      *bitwise identical* to the Sim/HostStream paths on ref for matching
+      machine blockings (tests/test_distributed.py pins the grid).
     """
 
     def __init__(self, mesh: Mesh, shard_axes: Sequence[str] = ("data",),
-                 hierarchical: bool = False):
+                 hierarchical: bool = False, *,
+                 block_rows: int | None = None,
+                 memory_budget: int | None = None,
+                 prefetch: int = engine.DEFAULT_PREFETCH):
         self.mesh = mesh
         self.shard_axes = tuple(shard_axes)
         self.hierarchical = hierarchical
+        self.block_rows = block_rows
+        self.memory_budget = memory_budget
+        if prefetch < 1:
+            raise ValueError(f"prefetch must be >= 1, got {prefetch}")
+        self.prefetch = prefetch
+        self._step_cache: dict = {}
+
+    # -- the machine blocking the mesh implies ------------------------------
+
+    @property
+    def num_shards(self) -> int:
+        """Machines = product of the ``shard_axes`` mesh-axis sizes."""
+        count = 1
+        for ax in self.shard_axes:
+            count *= int(self.mesh.shape[ax])
+        return count
+
+    def _pspec(self) -> P:
+        axes = self.shard_axes
+        return P(axes if len(axes) > 1 else axes[0])
+
+    def _sharded(self, source) -> ShardedSource:
+        """The per-shard view of ``source``: a ``ShardedSource`` passes
+        through (its shard count must match the mesh blocking — a
+        mismatch is a real partitioning bug, not something to silently
+        re-split); anything else is split into the paper's contiguous
+        machine ranges (zero-copy ``SliceSource`` views)."""
+        src = as_source(source)
+        if isinstance(src, ShardedSource):
+            if src.num_shards != self.num_shards:
+                raise ValueError(
+                    f"ShardedSource has {src.num_shards} shards but the "
+                    f"mesh blocking over {self.shard_axes} has "
+                    f"{self.num_shards} — re-shard the input or change "
+                    "shard_axes")
+            return src
+        return shard_source(src, self.num_shards)
+
+    def rows_for(self, source) -> int:
+        """Per-shard super-shard rows: ``memory_budget`` (bytes, *per
+        shard*) solved against the ring residency model, like
+        ``HostStreamExecutor`` but per machine."""
+        sh = self._sharded(source)
+        return engine.resolve_block_rows(max(sh.max_shard_rows, 1), sh.d,
+                                         block_rows=self.block_rows,
+                                         memory_budget=self.memory_budget,
+                                         prefetch=self.prefetch)
+
+    # -- per-step sharded streaming -----------------------------------------
+
+    def _stream_steps(self, sh: ShardedSource, rows: int):
+        """Per-step global device arrays for the sharded fold: yields
+        ``(pts (S·rows, d), mask (S·rows,) bool, counts (S,) np)`` with
+        every shard's piece device-put into its own mesh address space.
+        The transfer rides the sources' prefetch ring (``stream_device``
+        with a sharded ``put``), so up to ``prefetch`` steps' DMAs are in
+        flight ahead of the consumed one — the same overlap model as the
+        single-device stream, per shard."""
+        mesh, pspec = self.mesh, self._pspec()
+
+        def put(step):
+            pts, counts = step                       # (S, rows, d), (S,)
+            mask = np.arange(rows)[None, :] < counts[:, None]
+            g_p = compat.global_array_from_shards(mesh, pspec, list(pts))
+            g_m = compat.global_array_from_shards(mesh, pspec, list(mask))
+            return g_p, g_m, counts
+
+        return stream_device(engine.zip_shard_blocks(sh.shards, rows),
+                             self.prefetch, put=put)
+
+    def _replicated(self, arr) -> jnp.ndarray:
+        return jax.device_put(jnp.asarray(arr, jnp.float32),
+                              NamedSharding(self.mesh, P()))
+
+    # -- jitted per-step shard_map programs (cached per program kind) -------
+
+    def _round1_step(self, fn: BlockFn):
+        key = ("round1", fn)
+        if key not in self._step_cache:
+            pspec = self._pspec()
+
+            @functools.partial(compat.shard_map, mesh=self.mesh,
+                               in_specs=(pspec, pspec),
+                               out_specs=(pspec, pspec),
+                               check_replication=False)
+            def step(pts, mask):                    # local (rows, d), (rows,)
+                c = fn(pts, mask)                   # (k, d)
+                return c[None], jnp.any(mask)[None]
+
+            self._step_cache[key] = jax.jit(step)
+        return self._step_cache[key]
+
+    def _filter_step(self, rank: int, impl: str, chunk: int | None):
+        key = ("filter", rank, impl, chunk)
+        if key not in self._step_cache:
+            pspec = self._pspec()
+
+            @functools.partial(compat.shard_map, mesh=self.mesh,
+                               in_specs=(pspec, pspec, pspec, P()),
+                               out_specs=(pspec, pspec),
+                               check_replication=False)
+            def step(pts, d_blk, h_blk, c):
+                _, dn = ops.assign_nearest(pts, c, impl=impl, chunk=chunk)
+                d_blk = jnp.minimum(d_blk, dn)
+                cand = jnp.where(h_blk, d_blk, _NEG)
+                r = min(rank, cand.shape[0])
+                return d_blk, jax.lax.top_k(cand, r)[0][None]
+
+            self._step_cache[key] = jax.jit(step)
+        return self._step_cache[key]
+
+    def _pivot_step(self, rank: int):
+        key = ("pivot", rank)
+        if key not in self._step_cache:
+            pspec = self._pspec()
+
+            @functools.partial(compat.shard_map, mesh=self.mesh,
+                               in_specs=(pspec, pspec),
+                               out_specs=pspec,
+                               check_replication=False)
+            def step(d_blk, h_blk):
+                cand = jnp.where(h_blk, d_blk, _NEG)
+                r = min(rank, cand.shape[0])
+                return jax.lax.top_k(cand, r)[0][None]
+
+            self._step_cache[key] = jax.jit(step)
+        return self._step_cache[key]
+
+    # -- the Executor interface, sharded ------------------------------------
 
     def run_blocks(self, fn: BlockFn, source):
-        raise NotImplementedError(
-            "MeshExecutor's rounds are one fused shard_map program; "
-            "use .mrg() directly")
+        """Round 1 over the mesh machines: every step feeds each shard's
+        next (padded, masked) block into its own address space and runs
+        one shard_map of per-shard GONs. The center union is ordered
+        shard-major (shard 0's blocks first) — global row order, exactly
+        the sequential ``HostStreamExecutor`` union for the same blocking.
+        """
+        sh = self._sharded(source)
+        rows = self.rows_for(sh)
+        step = self._round1_step(fn)
+        cs, vs = [], []
+        for pts, mask, _ in self._stream_steps(sh, rows):
+            c, v = step(pts, mask)                  # (S, k, d), (S,)
+            cs.append(np.asarray(c))
+            vs.append(np.asarray(v))
+        if not cs:
+            raise ValueError("cannot run round 1 over an empty source")
+        cent = np.stack(cs, axis=1)                 # (S, B, k, d) after swap
+        val = np.stack(vs, axis=1)                  # (S, B)
+        k = cent.shape[2]
+        centers = jnp.asarray(cent.reshape(-1, cent.shape[-1]))   # (S·B·k, d)
+        valid = jnp.asarray(np.repeat(val.reshape(-1), k))
+        return centers, valid
+
+    def default_capacity(self, source, k: int) -> int:
+        return max(self.rows_for(source), 2 * k)
+
+    def radius2(self, source, centers, *, impl="auto", chunk=None):
+        """Squared covering radius over the sharded stream.
+
+        Runs the *eager* per-block ``engine.fold_min_d2`` over the
+        ``ShardedSource``'s global block stream (per-shard ``rows``, the
+        prefetch ring) rather than a jitted shard_map fold: the repo-wide
+        radius2 contract is the eager ``assign_nearest`` bits (Sim / the
+        device EIM path / HostStream all reduce those), and XLA's fused
+        jit form of the ``x²+c²−2x·c`` chain is *not* bit-identical to
+        the op-by-op eager dispatch on every backend — a jitted mesh fold
+        here would break the cross-executor bitwise-parity guarantee.
+        Residency is unchanged: one block (plus the ring) at a time,
+        bounded by the per-shard budget. Device-resident inputs keep the
+        one-pass fused max."""
+        src = as_source(source)
+        if isinstance(src, ArraySource):
+            _, d2 = ops.assign_nearest(src.materialize(), centers,
+                                       impl=impl, chunk=chunk)
+            return jnp.max(d2)
+        sh = self._sharded(src)
+        return engine.fold_min_d2(sh, centers, impl=impl, chunk=chunk,
+                                  block_rows=self.rows_for(sh),
+                                  prefetch=self.prefetch)
+
+    def run_filter_round(self, source, s_new, d_s, h_mask, rank, *,
+                         impl="auto", chunk=None):
+        """EIM Rounds 2–3 over the mesh machines: each step updates every
+        shard's slice of d(x, S_new) in its own address space and emits a
+        per-shard top-k; the host merge of the per-shard tops is the
+        MapReduce shuffle (top-k *values* are blocking-invariant, so the
+        pivot is bitwise the Sim/HostStream one). ``source`` may be a
+        compacted ``IndexedSource`` view — it is split into contiguous
+        machine ranges on the fly; ``d_s``/``h_mask`` hold the per-view
+        slices, updated in place exactly like the other executors."""
+        sh = self._sharded(source)
+        rows = self.rows_for(sh)
+        S = sh.num_shards
+        have_s = s_new is not None and len(s_new) > 0
+        mesh, pspec = self.mesh, self._pspec()
+        pos = sh.offsets[:-1].astype(np.int64)      # per-shard view cursor
+
+        def put(step_data):
+            """Ring transfer: ship the step's points *and* the matching
+            d/h state slices (rows are touched exactly once per call, so
+            prefetching state ahead of the fold is safe)."""
+            pts, counts = step_data
+            starts = pos.copy()
+            p_d, p_h = [], []
+            for s in range(S):
+                nb = int(counts[s])
+                a = int(pos[s])
+                dd = np.full(rows, np.float32(3.4e38), np.float32)
+                dd[:nb] = d_s[a:a + nb]
+                hh = np.zeros(rows, bool)
+                hh[:nb] = h_mask[a:a + nb]
+                p_d.append(dd)
+                p_h.append(hh)
+                pos[s] += nb
+            return (compat.global_array_from_shards(mesh, pspec, list(pts)),
+                    compat.global_array_from_shards(mesh, pspec, p_d),
+                    compat.global_array_from_shards(mesh, pspec, p_h),
+                    counts, starts)
+
+        steps = stream_device(engine.zip_shard_blocks(sh.shards, rows),
+                              self.prefetch, put=put)
+        if have_s:
+            c = self._replicated(np.asarray(s_new, np.float32))
+            fstep = self._filter_step(rank, impl, chunk)
+        else:
+            pstep = self._pivot_step(rank)
+        top = engine.top_k_init(rank)
+        for g_pts, g_d, g_h, counts, starts in steps:
+            if have_s:
+                d_upd, tops = fstep(g_pts, g_d, g_h, c)
+                d_np = np.asarray(d_upd).reshape(S, rows)
+                for s in range(S):
+                    nb = int(counts[s])
+                    a = int(starts[s])
+                    d_s[a:a + nb] = d_np[s, :nb]
+            else:
+                tops = pstep(g_d, g_h)
+            top = engine.merge_top_k(top, jnp.asarray(np.asarray(tops)), rank)
+        return d_s, _pivot_from_top(top, rank)
+
+    # -- MRG: fused device program, or the streamed sharded orchestration ---
 
     def mrg(self, source, k: int, *, capacity: int | None = None,
             impl: str = "auto", chunk: int | None = None):
-        if capacity is not None:
-            raise ValueError(
-                "MeshExecutor's machine capacity is fixed by the mesh "
-                "blocking (shard size / gather tree); capacity= is not "
-                "supported — use shard_axes/hierarchical instead")
+        """MRG on the mesh. Device-resident inputs (raw arrays /
+        ``ArraySource``) run the fused shard_map program (capacity is
+        fixed by the mesh blocking there — ``capacity=`` raises);
+        sharded / host-backed sources run the streamed per-shard rounds
+        with the shared Lemma-3 ``combine`` (``capacity`` honored)."""
+        src = as_source(source)
+        if isinstance(src, ArraySource):
+            if capacity is not None:
+                raise ValueError(
+                    "MeshExecutor's machine capacity on the device path is "
+                    "fixed by the mesh blocking (shard size / gather "
+                    "tree); capacity= is not supported — use shard_axes/"
+                    "hierarchical, or pass a ShardedSource / host-backed "
+                    "source for the streamed path")
+            return self._mrg_fused(src, k, impl=impl, chunk=chunk)
+        return super().mrg(src, k, capacity=capacity, impl=impl, chunk=chunk)
+
+    def _mrg_fused(self, source, k: int, *, impl: str = "auto",
+                   chunk: int | None = None):
         axes = self.shard_axes
         hierarchical = self.hierarchical
-        pspec = P(axes if len(axes) > 1 else axes[0])
+        pspec = self._pspec()
 
         @functools.partial(
             compat.shard_map,

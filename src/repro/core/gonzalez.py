@@ -71,6 +71,19 @@ def gonzalez(
     ``chunk`` points (O(chunk·d) working set per step instead of O(n·d)
     transients) — the selected centers and radius are invariant to it
     (tests/test_engine.py).
+
+    Returns a ``GonzalezResult`` ``(centers (k, d), indices (k,) i32,
+    radius2 (), min_d2 (n,))``; ``radius2`` is the exact squared fold
+    ``max(min_d2)`` (no lossy sqrt round-trip), identical across the
+    in-memory, chunked and streamed forms.
+
+    >>> import numpy as np
+    >>> x = np.asarray([[0, 0], [1, 0], [10, 0], [10, 1]], np.float32)
+    >>> res = gonzalez(x, 2)       # first center = row 0, then farthest
+    >>> [int(i) for i in res.indices]
+    [0, 3]
+    >>> float(res.radius2)
+    1.0
     """
     if is_source(points):
         if isinstance(points, ArraySource):

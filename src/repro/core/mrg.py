@@ -100,12 +100,33 @@ def mrg(points, k: int, *, executor: Executor | None = None, m: int = 50,
 
     ``capacity`` (rows; default: the executor's machine size) triggers the
     multi-round path when the k·m center union would not fit on one
-    machine (``MeshExecutor`` rejects it — its machine blocking is fixed
-    by the mesh). ``chunk`` streams every distance pass in row-blocks
-    within a machine (see kernels/engine.py).
+    machine (``MeshExecutor``'s fused device path rejects it — that
+    blocking is fixed by the mesh; its streamed sharded path honors it).
+    ``chunk`` streams every distance pass in row-blocks within a machine
+    (see kernels/engine.py).
+
+    Distributed out-of-core: ``mrg(sharded, k,
+    executor=MeshExecutor(mesh, memory_budget=...))`` with a
+    ``ShardedSource`` (or any host-backed source — auto-split into the
+    paper's contiguous machine ranges) streams each shard's blocks into
+    that shard's mesh address space, so no host ever holds all n rows —
+    and returns bitwise-identical results to the Sim/HostStream paths on
+    ref for matching blockings.
+
+    >>> import numpy as np
+    >>> x = np.random.default_rng(0).normal(size=(256, 2)).astype(np.float32)
+    >>> res = mrg(x, 4, m=8)          # 8 simulated machines, 2 rounds
+    >>> res.centers.shape, res.rounds
+    ((4, 2), 2)
     """
     streamed = is_source(points) and not isinstance(points, ArraySource)
-    source = as_source(points)
+    if streamed:
+        source = as_source(points)
+    else:
+        # Raw arrays (numpy included) keep the legacy device path on every
+        # executor — only an explicit PointSource opts into streaming.
+        source = points if isinstance(points, ArraySource) \
+            else ArraySource(points)
     if executor is None:
         executor = (HostStreamExecutor() if streamed else SimExecutor(m=m))
     centers, r2, rounds = executor.mrg(source, k, capacity=capacity,

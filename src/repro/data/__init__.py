@@ -6,9 +6,12 @@ from .source import (  # noqa: F401
     IndexedSource,
     MemmapSource,
     PointSource,
+    ShardedSource,
+    SliceSource,
     SyntheticSource,
     as_device_array,
     as_source,
     is_source,
+    shard_source,
     synthetic_source,
 )

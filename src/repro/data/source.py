@@ -27,6 +27,17 @@ Sources:
                         never hold the full set even on the host. Built from
                         the ``data/pointsets.py`` families via
                         ``synthetic_source``.
+  * ``SliceSource``   — a contiguous-row view ``[start, stop)`` of any
+                        source with ``take``; three integers of state, so
+                        splitting an n-row source costs O(1).
+  * ``ShardedSource`` — one source per machine shard (the paper's "input
+                        already partitioned across machines"); built by
+                        ``shard_source(source, mesh)`` (zero-copy
+                        ``SliceSource`` split) or
+                        ``ShardedSource.from_per_host_shards`` for
+                        genuinely distributed inputs. ``MeshExecutor``
+                        streams each shard into its own mesh address
+                        space, so no host ever holds all n rows.
 
 ``blocks(block_rows)`` yields float32 device arrays of shape
 ``(<= block_rows, d)`` covering rows ``[0, n)`` in order; it may be called
@@ -113,24 +124,33 @@ def _check_rows(block_rows: int) -> int:
     return int(block_rows)
 
 
-def _stream_device(host_blocks: Iterator[np.ndarray],
-                   prefetch: int = DEFAULT_PREFETCH) -> Iterator[jnp.ndarray]:
+def stream_device(host_blocks: Iterator[np.ndarray],
+                  prefetch: int = DEFAULT_PREFETCH,
+                  put: Callable | None = None) -> Iterator:
     """Ring-buffered host→device upload: keep up to ``prefetch`` blocks'
     transfers in flight ahead of the consumed one (``device_put`` is
     asynchronous), so DMA overlaps the consumer's compute across several
     blocks of lookahead. At the moment a block is yielded, it plus the
     ``prefetch`` ring slots are device-resident — the ``(1+prefetch)``
     residency model of ``engine.resolve_block_rows``. ``prefetch=1`` is
-    the classic double buffer."""
+    the classic double buffer.
+
+    ``put`` customizes the transfer (default ``jax.device_put``): the
+    sharded executors pass a closure that device-puts each shard's piece
+    into its own mesh address space (``compat.global_array_from_shards``),
+    so the same ring drives single-device and mesh-sharded streaming.
+    """
     if prefetch < 1:
         raise ValueError(f"prefetch must be >= 1, got {prefetch}")
+    if put is None:
+        put = jax.device_put
     it = iter(host_blocks)
     ring: deque = deque()
 
     def fill() -> None:
         while len(ring) < prefetch:
             try:
-                ring.append(jax.device_put(next(it)))
+                ring.append(put(next(it)))
             except StopIteration:
                 return
 
@@ -139,6 +159,10 @@ def _stream_device(host_blocks: Iterator[np.ndarray],
         cur = ring.popleft()
         fill()          # top the ring back up before handing over control
         yield cur
+
+
+# Historical (pre-sharding) name, kept for callers of the private form.
+_stream_device = stream_device
 
 
 def _check_take_indices(indices, n: int) -> np.ndarray:
@@ -469,6 +493,273 @@ class IndexedSource:
         return jnp.asarray(self._parent.take(self._idx))
 
 
+class SliceSource:
+    """Contiguous-row view ``[start, stop)`` of a parent source.
+
+    The machine-shard sibling of ``IndexedSource``: where a view through an
+    index array carries O(|view|) state, a slice view is three integers —
+    which is what lets ``shard_source`` split an n-row source into
+    per-machine shards without any host ever holding an O(n) structure
+    (index arrays included). Blocks are gathered through the parent's
+    ``take``; every built-in source serves a maximal consecutive run
+    cheaply (``MemmapSource`` fancy-indexes only the overlapping disk
+    shards, ``SyntheticSource`` regenerates the run with one ``block_fn``
+    call), so streaming a shard costs O(block_rows) working memory.
+
+    Nested slices compose: ``SliceSource(SliceSource(p, a, b), c, d)``
+    re-points directly at ``p`` through ``[a + c, a + d)``.
+    """
+
+    def __init__(self, parent, start: int, stop: int):
+        start, stop = int(start), int(stop)
+        if not hasattr(parent, "take"):
+            raise TypeError(
+                f"SliceSource needs a parent with take() for run gathers; "
+                f"{type(parent).__name__} does not provide it")
+        if not 0 <= start <= stop <= parent.n:
+            raise ValueError(
+                f"slice [{start}, {stop}) out of range for n={parent.n}")
+        if isinstance(parent, SliceSource):
+            start += parent._start
+            stop += parent._start
+            parent = parent._parent
+        self._parent = parent
+        self._start = start
+        self._stop = stop
+
+    @property
+    def parent(self):
+        return self._parent
+
+    @property
+    def start(self) -> int:
+        """First (root-composed) parent row this view selects."""
+        return self._start
+
+    @property
+    def stop(self) -> int:
+        """One past the last parent row this view selects."""
+        return self._stop
+
+    @property
+    def n(self) -> int:
+        return self._stop - self._start
+
+    @property
+    def d(self) -> int:
+        return self._parent.d
+
+    def host_blocks(self, block_rows: int) -> Iterator[np.ndarray]:
+        """Numpy blocks gathered from the parent run-by-run, no device
+        transfer."""
+        rows = _check_rows(block_rows)
+        for a in range(self._start, self._stop, rows):
+            yield self._parent.take(np.arange(a, min(a + rows, self._stop),
+                                              dtype=np.int64))
+
+    def blocks(self, block_rows: int, *,
+               prefetch: int = DEFAULT_PREFETCH) -> Iterator[jnp.ndarray]:
+        return stream_device(self.host_blocks(block_rows), prefetch)
+
+    def row(self, idx: int) -> np.ndarray:
+        if not 0 <= idx < self.n:
+            raise IndexError(f"row {idx} out of range for n={self.n}")
+        return self._parent.row(self._start + idx)
+
+    def take(self, indices) -> np.ndarray:
+        """Gather view rows — offsets through to the parent."""
+        idx = _check_take_indices(indices, self.n)
+        return self._parent.take(idx + self._start)
+
+    def materialize(self) -> jnp.ndarray:
+        return jnp.asarray(self._parent.take(
+            np.arange(self._start, self._stop, dtype=np.int64)))
+
+
+class ShardedSource:
+    """One ``PointSource`` per machine shard — the paper's input model.
+
+    The MapReduce formulation (§3) assumes the input is *already
+    partitioned across machines*; Ene–Im–Moseley's model makes the same
+    per-machine-memory assumption explicit. ``ShardedSource`` is that
+    partition as a first-class object: shard ``s`` is its own
+    ``PointSource`` (host numpy, a disk shard, a generator program, or a
+    ``SliceSource`` view of a common parent) and the global row order is
+    the concatenation of the shards in order. ``MeshExecutor`` streams
+    each shard's blocks into that shard's mesh address space, so no host
+    buffer ever holds all n rows — per-shard working memory is bounded by
+    the executor's ``memory_budget``.
+
+    Construct with ``shard_source(source, shards)`` to split one logical
+    source into zero-copy contiguous views, or
+    ``ShardedSource.from_per_host_shards([...])`` when the shards already
+    exist separately (one file / array / generator per host).
+
+    As a plain ``PointSource`` it behaves as the concatenation: ``blocks``
+    streams shard after shard (a block never crosses a shard boundary, so
+    each shard's tail block may be ragged — value folds are invariant to
+    that; see ``kernels/engine.py``), ``take``/``row`` dispatch on the
+    shard offsets, and ``materialize`` concatenates (a convenience for
+    tests and small n — never used on the streamed paths).
+    """
+
+    def __init__(self, shards: Sequence):
+        shards = list(shards)
+        if not shards:
+            raise ValueError("ShardedSource needs at least one shard")
+        for i, s in enumerate(shards):
+            if not is_source(s):
+                raise TypeError(
+                    f"shard {i} ({type(s).__name__}) is not a PointSource")
+        d = shards[0].d
+        for i, s in enumerate(shards):
+            if s.d != d:
+                raise ValueError(
+                    f"shard {i} has d={s.d}, expected d={d} (all shards "
+                    "must share one point dimension)")
+        self._shards = tuple(shards)
+        self._offsets = np.cumsum([0] + [s.n for s in shards])
+
+    @classmethod
+    def from_per_host_shards(cls, shards: Sequence) -> "ShardedSource":
+        """Wrap genuinely distributed inputs: one pre-existing source per
+        host/machine (e.g. each host's ``MemmapSource`` over its local
+        ``.npy`` shards, or a per-host ``SyntheticSource``). Shard order
+        defines the global row order. No data moves at construction."""
+        return cls(shards)
+
+    @property
+    def shards(self) -> tuple:
+        return self._shards
+
+    @property
+    def num_shards(self) -> int:
+        return len(self._shards)
+
+    @property
+    def offsets(self) -> np.ndarray:
+        """Global start row of each shard, plus a final total-n entry —
+        shape ``(num_shards + 1,)``."""
+        return self._offsets.copy()
+
+    @property
+    def max_shard_rows(self) -> int:
+        """Rows of the largest shard — the per-machine n the residency
+        model (``engine.resolve_block_rows``) is solved against."""
+        return max(s.n for s in self._shards)
+
+    @property
+    def n(self) -> int:
+        return int(self._offsets[-1])
+
+    @property
+    def d(self) -> int:
+        return self._shards[0].d
+
+    def host_blocks(self, block_rows: int) -> Iterator[np.ndarray]:
+        """Numpy blocks with no device transfer: each shard's stream in
+        shard order (= global row order)."""
+        rows = _check_rows(block_rows)
+        for s in self._shards:
+            if hasattr(s, "host_blocks"):
+                yield from s.host_blocks(rows)
+            else:
+                for blk in s.blocks(rows):
+                    yield np.asarray(blk, np.float32)
+
+    def blocks(self, block_rows: int, *,
+               prefetch: int = DEFAULT_PREFETCH) -> Iterator[jnp.ndarray]:
+        return stream_device(self.host_blocks(block_rows), prefetch)
+
+    def _locate(self, idx: np.ndarray) -> np.ndarray:
+        return np.searchsorted(self._offsets, idx, side="right") - 1
+
+    def row(self, idx: int) -> np.ndarray:
+        if not 0 <= idx < self.n:
+            raise IndexError(f"row {idx} out of range for n={self.n}")
+        s = int(self._locate(np.asarray([idx]))[0])
+        return np.asarray(self._shards[s].row(int(idx - self._offsets[s])),
+                          np.float32)
+
+    def take(self, indices) -> np.ndarray:
+        """Gather rows across shards — each shard's ``take`` is called
+        once with its (order-preserved) share of the indices."""
+        idx = _check_take_indices(indices, self.n)
+        out = np.empty((idx.size, self.d), np.float32)
+        shard = self._locate(idx)
+        for s in np.unique(shard):
+            sel = shard == s
+            out[sel] = np.asarray(
+                self._shards[s].take(idx[sel] - self._offsets[s]),
+                np.float32)
+        return out
+
+    def materialize(self) -> jnp.ndarray:
+        return jnp.concatenate(
+            [jnp.asarray(b) for b in self.host_blocks(1 << 20)], axis=0)
+
+
+def _shard_count(shards, shard_axes=None) -> int:
+    """Shard count from an int, a ``jax.sharding.Mesh`` (product of the
+    ``shard_axes`` sizes; default all axes), or anything exposing
+    ``num_shards`` (e.g. a ``MeshExecutor``)."""
+    if isinstance(shards, int):
+        return shards
+    if hasattr(shards, "num_shards"):        # MeshExecutor / ShardedSource
+        return int(shards.num_shards)
+    if hasattr(shards, "shape") and hasattr(shards, "axis_names"):  # Mesh
+        axes = tuple(shard_axes) if shard_axes is not None \
+            else tuple(shards.axis_names)
+        count = 1
+        for ax in axes:
+            count *= int(shards.shape[ax])
+        return count
+    raise TypeError(
+        f"shards must be an int, a Mesh, or expose num_shards; got "
+        f"{type(shards).__name__}")
+
+
+def shard_source(source, shards, *, shard_axes=None) -> ShardedSource:
+    """Split ``source`` into a ``ShardedSource`` of contiguous row views.
+
+    ``shards`` is a shard count, a ``jax.sharding.Mesh`` (the count is the
+    product of the ``shard_axes`` sizes; default: every mesh axis), or a
+    ``MeshExecutor`` — whatever names the machine blocking. The split is
+    the paper's: ``per = ceil(n / S)`` rows per machine, machine ``i``
+    holding rows ``[i·per, min((i+1)·per, n))`` — exactly
+    ``SimExecutor``'s blocking, which is what makes sharded runs bitwise
+    comparable to the simulated-machines path. Each shard is a
+    ``SliceSource`` (three integers of state): splitting copies nothing
+    and materializes nothing.
+
+    An input that is already a ``ShardedSource`` passes through when its
+    shard count matches (and raises when it doesn't — a mis-sharded input
+    silently re-split would hide a real partitioning bug).
+
+    >>> import numpy as np
+    >>> src = HostSource(np.zeros((10, 2), np.float32))
+    >>> sh = shard_source(src, 4)          # per = ceil(10/4) = 3
+    >>> [s.n for s in sh.shards]
+    [3, 3, 3, 1]
+    >>> sh.n, sh.num_shards
+    (10, 4)
+    """
+    src = as_source(source)
+    count = _shard_count(shards, shard_axes)
+    if count < 1:
+        raise ValueError(f"need at least one shard, got {count}")
+    if isinstance(src, ShardedSource):
+        if src.num_shards != count:
+            raise ValueError(
+                f"source is already sharded {src.num_shards} ways, "
+                f"expected {count} — re-shard explicitly if intended")
+        return src
+    per = -(-src.n // count)
+    return ShardedSource([
+        SliceSource(src, min(i * per, src.n), min((i + 1) * per, src.n))
+        for i in range(count)])
+
+
 def _philox_at(seed: int, offset: int) -> np.random.Generator:
     """Generator positioned at double-draw ``offset`` of the Philox stream.
 
@@ -496,6 +787,12 @@ def synthetic_source(name: str, n: int, *, seed: int = 0,
     blocking. ``gau``/``unb`` share the monolithic generator's cluster
     centers but draw per-block assignments/noise from child seeds
     (distribution-identical). Other families use per-block child seeds.
+
+    >>> s = synthetic_source("unif", 100, d=2, seed=0)
+    >>> s.n, s.d
+    (100, 2)
+    >>> s.take([0, 1]).shape        # regenerated, never stored
+    (2, 2)
     """
     if name == "unif":
         d = int(kwargs.get("d", 2))

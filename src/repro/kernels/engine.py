@@ -521,6 +521,59 @@ def resolve_block_rows(n: int, d: int, *, block_rows: int | None = None,
     return min(default, max(n, 1))
 
 
+def host_blocks_of(source, rows: int):
+    """Numpy host blocks of any source: ``host_blocks`` when the source
+    offers it (every built-in host-backed source does), else the device
+    stream pulled back block-by-block — so per-shard consumers (the
+    sharded executors) can stage each block themselves without assuming a
+    source kind."""
+    blocks = (source.host_blocks(rows) if hasattr(source, "host_blocks")
+              else source.blocks(rows))
+    for blk in blocks:
+        yield np.asarray(blk, np.float32)
+
+
+def zip_shard_blocks(shards, rows: int):
+    """Per-shard fold entry point: align the shards' host streams into
+    lockstep steps.
+
+    Yields ``(pts (S, rows, d) f32, counts (S,) int64)`` per step — each
+    shard's next block, zero-padded to the common ``rows`` shape (the
+    executor turns ``counts`` into validity masks), until *every* shard is
+    exhausted. A shard that runs out early (unequal shard sizes)
+    contributes all-padding steps with ``counts == 0``. The host working
+    set is one step — ``S · rows · d`` floats — never a full shard, and
+    never n.
+    """
+    if rows < 1:
+        raise ValueError(f"rows must be >= 1, got {rows}")
+    shards = list(shards)
+    if not shards:
+        raise ValueError("zip_shard_blocks needs at least one shard")
+    d = shards[0].d
+    its = [host_blocks_of(s, rows) for s in shards]
+    while True:
+        pts = np.zeros((len(shards), rows, d), np.float32)
+        counts = np.zeros((len(shards),), np.int64)
+        any_rows = False
+        for s, it in enumerate(its):
+            blk = next(it, None)
+            if blk is None:
+                continue
+            nb = blk.shape[0]
+            if nb > rows:
+                raise ValueError(
+                    f"shard {s} yielded a {nb}-row block for "
+                    f"block_rows={rows}")
+            pts[s, :nb] = blk
+            counts[s] = nb
+            if nb:
+                any_rows = True
+        if not any_rows:
+            return
+        yield pts, counts
+
+
 def _source_blocks(source, rows: int, prefetch: int | None):
     """``source.blocks(rows)``, forwarding ``prefetch`` when the source
     supports the keyword (the protocol only requires ``blocks(rows)``)."""

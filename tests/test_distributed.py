@@ -107,6 +107,131 @@ def test_mesh_executor_hierarchical_vs_flat():
     assert r["ratio_h"] <= 8.0 and r["ratio_f"] <= 4.0
 
 
+def test_sharded_source_mesh_mrg_bitwise_parity_grid():
+    """The tentpole contract: ``mrg`` over a ``ShardedSource`` on the
+    streamed ``MeshExecutor`` is *bitwise identical* to the
+    HostStreamExecutor run for every shard count × block_rows cell (same
+    machine blocking ⇒ same centers, radius, rounds), and — with one
+    block per shard — to ``mrg_sim``'s m-machine blocking too."""
+    out = _run("""
+        from repro import compat
+        from repro.core import HostStreamExecutor, MeshExecutor, mrg, mrg_sim
+        from repro.data import HostSource, shard_source
+        n, d, k = 4096, 3, 5
+        x = np.random.default_rng(2).normal(size=(n, d)).astype(np.float32)
+        cells = []
+        for S in (1, 2, 4, 8):
+            mesh = compat.make_mesh(np.array(jax.devices()[:S]), ("data",))
+            per = n // S
+            for r in (512, per):
+                me = MeshExecutor(mesh, block_rows=r)
+                rm = mrg(shard_source(HostSource(x), S), k, executor=me,
+                         impl="ref")
+                rh = mrg(HostSource(x), k,
+                         executor=HostStreamExecutor(block_rows=r),
+                         impl="ref")
+                cells.append({
+                    "S": S, "rows": r,
+                    "host_exact": bool(
+                        (np.asarray(rm.centers) == np.asarray(rh.centers))
+                        .all() and float(rm.radius2) == float(rh.radius2)
+                        and rm.rounds == rh.rounds)})
+            rs = mrg_sim(jnp.asarray(x), k, m=S, impl="ref")
+            rm = mrg(shard_source(HostSource(x), S), k,
+                     executor=MeshExecutor(mesh, block_rows=per), impl="ref")
+            cells.append({
+                "S": S, "rows": "per-vs-sim",
+                "host_exact": bool(
+                    (np.asarray(rm.centers) == np.asarray(rs.centers)).all()
+                    and float(rm.radius2) == float(rs.radius2))})
+        print(json.dumps(cells))
+    """)
+    cells = json.loads(out.strip().splitlines()[-1])
+    assert len(cells) == 12
+    bad = [c for c in cells if not c["host_exact"]]
+    assert not bad, f"sharded mesh MRG drifted in cells: {bad}"
+
+
+def test_sharded_source_mesh_eim_bitwise_parity_and_budget():
+    """Streamed EIM over per-host shards on a 4-way mesh: bitwise the
+    device-path sample and the HostStream result for the same key; and the
+    no-full-n invariant — under a per-shard ``memory_budget``, a
+    source-read spy sees no read larger than the budget-derived
+    super-shard and no ``materialize()`` call. Also covers multi-axis
+    sharding (P over ("pod", "data"))."""
+    out = _run("""
+        from repro import compat
+        from repro.core import (HostStreamExecutor, MeshExecutor, eim,
+                                eim_sample, mrg)
+        from repro.data import HostSource, ShardedSource, shard_source
+
+        class SpyShard(HostSource):
+            def __init__(self, x):
+                super().__init__(x)
+                self.max_read = 0
+                self.materialized = False
+            def host_blocks(self, block_rows):
+                for blk in super().host_blocks(block_rows):
+                    self.max_read = max(self.max_read, blk.shape[0])
+                    yield blk
+            def take(self, indices):
+                out = super().take(indices)
+                self.max_read = max(self.max_read, out.shape[0])
+                return out
+            def materialize(self):
+                self.materialized = True
+                return super().materialize()
+
+        n, d, k = 16384, 3, 4
+        x = np.random.default_rng(3).normal(size=(n, d)).astype(np.float32)
+        key = jax.random.PRNGKey(7)
+        mesh = compat.make_mesh(np.array(jax.devices()[:4]), ("data",))
+        shards = [SpyShard(x[i * 4096:(i + 1) * 4096]) for i in range(4)]
+        sh = ShardedSource.from_per_host_shards(shards)
+        budget = 96 * 1024
+        me = MeshExecutor(mesh, memory_budget=budget)
+        rows = me.rows_for(sh)
+        s_dev = eim_sample(jnp.asarray(x), k, key, impl="ref")
+        e_mesh = eim(sh, k, key, impl="ref", executor=me)
+        e_host = eim(HostSource(x), k, key, impl="ref",
+                     executor=HostStreamExecutor(memory_budget=budget))
+        # multi-axis: (2, 2) mesh sharded over both axes == 4 machines
+        mesh22 = compat.make_mesh(np.array(jax.devices()[:4]).reshape(2, 2),
+                                  ("pod", "data"))
+        me22 = MeshExecutor(mesh22, shard_axes=("pod", "data"),
+                            block_rows=512)
+        rm = mrg(shard_source(HostSource(x), me22), k, executor=me22,
+                 impl="ref")
+        rh = mrg(HostSource(x), k,
+                 executor=HostStreamExecutor(block_rows=512), impl="ref")
+        print(json.dumps({
+            "budget_model_ok": rows * 4 * (d + 1) * (1 + me.prefetch)
+                               <= budget,
+            "rows": rows,
+            "max_reads": [s.max_read for s in shards],
+            "materialized": any(s.materialized for s in shards),
+            "sample_exact": bool(
+                np.array_equal(np.asarray(s_dev.sample_mask),
+                               np.asarray(e_mesh.sample.sample_mask))
+                and int(s_dev.iters) == int(e_mesh.sample.iters)),
+            "eim_exact": bool(
+                (np.asarray(e_mesh.centers)
+                 == np.asarray(e_host.centers)).all()
+                and float(e_mesh.radius2) == float(e_host.radius2)),
+            "multiaxis_exact": bool(
+                (np.asarray(rm.centers) == np.asarray(rh.centers)).all()
+                and float(rm.radius2) == float(rh.radius2)),
+        }))
+    """, devices=4)
+    r = json.loads(out.strip().splitlines()[-1])
+    assert r["budget_model_ok"], r
+    assert all(m <= r["rows"] for m in r["max_reads"]), r
+    assert not r["materialized"], "a shard was materialized on the mesh path"
+    assert r["sample_exact"], "mesh EIM sample drifted from the device path"
+    assert r["eim_exact"], "mesh eim() drifted from the HostStream path"
+    assert r["multiaxis_exact"], "multi-axis sharded MRG drifted"
+
+
 def test_sharded_train_step_runs_and_matches_single_device_loss():
     out = _run("""
         from repro.configs import get_config

@@ -391,14 +391,18 @@ def test_eim_streamed_rejects_uncompacted():
 
 
 def test_eim_rejects_executor_without_filter_round():
-    # MeshExecutor's rounds are one fused shard_map program without the
-    # per-iteration hook — the streamed loop must fail fast, not mid-run
-    from repro.core import MeshExecutor
-    from repro.launch.mesh import make_mesh
+    # An executor without the per-iteration hook (a bare Executor subclass
+    # — every built-in executor implements it now, MeshExecutor included
+    # via the sharded streamed path) must fail fast, not mid-run.
+    from repro.core import Executor
+
+    class _NoFilterExecutor(Executor):
+        pass
+
     x = _pts(1000, d=2, seed=2)
     with pytest.raises(NotImplementedError, match="run_filter_round"):
         eim_sample(HostSource(x), 4, jax.random.PRNGKey(0),
-                   executor=MeshExecutor(make_mesh((1,), ("data",))))
+                   executor=_NoFilterExecutor())
 
 
 # ---------------------------------------------------------------------------

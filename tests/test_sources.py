@@ -394,12 +394,34 @@ def test_sim_executor_rejects_zero_machines():
         SimExecutor(m=0)
 
 
-def test_mesh_executor_rejects_capacity():
+def test_mesh_executor_rejects_capacity_on_fused_device_path():
+    # The fused shard_map program's machine blocking is fixed by the mesh;
+    # only the streamed sharded path (host-backed / ShardedSource inputs)
+    # honors capacity=.
     from repro.core import MeshExecutor
     from repro.launch.mesh import make_mesh
     mesh = make_mesh((1,), ("data",))
     with pytest.raises(ValueError, match="capacity"):
-        MeshExecutor(mesh).mrg(HostSource(_pts(n=16, d=2)), 2, capacity=8)
+        MeshExecutor(mesh).mrg(ArraySource(_pts(n=16, d=2)), 2, capacity=8)
+
+
+def test_mesh_executor_streamed_path_honors_capacity():
+    # A host-backed source on MeshExecutor runs the streamed sharded
+    # rounds: capacity= triggers the shared Lemma-3 combine, exactly like
+    # HostStreamExecutor with the same blocking.
+    from repro.core import MeshExecutor
+    from repro.launch.mesh import make_mesh
+    x = _pts(n=512, d=3, seed=11)
+    mesh = make_mesh((1,), ("data",))
+    k, cap = 4, 16
+    r_mesh = mrg(HostSource(x), k, capacity=cap,
+                 executor=MeshExecutor(mesh, block_rows=32), impl="ref")
+    r_host = mrg(HostSource(x), k, capacity=cap,
+                 executor=HostStreamExecutor(block_rows=32), impl="ref")
+    assert r_mesh.rounds == r_host.rounds > 2
+    assert np.array_equal(np.asarray(r_mesh.centers),
+                          np.asarray(r_host.centers))
+    assert float(r_mesh.radius2) == float(r_host.radius2)
 
 
 class _RecordingSource(HostSource):
@@ -523,3 +545,216 @@ def test_host_stream_block_larger_than_n_is_one_machine():
                                   np.asarray(r1.centers))
     assert float(r.radius2) == float(r1.radius2)
     assert r.rounds == r1.rounds == 2
+
+
+# ---------------------------------------------------------------------------
+# sharded sources — the paper's "input already partitioned across machines"
+# ---------------------------------------------------------------------------
+
+def _sharded_imports():
+    from repro.data import ShardedSource, SliceSource, shard_source
+    return ShardedSource, SliceSource, shard_source
+
+
+@pytest.mark.parametrize("rows", [1, 13, 64, 640])
+def test_sharded_source_blocks_roundtrip(rows):
+    ShardedSource, _, shard_source = _sharded_imports()
+    x = _pts(n=103, d=3, seed=5)
+    for sh in (shard_source(HostSource(x), 4),
+               ShardedSource.from_per_host_shards(
+                   [HostSource(x[:40]), HostSource(x[40:63]),
+                    HostSource(x[63:])])):
+        assert sh.n == 103 and sh.d == 3
+        got = np.concatenate([np.asarray(b) for b in sh.blocks(rows)])
+        np.testing.assert_array_equal(got, x)
+        got_h = np.concatenate(list(sh.host_blocks(rows)))
+        np.testing.assert_array_equal(got_h, x)
+
+
+def test_sharded_source_take_row_materialize_across_shards():
+    ShardedSource, _, shard_source = _sharded_imports()
+    x = _pts(n=90, d=2, seed=6)
+    sh = shard_source(HostSource(x), 3)
+    idx = np.asarray([0, 29, 30, 59, 60, 89])  # shard-boundary straddlers
+    np.testing.assert_array_equal(sh.take(idx), x[idx])
+    for i in (0, 30, 89):
+        np.testing.assert_array_equal(sh.row(i), x[i])
+    np.testing.assert_array_equal(np.asarray(sh.materialize()), x)
+    np.testing.assert_array_equal(sh.offsets, [0, 30, 60, 90])
+    assert sh.max_shard_rows == 30
+
+
+def test_shard_source_uses_sim_machine_blocking():
+    # per = ceil(n/S), machine i holds [i*per, min((i+1)*per, n)) — the
+    # SimExecutor blocking (what makes sharded runs bitwise comparable)
+    _, SliceSource, shard_source = _sharded_imports()
+    sh = shard_source(HostSource(_pts(n=10, d=2)), 4)
+    assert [s.n for s in sh.shards] == [3, 3, 3, 1]
+    assert all(isinstance(s, SliceSource) for s in sh.shards)
+    # more shards than rows: trailing shards are empty but well-formed
+    sh2 = shard_source(HostSource(_pts(n=3, d=2)), 5)
+    assert [s.n for s in sh2.shards] == [1, 1, 1, 0, 0]
+    assert sh2.n == 3
+
+
+def test_shard_source_accepts_mesh_and_executor_and_passthrough():
+    from repro.core import MeshExecutor
+    from repro.launch.mesh import make_mesh
+    ShardedSource, _, shard_source = _sharded_imports()
+    x = _pts(n=64, d=2, seed=7)
+    mesh = make_mesh((1,), ("data",))
+    assert shard_source(HostSource(x), mesh).num_shards == 1
+    assert shard_source(HostSource(x),
+                        MeshExecutor(mesh)).num_shards == 1
+    sh = shard_source(HostSource(x), 2)
+    assert shard_source(sh, 2) is sh           # matching count passes through
+    with pytest.raises(ValueError, match="already sharded"):
+        shard_source(sh, 4)
+    with pytest.raises(TypeError, match="shards"):
+        shard_source(HostSource(x), "two")
+
+
+def test_slice_source_composes_and_checks_bounds():
+    _, SliceSource, _ = _sharded_imports()
+    x = _pts(n=100, d=2, seed=8)
+    src = HostSource(x)
+    s = SliceSource(SliceSource(src, 10, 90), 5, 40)
+    assert s.parent is src and s.start == 15 and s.stop == 50
+    np.testing.assert_array_equal(np.asarray(s.materialize()), x[15:50])
+    np.testing.assert_array_equal(s.take([0, 34]), x[[15, 49]])
+    np.testing.assert_array_equal(s.row(0), x[15])
+    with pytest.raises(ValueError, match="out of range"):
+        SliceSource(src, 50, 101)
+    with pytest.raises(IndexError):
+        s.row(35)
+
+
+def test_slice_source_synthetic_is_bitwise_the_monolithic_rows():
+    # counter-based generators serve a slice by regeneration — bitwise the
+    # same rows the monolithic stream would produce
+    _, _, shard_source = _sharded_imports()
+    syn = synthetic_source("unif", 1000, seed=3, d=2)
+    mono = np.concatenate(list(syn.host_blocks(1000)))
+    sh = shard_source(syn, 3)
+    np.testing.assert_array_equal(
+        np.concatenate(list(sh.host_blocks(64))), mono)
+
+
+def test_sharded_source_validates_shards():
+    ShardedSource, _, _ = _sharded_imports()
+    with pytest.raises(ValueError, match="at least one"):
+        ShardedSource([])
+    with pytest.raises(ValueError, match="d="):
+        ShardedSource([HostSource(_pts(8, d=2)), HostSource(_pts(8, d=3))])
+    with pytest.raises(TypeError, match="PointSource"):
+        ShardedSource([np.zeros((4, 2), np.float32)])
+
+
+def test_sharded_source_streams_on_host_stream_executor():
+    # A ShardedSource is a plain PointSource: the sequential executor folds
+    # it shard after shard — bitwise the unsharded run when block_rows
+    # divides the shard size (same machine blocks in the same order).
+    _, _, shard_source = _sharded_imports()
+    x = _pts(n=512, d=3, seed=9)
+    sh = shard_source(HostSource(x), 4)
+    r_sh = mrg(sh, 4, executor=HostStreamExecutor(block_rows=64), impl="ref")
+    r_un = mrg(HostSource(x), 4, executor=HostStreamExecutor(block_rows=64),
+               impl="ref")
+    np.testing.assert_array_equal(np.asarray(r_sh.centers),
+                                  np.asarray(r_un.centers))
+    assert float(r_sh.radius2) == float(r_un.radius2)
+
+
+def test_mesh_executor_sharded_bitwise_parity_single_device():
+    # The streamed sharded MeshExecutor path on a 1-device mesh (the
+    # multi-device grid lives in tests/test_distributed.py): mrg and the
+    # streamed eim_sample must be bitwise the HostStream/device results.
+    import jax
+    from repro.core import MeshExecutor, eim_sample
+    from repro.launch.mesh import make_mesh
+    _, _, shard_source = _sharded_imports()
+    x = _pts(n=1024, d=3, seed=10)
+    mesh = make_mesh((1,), ("data",))
+    me = MeshExecutor(mesh, block_rows=128)
+    r_mesh = mrg(shard_source(HostSource(x), 1), 5, executor=me, impl="ref")
+    r_host = mrg(HostSource(x), 5, executor=HostStreamExecutor(block_rows=128),
+                 impl="ref")
+    np.testing.assert_array_equal(np.asarray(r_mesh.centers),
+                                  np.asarray(r_host.centers))
+    assert float(r_mesh.radius2) == float(r_host.radius2)
+    assert r_mesh.rounds == r_host.rounds
+    n2 = 16384
+    x2 = _pts(n=n2, d=3, seed=11)
+    key = jax.random.PRNGKey(0)
+    s_dev = eim_sample(jnp.asarray(x2), 4, key, impl="ref")
+    s_mesh = eim_sample(HostSource(x2), 4, key, impl="ref",
+                        executor=MeshExecutor(mesh, block_rows=2048))
+    assert int(s_dev.iters) == int(s_mesh.iters)
+    np.testing.assert_array_equal(np.asarray(s_dev.sample_mask),
+                                  np.asarray(s_mesh.sample_mask))
+    np.testing.assert_array_equal(np.asarray(s_dev.s_mask),
+                                  np.asarray(s_mesh.s_mask))
+
+
+def test_mesh_executor_rejects_mismatched_shard_count():
+    from repro.core import MeshExecutor
+    from repro.launch.mesh import make_mesh
+    _, _, shard_source = _sharded_imports()
+    sh = shard_source(HostSource(_pts(n=64, d=2)), 2)
+    mesh = make_mesh((1,), ("data",))
+    with pytest.raises(ValueError, match="shards"):
+        mrg(sh, 4, executor=MeshExecutor(mesh, block_rows=16))
+
+
+class _SpyShard(HostSource):
+    """Per-host shard recording the largest single read it ever served and
+    whether anything materialized it."""
+
+    def __init__(self, x):
+        super().__init__(x)
+        self.max_read = 0
+        self.materialized = False
+
+    def host_blocks(self, block_rows):
+        for blk in super().host_blocks(block_rows):
+            self.max_read = max(self.max_read, blk.shape[0])
+            yield blk
+
+    def take(self, indices):
+        out = super().take(indices)
+        self.max_read = max(self.max_read, out.shape[0])
+        return out
+
+    def materialize(self):
+        self.materialized = True
+        return super().materialize()
+
+
+def test_mesh_executor_sharded_never_materializes_full_n():
+    # The no-full-n invariant, asserted via a source-read spy: under a
+    # per-shard memory_budget no shard ever serves a read larger than the
+    # budget-derived super-shard, and nothing calls materialize().
+    from repro.core import MeshExecutor
+    from repro.data import ShardedSource
+    from repro.kernels import engine
+    from repro.launch.mesh import make_mesh
+    x = _pts(n=4096, d=3, seed=12)
+    shards = [_SpyShard(x[i * 1024:(i + 1) * 1024]) for i in range(4)]
+    budget = 64 * 1024
+    mesh = make_mesh((1,), ("data",))
+    # 4 shards on a 1-device mesh is a shard-count mismatch; spy through
+    # the sequential executor for the read-size contract instead, then the
+    # 1-shard mesh for the mesh path.
+    ex = HostStreamExecutor(memory_budget=budget)
+    sh = ShardedSource.from_per_host_shards(shards)
+    rows = ex.rows_for(sh)
+    assert rows * 4 * (sh.d + 1) * (1 + ex.prefetch) <= budget
+    mrg(sh, 4, executor=ex, impl="ref")
+    assert all(s.max_read <= rows for s in shards)
+    assert not any(s.materialized for s in shards)
+    spy = _SpyShard(x)
+    me = MeshExecutor(mesh, memory_budget=budget)
+    rows_me = me.rows_for(ShardedSource([spy]))
+    mrg(ShardedSource([spy]), 4, executor=me, impl="ref")
+    assert spy.max_read <= rows_me < spy.n
+    assert not spy.materialized
