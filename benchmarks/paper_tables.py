@@ -12,7 +12,6 @@ exactly the paper's 6-results protocol.
 """
 from __future__ import annotations
 
-import time
 
 import jax
 import jax.numpy as jnp

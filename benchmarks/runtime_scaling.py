@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import gonzalez, mrg_sim
+from repro.core import gonzalez
 from repro.core.eim import _expected_caps
 from repro.core.gonzalez import covering_radius
 from repro.data import gau

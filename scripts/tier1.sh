@@ -4,4 +4,15 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+# Contract lint: repo-specific invariants (stdlib-only, always available).
+python -m tools.reprolint src benchmarks examples
+
+# Generic lint: pyflakes + import order via ruff (pyproject.toml).
+# Gated: ruff is a dev dependency some environments lack; CI's lint job
+# always runs it.
+if command -v ruff >/dev/null 2>&1; then
+    ruff check .
+fi
+
 exec python -m pytest -x -q "$@"

@@ -11,7 +11,6 @@ from __future__ import annotations
 
 from typing import Callable, NamedTuple, Sequence
 
-import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh
 
@@ -20,7 +19,7 @@ from repro.kernels import ops
 
 from .executor import Executor
 from .gonzalez import gonzalez
-from .mrg import mrg, mrg_distributed, mrg_sim
+from .mrg import mrg, mrg_distributed
 
 
 class Coreset(NamedTuple):
@@ -80,6 +79,7 @@ def select_coreset(
         block_rows = getattr(executor, "block_rows", None)
         memory_budget = getattr(executor, "memory_budget", None)
     if mesh is not None:
+        # reprolint: disable=R002 -- the fused mesh path shards a device-resident copy; whole-array residency is its premise
         centers, r2 = mrg_distributed(src.materialize(), k, mesh,
                                       shard_axes=shard_axes,
                                       impl=impl, chunk=chunk)
@@ -109,6 +109,7 @@ def select_coreset(
                                             block_rows=block_rows,
                                             memory_budget=memory_budget)
     else:
+        # reprolint: disable=R002 -- non-streamed branch: caller passed an in-memory array, residency is unchanged
         emb = src.materialize()
         assign_idx, _ = ops.assign_nearest(emb, centers, impl=impl,
                                            chunk=chunk)

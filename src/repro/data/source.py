@@ -114,6 +114,7 @@ def as_device_array(x) -> jnp.ndarray:
     """Materialize a source (or pass an array through) as a float32 device
     array — for algorithms that need random access (e.g. EIM's masks)."""
     if is_source(x):
+        # reprolint: disable=R002 -- documented random-access escape hatch; callers budget for full residency (EIM masks)
         return x.materialize()
     return jnp.asarray(x, jnp.float32)
 

@@ -20,22 +20,20 @@ Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --arch all --mesh both
 """
 import argparse
-import functools
 import json
 import re
 import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 
 from repro import compat
-from repro.configs import ARCH_IDS, SHAPES, live_cells, shape_applicable
+from repro.configs import ARCH_IDS, SHAPES, shape_applicable
 from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import input_specs, make_opt
 from repro.models import decode_step, prefill
 from repro.sharding import (batch_pspecs, cache_pspecs, params_pspecs,
-                            shardings, spec, state_pspecs, use_mesh)
+                            shardings, state_pspecs, use_mesh)
 from repro.train import make_train_step
 
 # --- TPU v5e hardware constants (roofline denominators) -------------------

@@ -30,7 +30,6 @@ from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
 from repro.configs import get_config
 from repro.data import model_batch
 from repro.launch.mesh import make_elastic_mesh
-from repro.launch.specs import make_opt
 from repro.optim import make_optimizer, make_schedule
 from repro.sharding import use_mesh
 from repro.train import init_train_state, make_train_step

@@ -16,8 +16,7 @@ Cache pytree (decode): dict with per-layer stacked buffers + position.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -16,7 +16,6 @@ Notes for the 1000+-node regime (DESIGN.md §6):
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable, NamedTuple
 
 import jax

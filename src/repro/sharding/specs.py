@@ -26,7 +26,7 @@ largest-divisible-axis auto rule.
 from __future__ import annotations
 
 import re
-from typing import Any, Sequence
+from typing import Any
 
 import jax
 import numpy as np

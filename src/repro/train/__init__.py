@@ -1,3 +1,4 @@
+from .metrics import MetricsLogger, make_eval_fn  # noqa: F401
 from .step import (  # noqa: F401
     chunked_softmax_xent,
     cross_entropy,
@@ -6,4 +7,3 @@ from .step import (  # noqa: F401
     make_serve_steps,
     make_train_step,
 )
-from .metrics import MetricsLogger, make_eval_fn  # noqa: F401

@@ -11,9 +11,6 @@ all-reduce each).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional
-
 import jax
 import jax.numpy as jnp
 

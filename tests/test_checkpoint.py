@@ -9,7 +9,7 @@ import pytest
 
 from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
 from repro.configs import get_config
-from repro.data import model_batch, token_batch
+from repro.data import token_batch
 
 
 def _tree(seed=0):

@@ -4,7 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (brute_force_opt, covering_radius, eim, eim_sample,
+from repro.core import (brute_force_opt, eim, eim_sample,
                         gonzalez, mrg_sim, plan_rounds)
 from repro.kernels import ref
 

@@ -1,6 +1,5 @@
 """Pallas kernel validation: shape/dtype sweeps against the jnp oracles
 (interpret mode on CPU)."""
-import itertools
 
 import jax.numpy as jnp
 import numpy as np

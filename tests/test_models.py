@@ -6,7 +6,7 @@ import pytest
 
 from repro.configs import ARCH_IDS, get_config
 from repro.data import model_batch
-from repro.models import (decode_step, forward, init_cache, init_params,
+from repro.models import (decode_step, forward, init_params,
                           prefill)
 
 KEY = jax.random.PRNGKey(0)

@@ -1,5 +1,4 @@
 """Hypothesis property tests for the system's invariants."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -9,7 +8,7 @@ from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st
 from hypothesis.extra.numpy import arrays
 
-from repro.core import covering_radius, gonzalez, mrg_sim
+from repro.core import gonzalez, mrg_sim
 from repro.kernels import ref
 
 SET = settings(max_examples=25, deadline=None,

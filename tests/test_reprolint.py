@@ -1,0 +1,362 @@
+"""Fixture suite for tools/reprolint: per rule, at least one minimal
+violating snippet (caught, with the correct line) and one conforming
+twin (clean), plus suppression-comment round-trips and the CLI contract.
+
+reprolint is pure stdlib, so this file never imports jax — it must pass
+on a runner with no jax installed (the CI lint job).
+"""
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+if str(ROOT) not in sys.path:
+    sys.path.insert(0, str(ROOT))
+
+from tools.reprolint import check_source  # noqa: E402
+
+CORE = "src/repro/core/fixture.py"
+ENGINE = "src/repro/kernels/engine.py"
+
+
+def rules(diags):
+    return [d.rule for d in diags]
+
+
+def lines(diags, rule):
+    return [d.line for d in diags if d.rule == rule]
+
+
+# ---------------------------------------------------------------------------
+# R001 compat-only-imports
+
+
+def test_r001_flags_shard_map_import():
+    diags = check_source("import jax.experimental.shard_map as sm\n",
+                         "src/repro/launch/fixture.py")
+    assert rules(diags) == ["R001"]
+    assert lines(diags, "R001") == [1]
+
+
+def test_r001_flags_axis_type_from_import():
+    diags = check_source("from jax.sharding import AxisType\n",
+                         "src/repro/launch/fixture.py")
+    assert rules(diags) == ["R001"]
+
+
+def test_r001_flags_attribute_use():
+    code = ("import jax\n"
+            "\n"
+            "def f(mesh):\n"
+            "    with jax.set_mesh(mesh):\n"
+            "        pass\n")
+    diags = check_source(code, "src/repro/launch/fixture.py")
+    assert rules(diags) == ["R001"]
+    assert lines(diags, "R001") == [4]
+
+
+def test_r001_clean_via_compat():
+    code = ("from repro import compat\n"
+            "\n"
+            "def f(mesh):\n"
+            "    with compat.set_mesh(mesh):\n"
+            "        pass\n")
+    assert check_source(code, "src/repro/launch/fixture.py") == []
+
+
+def test_r001_whitelists_compat_itself():
+    code = ("import jax\n"
+            "\n"
+            "HAS = hasattr(jax, 'set_mesh')\n"
+            "from jax.sharding import AxisType\n")
+    assert check_source(code, "src/repro/compat.py") == []
+
+
+# ---------------------------------------------------------------------------
+# R002 no-full-n
+
+
+def test_r002_flags_materialize():
+    code = ("def radius(source):\n"
+            "    x = source.materialize()\n"
+            "    return x\n")
+    diags = check_source(code, CORE)
+    assert rules(diags) == ["R002"]
+    assert lines(diags, "R002") == [2]
+
+
+def test_r002_flags_asarray_of_source():
+    code = ("import numpy as np\n"
+            "\n"
+            "def f(source):\n"
+            "    return np.asarray(source)\n")
+    diags = check_source(code, CORE)
+    assert rules(diags) == ["R002"]
+    assert lines(diags, "R002") == [4]
+
+
+def test_r002_flags_concat_over_blocks():
+    code = ("import jax.numpy as jnp\n"
+            "\n"
+            "def f(src, rows):\n"
+            "    return jnp.concatenate([b for b in src.blocks(rows)])\n")
+    diags = check_source(code, CORE)
+    assert rules(diags) == ["R002"]
+
+
+def test_r002_flags_take_of_full_arange():
+    code = ("import numpy as np\n"
+            "\n"
+            "def f(source):\n"
+            "    return source.take(np.arange(source.n))\n")
+    diags = check_source(code, CORE)
+    assert rules(diags) == ["R002"]
+
+
+def test_r002_oracle_materialize_is_exempt():
+    code = ("class A:\n"
+            "    def materialize(self):\n"
+            "        return self._parent.materialize()\n")
+    assert check_source(code, CORE) == []
+
+
+def test_r002_clean_bounded_take_and_fold():
+    code = ("import numpy as np\n"
+            "\n"
+            "def g(source, a, b):\n"
+            "    return source.take(np.arange(a, b))\n"
+            "\n"
+            "def fold(source, rows):\n"
+            "    acc = 0.0\n"
+            "    for b in source.blocks(rows):\n"
+            "        acc += float(b.sum())\n"
+            "    return acc\n")
+    assert check_source(code, CORE) == []
+
+
+def test_r002_out_of_scope_outside_core_and_data():
+    code = ("def f(source):\n"
+            "    return source.materialize()\n")
+    assert check_source(code, "src/repro/serve/fixture.py") == []
+
+
+# ---------------------------------------------------------------------------
+# R003 sampler-key-discipline
+
+
+def test_r003_flags_direct_draw():
+    code = ("import jax\n"
+            "\n"
+            "def f(key, n):\n"
+            "    return jax.random.uniform(key, (n,))\n")
+    diags = check_source(code, CORE)
+    assert rules(diags) == ["R003"]
+    assert lines(diags, "R003") == [4]
+
+
+def test_r003_flags_draw_from_import():
+    diags = check_source("from jax.random import uniform\n", CORE)
+    assert rules(diags) == ["R003"]
+
+
+def test_r003_allows_key_management_and_engine_samplers():
+    code = ("import jax\n"
+            "from repro.kernels import engine\n"
+            "\n"
+            "def f(key, a, b):\n"
+            "    k1, k2 = jax.random.split(key, 2)\n"
+            "    jax.random.key_data(k1)\n"
+            "    return engine.uniform_rows(k2, a, b)\n")
+    assert check_source(code, CORE) == []
+
+
+def test_r003_out_of_scope_in_serve():
+    code = ("import jax\n"
+            "\n"
+            "def f(key, n):\n"
+            "    return jax.random.uniform(key, (n,))\n")
+    assert check_source(code, "src/repro/serve/fixture.py") == []
+
+
+# ---------------------------------------------------------------------------
+# R004 recompile-hazard
+
+
+def test_r004_flags_ragged_block_into_jitted_call():
+    code = ("import jax\n"
+            "\n"
+            "@jax.jit\n"
+            "def f(b):\n"
+            "    return b.sum()\n"
+            "\n"
+            "def g(src, rows):\n"
+            "    out = []\n"
+            "    for blk in src.blocks(rows):\n"
+            "        out.append(f(blk))\n"
+            "    return out\n")
+    diags = check_source(code, CORE)
+    assert rules(diags) == ["R004"]
+    assert lines(diags, "R004") == [10]
+
+
+def test_r004_flags_shape_probe_into_jit_wrapped_call():
+    code = ("import jax\n"
+            "\n"
+            "def fn(n):\n"
+            "    return n\n"
+            "\n"
+            "h = jax.jit(fn)\n"
+            "\n"
+            "def g(src, rows):\n"
+            "    for blk in src.blocks(rows):\n"
+            "        h(blk.shape[0])\n")
+    diags = check_source(code, CORE)
+    assert rules(diags) == ["R004"]
+    assert lines(diags, "R004") == [10]
+
+
+def test_r004_clean_after_pad_to_rows():
+    code = ("import jax\n"
+            "import jax.numpy as jnp\n"
+            "\n"
+            "@jax.jit\n"
+            "def f(b):\n"
+            "    return b.sum()\n"
+            "\n"
+            "def g(src, rows):\n"
+            "    out = []\n"
+            "    for blk in src.blocks(rows):\n"
+            "        nb = blk.shape[0]\n"
+            "        if nb < rows:\n"
+            "            blk = jnp.pad(blk, ((0, rows - nb), (0, 0)))\n"
+            "        out.append(f(blk))\n"
+            "    return out\n")
+    assert check_source(code, CORE) == []
+
+
+def test_r004_fixed_shape_streams_not_flagged():
+    code = ("import jax\n"
+            "\n"
+            "@jax.jit\n"
+            "def f(b):\n"
+            "    return b.sum()\n"
+            "\n"
+            "def g(steps):\n"
+            "    for blk, mask in stream_device(steps):\n"
+            "        f(blk)\n")
+    assert check_source(code, CORE) == []
+
+
+def test_r004_eager_callees_not_flagged():
+    code = ("def g(src, rows, ops, centers):\n"
+            "    for blk in src.blocks(rows):\n"
+            "        ops.dist2_to_center(blk, centers)\n")
+    assert check_source(code, CORE) == []
+
+
+# ---------------------------------------------------------------------------
+# R005 x64-hygiene
+
+
+def test_r005_flags_wide_dtype_and_shift():
+    code = ("import jax.numpy as jnp\n"
+            "\n"
+            "def _philox_rows(c, k):\n"
+            "    return (c.astype(jnp.int64) << 32) | k\n")
+    diags = check_source(code, ENGINE)
+    assert set(rules(diags)) == {"R005"}
+    assert 4 in lines(diags, "R005")
+
+
+def test_r005_clean_uint32_limbs():
+    code = ("import jax.numpy as jnp\n"
+            "\n"
+            "def _philox_rows(c, k):\n"
+            "    hi = (c >> jnp.uint32(16)).astype(jnp.uint32)\n"
+            "    return hi ^ k\n")
+    assert check_source(code, ENGINE) == []
+
+
+def test_r005_scoped_to_engine_philox_helpers():
+    code = ("import jax.numpy as jnp\n"
+            "\n"
+            "def _philox_rows(c, k):\n"
+            "    return (c.astype(jnp.int64) << 32) | k\n")
+    assert check_source(code, CORE) == []
+    host = ("import numpy as np\n"
+            "\n"
+            "def split_index_words(start):\n"
+            "    return np.uint64(start) >> np.uint64(32)\n")
+    assert check_source(host, ENGINE) == []
+
+
+# ---------------------------------------------------------------------------
+# suppressions
+
+
+def test_suppression_inline_round_trip():
+    code = ("def f(source):\n"
+            "    return source.materialize()"
+            "  # reprolint: disable=R002 -- device-resident branch, "
+            "documented contract\n")
+    assert check_source(code, CORE) == []
+
+
+def test_suppression_standalone_line_above():
+    code = ("def f(source):\n"
+            "    # reprolint: disable=R002 -- device-resident branch, "
+            "documented contract\n"
+            "    return source.materialize()\n")
+    assert check_source(code, CORE) == []
+
+
+def test_suppression_without_justification_is_an_error():
+    code = ("def f(source):\n"
+            "    return source.materialize()  # reprolint: disable=R002\n")
+    diags = check_source(code, CORE)
+    assert sorted(rules(diags)) == ["R000", "R002"]
+
+
+def test_suppression_unknown_rule_id_is_an_error():
+    code = ("x = 1  # reprolint: disable=R999 -- justified but bogus id\n")
+    diags = check_source(code, CORE)
+    assert rules(diags) == ["R000"]
+    assert "R999" in diags[0].message
+
+
+def test_suppression_does_not_silence_other_rules():
+    code = ("def f(source):\n"
+            "    return source.materialize()"
+            "  # reprolint: disable=R003 -- wrong rule id on purpose\n")
+    diags = check_source(code, CORE)
+    assert rules(diags) == ["R002"]
+
+
+def test_syntax_error_is_reported_not_raised():
+    diags = check_source("def f(:\n", CORE)
+    assert rules(diags) == ["E999"]
+
+
+# ---------------------------------------------------------------------------
+# CLI
+
+
+def test_cli_clean_tree_exits_zero():
+    proc = subprocess.run(
+        [sys.executable, "-m", "tools.reprolint",
+         "src", "benchmarks", "examples"],
+        cwd=ROOT, capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_cli_reports_file_line_rule_and_exits_nonzero(tmp_path):
+    bad = tmp_path / "bad.py"
+    bad.write_text("from jax.sharding import AxisType\n", encoding="utf-8")
+    proc = subprocess.run(
+        [sys.executable, "-m", "tools.reprolint", str(bad),
+         "--output", str(tmp_path / "diag.txt")],
+        cwd=ROOT, capture_output=True, text=True)
+    assert proc.returncode == 1
+    line = proc.stdout.strip().splitlines()[0]
+    assert "bad.py:1 R001" in line
+    assert (tmp_path / "diag.txt").read_text(encoding="utf-8").strip() == line

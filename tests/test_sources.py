@@ -736,7 +736,6 @@ def test_mesh_executor_sharded_never_materializes_full_n():
     # budget-derived super-shard, and nothing calls materialize().
     from repro.core import MeshExecutor
     from repro.data import ShardedSource
-    from repro.kernels import engine
     from repro.launch.mesh import make_mesh
     x = _pts(n=4096, d=3, seed=12)
     shards = [_SpyShard(x[i * 1024:(i + 1) * 1024]) for i in range(4)]

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import ARCH_IDS, SHAPES, get_config, live_cells
+from repro.configs import SHAPES, get_config, live_cells
 
 
 def test_paper_pipeline_end_to_end():

@@ -3,7 +3,6 @@ optimizers, schedules, chunked CE."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_config
 from repro.data import model_batch

@@ -1,0 +1,42 @@
+"""reprolint: repo-specific AST contract checker.
+
+Machine-enforces the three invariants this reproduction's correctness
+story rests on (see ARCHITECTURE.md "Contracts & reprolint"):
+
+1. the MapReduce memory model — no path outside declared oracles may
+   materialize all n rows (R002),
+2. blocking-invariant sampling — randomness on streamed paths goes
+   through the counter-keyed Philox samplers, never per-block
+   ``jax.random`` draws (R003), with the limb arithmetic staying pure
+   uint32 (R005),
+3. version portability — drifting jax APIs route through
+   ``repro.compat`` (R001), and jitted callables never see ragged block
+   shapes (R004).
+
+Pure stdlib (``ast`` + ``tokenize``-free line scanning): importable and
+runnable without jax installed, so the same check runs identically on
+both CI jax lines. Use as a library via :func:`check_source` /
+:func:`check_file`, or as a CLI::
+
+    python -m tools.reprolint src benchmarks examples
+"""
+from .core import (  # noqa: F401  (public re-exports)
+    Diagnostic,
+    Rule,
+    all_rules,
+    check_file,
+    check_source,
+    register,
+)
+
+__all__ = [
+    "Diagnostic",
+    "Rule",
+    "all_rules",
+    "check_file",
+    "check_source",
+    "register",
+]
+
+# Importing the rules package registers every rule with the registry.
+from . import rules  # noqa: E402,F401

@@ -1,0 +1,50 @@
+"""CLI: ``python -m tools.reprolint src benchmarks examples``.
+
+Exits non-zero with ``file:line rule message`` diagnostics on stdout.
+``--output FILE`` additionally writes the diagnostics to a file (the CI
+lint job uploads it as an artifact on failure). ``--list-rules`` prints
+every registered rule with its contract docstring.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from .core import all_rules, run_paths
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.reprolint",
+        description="repo-specific AST contract checker (stdlib-only)")
+    ap.add_argument("paths", nargs="*", default=[],
+                    help="files or directories to lint (relative to cwd)")
+    ap.add_argument("-o", "--output", metavar="FILE",
+                    help="also write diagnostics to FILE")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print registered rules and their contracts")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule in all_rules():
+            doc = [l.strip() for l in (rule.__doc__ or "").splitlines()]
+            body = [l for l in doc if l and not l.startswith(rule.id)]
+            head = body[0] if body else ""
+            print(f"{rule.id} {rule.name}: {head}")
+        return 0
+
+    if not args.paths:
+        ap.error("no paths given (try: src benchmarks examples)")
+
+    diags = run_paths(args.paths, root=Path.cwd())
+    lines = [d.render() for d in diags]
+    for line in lines:
+        print(line)
+    if args.output:
+        Path(args.output).write_text(
+            "\n".join(lines) + ("\n" if lines else ""), encoding="utf-8")
+    if diags:
+        print(f"reprolint: {len(diags)} finding(s)", file=sys.stderr)
+        return 1
+    return 0

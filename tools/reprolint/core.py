@@ -1,0 +1,234 @@
+"""Rule framework: registry, diagnostics, suppressions, file walking.
+
+Design constraints (ISSUE 6):
+
+* pure stdlib — no jax import anywhere in ``tools.reprolint``, so the
+  checker runs identically on both CI jax lines (and on a bare runner
+  with no jax at all);
+* per-line ``# reprolint: disable=RULE -- justification`` suppressions
+  with *mandatory* justification text — a suppression without one is
+  itself an error (R000) and does not silence anything;
+* per-directory/file whitelists live in :mod:`tools.reprolint.config`,
+  rule scoping is by posix-style path prefix.
+
+Suppression grammar (one physical line)::
+
+    <code>  # reprolint: disable=R002 -- device path needs random access
+    # reprolint: disable=R002,R004 -- <why>        (standalone: applies
+    <code>                                          to the next line)
+
+The justification is everything after ``--`` and must be at least
+MIN_JUSTIFICATION characters of real text.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, Iterable, Iterator, List, Optional, Set, Tuple
+
+MIN_JUSTIFICATION = 10
+
+# ids must be RNNN-shaped: prose that merely *mentions* the directive
+# syntax ("disable=RULE ...") is not a directive.
+_SUPPRESS_RE = re.compile(
+    r"#\s*reprolint:\s*disable=([A-Z]\d{3}(?:\s*,\s*[A-Z]\d{3})*)"
+    r"(?:\s+--\s*(?P<why>.*\S))?\s*$"
+)
+
+
+@dataclass(frozen=True, order=True)
+class Diagnostic:
+    """One finding: ``path:line rule message``."""
+
+    path: str
+    line: int
+    rule: str
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line} {self.rule} {self.message}"
+
+
+class Rule:
+    """Base class for reprolint rules.
+
+    Subclasses set ``id``/``name`` and implement :meth:`check`, yielding
+    :class:`Diagnostic` objects anchored at the offending node's line.
+    The class docstring is the rule's contract statement — it must name
+    the invariant enforced and the test / ARCHITECTURE section that pins
+    it (rendered by ``--list-rules``).
+    """
+
+    id: str = ""
+    name: str = ""
+
+    def applies_to(self, relpath: str) -> bool:
+        from . import config
+
+        return config.in_scope(self.id, relpath)
+
+    def check(self, tree: ast.AST, text: str, relpath: str) -> Iterator[Diagnostic]:
+        raise NotImplementedError
+
+    # -- helpers shared by rules ---------------------------------------
+
+    @staticmethod
+    def dotted(node: ast.AST) -> Optional[str]:
+        """Resolve a Name/Attribute chain to ``"a.b.c"`` (else None)."""
+        parts: List[str] = []
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if isinstance(node, ast.Name):
+            parts.append(node.id)
+            return ".".join(reversed(parts))
+        return None
+
+    @staticmethod
+    def terminal(node: ast.AST) -> Optional[str]:
+        """Last component of a call target: ``a.b.c`` -> ``c``."""
+        if isinstance(node, ast.Attribute):
+            return node.attr
+        if isinstance(node, ast.Name):
+            return node.id
+        return None
+
+
+REGISTRY: Dict[str, Rule] = {}
+
+
+def register(cls: type) -> type:
+    """Class decorator: instantiate and register a rule by its id."""
+    rule = cls()
+    if not rule.id:
+        raise ValueError(f"rule {cls.__name__} has no id")
+    if rule.id in REGISTRY:
+        raise ValueError(f"duplicate rule id {rule.id}")
+    REGISTRY[rule.id] = rule
+    return cls
+
+
+def all_rules() -> List[Rule]:
+    return [REGISTRY[k] for k in sorted(REGISTRY)]
+
+
+# ---------------------------------------------------------------------------
+# suppressions
+
+
+@dataclass
+class _Suppression:
+    line: int           # line the directive is written on
+    applies_to: int     # line it silences
+    rules: Set[str] = field(default_factory=set)
+    justified: bool = False
+    used: bool = False
+
+
+def _parse_suppressions(text: str) -> Tuple[List[_Suppression], List[Diagnostic]]:
+    sups: List[_Suppression] = []
+    errors: List[Diagnostic] = []
+    lines = text.splitlines()
+    for i, raw in enumerate(lines, start=1):
+        m = _SUPPRESS_RE.search(raw)
+        if not m:
+            continue
+        ids = {s.strip() for s in m.group(1).split(",") if s.strip()}
+        why = m.group("why") or ""
+        justified = len(why.strip()) >= MIN_JUSTIFICATION
+        # standalone comment line -> applies to the next line
+        target = i + 1 if raw.lstrip().startswith("#") else i
+        sups.append(_Suppression(i, target, ids, justified))
+    return sups, errors
+
+
+def _apply_suppressions(
+    diags: List[Diagnostic], sups: List[_Suppression], relpath: str
+) -> List[Diagnostic]:
+    out: List[Diagnostic] = []
+    known = set(REGISTRY)
+    for d in diags:
+        silenced = False
+        for s in sups:
+            if s.applies_to == d.line and d.rule in s.rules and s.justified:
+                s.used = True
+                silenced = True
+                break
+        if not silenced:
+            out.append(d)
+    for s in sups:
+        if not s.justified:
+            out.append(Diagnostic(
+                relpath, s.line, "R000",
+                "suppression without justification — write "
+                "`# reprolint: disable=RXXX -- <why, at least "
+                f"{MIN_JUSTIFICATION} chars>`"))
+        unknown = s.rules - known
+        for rid in sorted(unknown):
+            out.append(Diagnostic(
+                relpath, s.line, "R000", f"unknown rule id {rid!r} in suppression"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# entry points
+
+
+def check_source(
+    text: str,
+    relpath: str,
+    rules: Optional[Iterable[Rule]] = None,
+) -> List[Diagnostic]:
+    """Lint one source string as if it lived at ``relpath`` (posix).
+
+    ``relpath`` drives rule scoping and whitelists, so fixture tests can
+    place snippets at virtual paths like ``src/repro/core/x.py``.
+    """
+    relpath = relpath.replace("\\", "/")
+    try:
+        tree = ast.parse(text)
+    except SyntaxError as e:
+        return [Diagnostic(relpath, e.lineno or 1, "E999",
+                           f"syntax error: {e.msg}")]
+    from . import config
+
+    if config.file_whitelisted(relpath):
+        return []
+    active = [r for r in (rules or all_rules()) if r.applies_to(relpath)]
+    diags: List[Diagnostic] = []
+    for rule in active:
+        diags.extend(rule.check(tree, text, relpath))
+    sups, errs = _parse_suppressions(text)
+    diags.extend(errs)
+    return sorted(_apply_suppressions(diags, sups, relpath))
+
+
+def check_file(path: Path, root: Optional[Path] = None) -> List[Diagnostic]:
+    root = root or Path.cwd()
+    try:
+        rel = path.resolve().relative_to(root.resolve()).as_posix()
+    except ValueError:
+        rel = path.as_posix()
+    return check_source(path.read_text(encoding="utf-8"), rel)
+
+
+def iter_python_files(paths: Iterable[str], root: Path) -> Iterator[Path]:
+    for p in paths:
+        pp = (root / p) if not Path(p).is_absolute() else Path(p)
+        if pp.is_file():
+            yield pp
+        elif pp.is_dir():
+            for f in sorted(pp.rglob("*.py")):
+                if "__pycache__" in f.parts:
+                    continue
+                yield f
+
+
+def run_paths(paths: Iterable[str], root: Optional[Path] = None) -> List[Diagnostic]:
+    root = root or Path.cwd()
+    diags: List[Diagnostic] = []
+    for f in iter_python_files(paths, root):
+        diags.extend(check_file(f, root))
+    return sorted(diags)

@@ -1,0 +1,8 @@
+"""Rule modules — importing this package registers every rule."""
+from . import (  # noqa: F401
+    r001_compat,
+    r002_full_n,
+    r003_sampler,
+    r004_recompile,
+    r005_x64,
+)

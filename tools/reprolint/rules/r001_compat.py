@@ -1,0 +1,90 @@
+"""R001 compat-only-imports.
+
+Contract: version-drifting jax APIs (``jax.experimental.shard_map``,
+top-level ``jax.shard_map``, ``jax.set_mesh``,
+``jax.make_array_from_single_device_arrays``, ``jax.sharding.AxisType``)
+are used *only* inside ``src/repro/compat.py`` — every other module goes
+through the feature-detected shim so the tree imports and runs on both
+the jax 0.4.x and 0.6+ CI lines.
+
+Pinned by: ARCHITECTURE.md "Version portability" and
+``tests/test_compat_fallbacks.py`` (the shim's legacy branches);
+the whitelist is ``config.WHITELIST["R001"]``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List
+
+from .. import config
+from ..core import Diagnostic, Rule, register
+
+_FORBIDDEN_MODULES = ("jax.experimental.shard_map",)
+
+_FORBIDDEN_FROM = {
+    ("jax", "shard_map"),
+    ("jax", "set_mesh"),
+    ("jax", "make_array_from_single_device_arrays"),
+    ("jax.sharding", "AxisType"),
+    ("jax.experimental", "shard_map"),
+}
+
+_FORBIDDEN_ATTRS = {
+    "jax.shard_map",
+    "jax.set_mesh",
+    "jax.make_array_from_single_device_arrays",
+    "jax.sharding.AxisType",
+    "jax.experimental.shard_map",
+}
+
+_HINT = "route it through repro.compat (extend the shim if missing)"
+
+
+@register
+class CompatOnlyImports(Rule):
+    __doc__ = __doc__
+
+    id = "R001"
+    name = "compat-only-imports"
+
+    def check(self, tree: ast.AST, text: str, relpath: str) -> Iterator[Diagnostic]:
+        if config.rule_whitelisted(self.id, relpath):
+            return
+        diags: List[Diagnostic] = []
+
+        class V(ast.NodeVisitor):
+            def visit_Import(self, node: ast.Import) -> None:
+                for alias in node.names:
+                    for mod in _FORBIDDEN_MODULES:
+                        if alias.name == mod or alias.name.startswith(mod + "."):
+                            diags.append(Diagnostic(
+                                relpath, node.lineno, "R001",
+                                f"direct import of {alias.name!r}; {_HINT}"))
+
+            def visit_ImportFrom(self, node: ast.ImportFrom) -> None:
+                mod = node.module or ""
+                if mod in _FORBIDDEN_MODULES:
+                    diags.append(Diagnostic(
+                        relpath, node.lineno, "R001",
+                        f"direct import from {mod!r}; {_HINT}"))
+                    return
+                for alias in node.names:
+                    if (mod, alias.name) in _FORBIDDEN_FROM:
+                        diags.append(Diagnostic(
+                            relpath, node.lineno, "R001",
+                            f"direct import of {mod}.{alias.name}; {_HINT}"))
+
+            def visit_Attribute(self, node: ast.Attribute) -> None:
+                dn = Rule.dotted(node)
+                if dn is not None and (
+                    dn in _FORBIDDEN_ATTRS
+                    or any(dn.startswith(a + ".") for a in _FORBIDDEN_ATTRS)
+                ):
+                    diags.append(Diagnostic(
+                        relpath, node.lineno, "R001",
+                        f"direct use of drifting jax API {dn!r}; {_HINT}"))
+                    return  # don't recurse: avoid re-flagging the prefix
+                self.generic_visit(node)
+
+        V().visit(tree)
+        yield from diags

@@ -1,0 +1,134 @@
+"""R002 no-full-n.
+
+Contract: the MapReduce memory model (paper §2; ARCHITECTURE.md
+"Compacted-R iteration") — no code path in ``core/`` or ``data/``
+materializes all n rows outside declared oracle functions. Device
+residency on streamed paths is bounded by ``(1+prefetch)·4·rows·(d+1)``
+bytes; one careless ``source.materialize()`` / ``asarray(source)`` /
+``take(arange(source.n))`` silently voids every out-of-core guarantee.
+
+Flagged patterns:
+  (a) any ``.materialize()`` call,
+  (b) ``np.asarray``/``jnp.asarray`` of a source-named binding,
+  (c) ``concatenate``/``stack``-family calls over a ``.blocks()`` /
+      ``.host_blocks()`` stream,
+  (d) ``.take(...)`` whose index expression is an ``arange`` that
+      references a ``.n`` attribute (i.e. all row ids at once).
+
+Exempt: functions named ``materialize`` (the PointSource protocol's own
+escape hatch) and the whole-function oracles in ``config.ORACLES``.
+
+Pinned by: tests/test_eim_stream.py residency pins and the
+tests/test_executor.py streamed-vs-device parity grids.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List
+
+from .. import config
+from ..core import Diagnostic, Rule, register
+
+_ASARRAY = {"np.asarray", "jnp.asarray", "numpy.asarray", "jax.numpy.asarray"}
+_CONCAT = {"concatenate", "stack", "vstack", "hstack"}
+_BLOCK_STREAMS = {"blocks", "host_blocks"}
+
+
+def _contains_block_stream(node: ast.AST) -> bool:
+    for sub in ast.walk(node):
+        if (isinstance(sub, ast.Call)
+                and isinstance(sub.func, ast.Attribute)
+                and sub.func.attr in _BLOCK_STREAMS):
+            return True
+    return False
+
+
+def _contains_full_arange(node: ast.AST) -> bool:
+    """An ``arange(...)`` call whose arguments reference a ``.n`` attr."""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call) and Rule.terminal(sub.func) == "arange":
+            for arg in ast.walk(sub):
+                if isinstance(arg, ast.Attribute) and arg.attr == "n":
+                    return True
+    return False
+
+
+@register
+class NoFullN(Rule):
+    __doc__ = __doc__
+
+    id = "R002"
+    name = "no-full-n"
+
+    def check(self, tree: ast.AST, text: str, relpath: str) -> Iterator[Diagnostic]:
+        diags: List[Diagnostic] = []
+
+        class V(ast.NodeVisitor):
+            def __init__(self) -> None:
+                self.stack: List[str] = []   # class/function qualname parts
+                self.oracle_depth = 0
+
+            def _qualname(self) -> str:
+                return ".".join(self.stack)
+
+            def _enter(self, node, is_func: bool) -> None:
+                self.stack.append(node.name)
+                oracle = False
+                if is_func:
+                    if node.name in config.ORACLE_NAMES:
+                        oracle = True
+                    elif config.oracle_justification(
+                            relpath, self._qualname()) is not None:
+                        oracle = True
+                self.oracle_depth += oracle
+                self.generic_visit(node)
+                self.oracle_depth -= oracle
+                self.stack.pop()
+
+            def visit_ClassDef(self, node: ast.ClassDef) -> None:
+                self._enter(node, is_func=False)
+
+            def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+                self._enter(node, is_func=True)
+
+            def visit_AsyncFunctionDef(self, node) -> None:
+                self._enter(node, is_func=True)
+
+            def visit_Call(self, node: ast.Call) -> None:
+                if not self.oracle_depth:
+                    self._check_call(node)
+                self.generic_visit(node)
+
+            def _check_call(self, node: ast.Call) -> None:
+                func = node.func
+                attr = func.attr if isinstance(func, ast.Attribute) else None
+                if attr == "materialize":
+                    diags.append(Diagnostic(
+                        relpath, node.lineno, "R002",
+                        "whole-source materialization outside a declared "
+                        "oracle (all n rows on device)"))
+                    return
+                dn = Rule.dotted(func)
+                if (dn in _ASARRAY and node.args
+                        and isinstance(node.args[0], ast.Name)
+                        and config.is_source_name(node.args[0].id)):
+                    diags.append(Diagnostic(
+                        relpath, node.lineno, "R002",
+                        f"asarray({node.args[0].id}) materializes the whole "
+                        "source; fold over blocks() instead"))
+                    return
+                if attr in _CONCAT and any(
+                        _contains_block_stream(a) for a in node.args):
+                    diags.append(Diagnostic(
+                        relpath, node.lineno, "R002",
+                        f"{attr}() over a block stream rebuilds all n rows; "
+                        "fold block-by-block instead"))
+                    return
+                if attr == "take" and any(
+                        _contains_full_arange(a) for a in node.args):
+                    diags.append(Diagnostic(
+                        relpath, node.lineno, "R002",
+                        "take(arange(..n..)) gathers every row id at once"))
+
+        V().visit(tree)
+        yield from diags

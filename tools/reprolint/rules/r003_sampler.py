@@ -1,0 +1,84 @@
+"""R003 sampler-key-discipline.
+
+Contract: on the streamed algorithm paths (``core/``) and inside the
+sampler engine (``kernels/engine.py``), randomness is drawn through the
+counter-keyed Philox samplers (``engine.uniform_rows*`` /
+``engine.bernoulli_rows*``), which key every variate by the row's
+*absolute original index*. Direct ``jax.random.*`` draws are forbidden
+there: a per-block ``jax.random.uniform(split(key, i), ...)`` makes the
+sampled bits depend on the blocking geometry, breaking the
+blocking-invariance pin (same bits for any ``block_rows``/shard split)
+that every streamed-vs-device parity test relies on.
+
+Key *management* stays allowed (``PRNGKey``/``split``/``fold_in``/
+``key_data``/...): deriving per-round keys is deterministic bookkeeping,
+not a draw.
+
+Pinned by: tests/test_engine.py blocking-invariance grid and
+ARCHITECTURE.md "Engine" (counter-sampler paragraph).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Set
+
+from .. import config
+from ..core import Diagnostic, Rule, register
+
+
+@register
+class SamplerKeyDiscipline(Rule):
+    __doc__ = __doc__
+
+    id = "R003"
+    name = "sampler-key-discipline"
+
+    def check(self, tree: ast.AST, text: str, relpath: str) -> Iterator[Diagnostic]:
+        diags: List[Diagnostic] = []
+        # module aliases bound to jax.random in this file
+        aliases: Set[str] = set()
+
+        class V(ast.NodeVisitor):
+            def visit_Import(self, node: ast.Import) -> None:
+                for alias in node.names:
+                    if alias.name == "jax.random" and alias.asname:
+                        aliases.add(alias.asname)
+
+            def visit_ImportFrom(self, node: ast.ImportFrom) -> None:
+                mod = node.module or ""
+                if mod == "jax":
+                    for alias in node.names:
+                        if alias.name == "random":
+                            aliases.add(alias.asname or "random")
+                elif mod == "jax.random":
+                    for alias in node.names:
+                        if alias.name not in config.KEY_OPS:
+                            diags.append(Diagnostic(
+                                relpath, node.lineno, "R003",
+                                f"direct import of jax.random.{alias.name}; "
+                                "draw through the engine counter samplers "
+                                "(uniform_rows*/bernoulli_rows*)"))
+
+            def visit_Attribute(self, node: ast.Attribute) -> None:
+                dn = Rule.dotted(node)
+                if dn is not None:
+                    draw = None
+                    if dn.startswith("jax.random."):
+                        draw = dn[len("jax.random."):]
+                    else:
+                        base, _, rest = dn.partition(".")
+                        if base in aliases and rest:
+                            draw = rest
+                    if (draw is not None and "." not in draw
+                            and draw not in config.KEY_OPS):
+                        diags.append(Diagnostic(
+                            relpath, node.lineno, "R003",
+                            f"jax.random.{draw} draw on a streamed path; "
+                            "use the engine counter samplers "
+                            "(uniform_rows*/bernoulli_rows*) keyed by "
+                            "absolute row index"))
+                        return
+                self.generic_visit(node)
+
+        V().visit(tree)
+        yield from diags

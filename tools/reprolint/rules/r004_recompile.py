@@ -1,0 +1,192 @@
+"""R004 recompile-hazard.
+
+Contract: jitted callables must see fixed operand shapes. Block streams
+(``.blocks()`` / ``.host_blocks()`` / ``_source_blocks`` / executor
+``_blocks``) yield a ragged tail block, so passing the raw loop block —
+or its ``.shape[0]`` / ``len()`` — into a jit-compiled callee triggers
+one fresh XLA compile per distinct tail shape (the exact bug class
+fixed in PRs 4–5: pad the block to ``rows`` and carry a validity mask
+instead). ``stream_device`` / ``zip_shard_blocks`` / ``_stream_steps``
+are not flagged: they yield pre-padded fixed-shape steps by
+construction.
+
+Detection: within each ``for`` loop over a ragged stream, the loop
+variable is tainted; rebinding it through a ``pad(...)`` call sanitizes
+it; a tainted block (or a shape probe of one) reaching an argument of a
+known-jitted callee is a hazard. Jitted callees are auto-detected from
+module-local ``@jax.jit`` decorations and ``name = jax.jit(...)``
+bindings, plus the cross-module set in ``config.JITTED_CALLEES``.
+
+Pinned by: tests/test_executor.py (single-executable filter rounds) and
+ARCHITECTURE.md "Compacted-R iteration" (pad-to-rows discussion).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Optional, Set
+
+from .. import config
+from ..core import Diagnostic, Rule, register
+
+
+def _contains_dotted(node: ast.AST, dotted: str, bare: str) -> bool:
+    for sub in ast.walk(node):
+        dn = Rule.dotted(sub) if isinstance(sub, (ast.Attribute, ast.Name)) else None
+        if dn == dotted or dn == bare:
+            return True
+    return False
+
+
+def _module_jitted_names(tree: ast.AST) -> Set[str]:
+    """Names bound (at any nesting level) to jit-compiled callables."""
+    jitted: Set[str] = set(config.JITTED_CALLEES)
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                if _contains_dotted(dec, "jax.jit", "jit"):
+                    jitted.add(node.name)
+        elif isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            if _contains_dotted(node.value, "jax.jit", "jit"):
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        jitted.add(t.id)
+    return jitted
+
+
+def _is_ragged_stream_iter(it: ast.AST) -> bool:
+    for sub in ast.walk(it):
+        if isinstance(sub, ast.Call):
+            name = Rule.terminal(sub.func)
+            if name in config.RAGGED_STREAMS:
+                return True
+    return False
+
+
+def _loop_targets(target: ast.AST, it: ast.AST) -> Set[str]:
+    """Names bound to the *block* by the loop target.
+
+    ``for i, blk in enumerate(stream)`` taints only ``blk`` — the
+    counter is a fixed-shape int.
+    """
+    if isinstance(target, ast.Name):
+        return {target.id}
+    if isinstance(target, ast.Tuple):
+        elts = target.elts
+        if (isinstance(it, ast.Call) and Rule.terminal(it.func) == "enumerate"
+                and len(elts) >= 2):
+            elts = elts[1:]
+        out: Set[str] = set()
+        for e in elts:
+            out |= _loop_targets(e, it=ast.Constant(value=None))
+        return out
+    return set()
+
+
+def _has_pad_call(node: ast.AST) -> bool:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call) and Rule.terminal(sub.func) in config.PAD_CALLS:
+            return True
+    return False
+
+
+def _has_ragged_use(node: ast.AST, tainted: Set[str]) -> bool:
+    """A tainted Name used *as an array* (not merely its .shape/len)."""
+    if isinstance(node, ast.Attribute) and node.attr == "shape":
+        return False
+    if isinstance(node, ast.Call) and Rule.terminal(node.func) == "len":
+        return False
+    if isinstance(node, ast.Name):
+        return node.id in tainted
+    return any(_has_ragged_use(c, tainted) for c in ast.iter_child_nodes(node))
+
+
+def _has_shape_probe(node: ast.AST, tainted: Set[str]) -> bool:
+    """``blk.shape[...]`` or ``len(blk)`` of a tainted name."""
+    for sub in ast.walk(node):
+        if (isinstance(sub, ast.Attribute) and sub.attr == "shape"
+                and isinstance(sub.value, ast.Name)
+                and sub.value.id in tainted):
+            return True
+        if (isinstance(sub, ast.Call) and Rule.terminal(sub.func) == "len"
+                and sub.args and isinstance(sub.args[0], ast.Name)
+                and sub.args[0].id in tainted):
+            return True
+    return False
+
+
+def _assign_targets(node: ast.AST) -> List[str]:
+    out: List[str] = []
+    targets = []
+    if isinstance(node, ast.Assign):
+        targets = node.targets
+    elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+        targets = [node.target]
+    for t in targets:
+        if isinstance(t, ast.Name):
+            out.append(t.id)
+        elif isinstance(t, ast.Tuple):
+            out.extend(e.id for e in t.elts if isinstance(e, ast.Name))
+    return out
+
+
+@register
+class RecompileHazard(Rule):
+    __doc__ = __doc__
+
+    id = "R004"
+    name = "recompile-hazard"
+
+    def check(self, tree: ast.AST, text: str, relpath: str) -> Iterator[Diagnostic]:
+        jitted = _module_jitted_names(tree)
+        diags: List[Diagnostic] = []
+
+        for loop in ast.walk(tree):
+            if not isinstance(loop, ast.For):
+                continue
+            if not _is_ragged_stream_iter(loop.iter):
+                continue
+            tainted = _loop_targets(loop.target, loop.iter)
+            if not tainted:
+                continue
+            # lexical scan of the loop body: assignments update taint,
+            # jitted calls are checked against the current taint set.
+            events = []
+            for stmt in loop.body:
+                for sub in ast.walk(stmt):
+                    if isinstance(sub, (ast.Assign, ast.AugAssign,
+                                        ast.AnnAssign, ast.Call)):
+                        events.append(sub)
+            events.sort(key=lambda n: (n.lineno, n.col_offset))
+            for ev in events:
+                if isinstance(ev, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+                    value = ev.value
+                    if value is None:
+                        continue
+                    names = _assign_targets(ev)
+                    if _has_pad_call(value):
+                        tainted -= set(names)
+                    elif _has_ragged_use(value, tainted):
+                        tainted |= set(names)
+                    else:
+                        tainted -= set(names)
+                    continue
+                # ev is a Call
+                callee: Optional[str] = Rule.terminal(ev.func)
+                if callee not in jitted:
+                    continue
+                for arg in list(ev.args) + [kw.value for kw in ev.keywords]:
+                    if _has_ragged_use(arg, tainted):
+                        diags.append(Diagnostic(
+                            relpath, ev.lineno, "R004",
+                            f"ragged block passed to jitted {callee}(); "
+                            "pad to `rows` (+ validity mask) first — one "
+                            "compile per tail shape otherwise"))
+                        break
+                    if _has_shape_probe(arg, tainted):
+                        diags.append(Diagnostic(
+                            relpath, ev.lineno, "R004",
+                            f"block shape probe passed to jitted {callee}(); "
+                            "pad to `rows` and pass the fixed row count"))
+                        break
+
+        yield from diags

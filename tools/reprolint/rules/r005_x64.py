@@ -1,0 +1,72 @@
+"""R005 x64-hygiene.
+
+Contract: the Philox-4x32-10 limb arithmetic in
+``src/repro/kernels/engine.py`` (``_mulhilo32``, ``_philox_rows``,
+``_uniform_rows_words``, ``_uniform_at_words``) stays pure uint32 — no
+``int64``/``uint64``/``float64`` dtype references and no shifts by >= 32
+bits. With ``JAX_ENABLE_X64=0`` (the repo default and the CI
+determinism job), a 64-bit op would be silently truncated to 32 bits
+and the sampled bits would differ from the x64-on run, breaking the
+bitwise determinism pin. Counter splitting that genuinely needs 64-bit
+row indices happens on the *host* (``uniform_rows``'s ``start >> 32``,
+``split_index_words``) before anything reaches the device — those are
+deliberately out of scope (see config.PHILOX_FUNC_PREFIXES).
+
+Pinned by: the CI determinism job (JAX_ENABLE_X64=0 grid of
+tests/test_eim_stream.py) and ARCHITECTURE.md "Engine" (Philox
+paragraph).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List
+
+from .. import config
+from ..core import Diagnostic, Rule, register
+
+
+def _philox_scoped(name: str) -> bool:
+    return name.startswith(config.PHILOX_FUNC_PREFIXES)
+
+
+@register
+class X64Hygiene(Rule):
+    __doc__ = __doc__
+
+    id = "R005"
+    name = "x64-hygiene"
+
+    def check(self, tree: ast.AST, text: str, relpath: str) -> Iterator[Diagnostic]:
+        diags: List[Diagnostic] = []
+
+        def scan(func: ast.FunctionDef) -> None:
+            for node in ast.walk(func):
+                if (isinstance(node, ast.Attribute)
+                        and node.attr in config.WIDE_DTYPES):
+                    diags.append(Diagnostic(
+                        relpath, node.lineno, "R005",
+                        f"{node.attr} inside Philox helper "
+                        f"{func.name}(); limb arithmetic must stay pure "
+                        "uint32 (x64-off truncates silently)"))
+                elif (isinstance(node, ast.Name)
+                        and node.id in config.WIDE_DTYPES):
+                    diags.append(Diagnostic(
+                        relpath, node.lineno, "R005",
+                        f"{node.id} inside Philox helper {func.name}()"))
+                elif (isinstance(node, ast.BinOp)
+                        and isinstance(node.op, (ast.LShift, ast.RShift))):
+                    for side in (node.left, node.right):
+                        if (isinstance(side, ast.Constant)
+                                and isinstance(side.value, int)
+                                and side.value >= 32):
+                            diags.append(Diagnostic(
+                                relpath, node.lineno, "R005",
+                                f"shift by {side.value} inside Philox "
+                                f"helper {func.name}(); limbs are 32-bit"))
+
+        for node in ast.walk(tree):
+            if (isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef))
+                    and _philox_scoped(node.name)):
+                scan(node)
+
+        yield from diags
