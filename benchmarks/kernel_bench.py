@@ -50,3 +50,79 @@ def run():
     for d in (64, 1024, 4096):
         ws = (DEFAULT_BN + DEFAULT_BM) * d * 4 + DEFAULT_BN * DEFAULT_BM * 4
         yield f"pairwise_vmem_ws_d{d}", 0.0, f"{ws / 2 ** 20:.1f}MiB<16MiB"
+
+
+def _stream_bytes(n: int, d: int) -> int:
+    """HBM traffic model of one fused filter block: read the (n, d) tile +
+    carried d_s + H mask, write d_s — the O(m)/O(rank) outputs and the
+    resident (m, d) centers are noise at these shapes."""
+    return 4 * n * (d + 3)
+
+
+def run_streamed(full: bool = False):
+    """Streamed-fold section: the fused one-pass filter block vs the
+    multi-dispatch ``lax.scan`` reference path, as achieved GB/s against
+    the *measured* triad roofline (benchmarks.roofline.measured_peak_bw).
+
+    Both rows run the same block share of EIM Rounds 2–3 at the same tile
+    size, so the delta isolates exactly what the tentpole fuses:
+
+    * "scan" — eager ``filter_tile_update(impl="ref", chunk=…)``: the form
+      the ref source folds execute per block — a ``lax.scan`` of distance
+      tiles followed by separate min / where / top-k dispatches with the
+      reduced vectors (and per-step distance blocks) materialized between
+      them.
+    * "fused" — the jitted one-program ``engine.eim_filter_block`` the
+      executors dispatch, at ``impl="auto"``: the native Pallas tile on
+      TPU/feature-detected GPU; on CPU it resolves to the single fused XLA
+      program (interpret-mode timings would be meaningless), which still
+      buys the dispatch fusion the kernel provides natively.
+
+    Also yields a launch-bound canary: a bandwidth-bound fold must scale
+    ~linearly in n, so t(n)/t(n/4) far below 4 would mean per-call
+    overhead, not HBM traffic, dominates.
+    """
+    from repro.kernels import engine
+
+    from . import roofline
+
+    peak = roofline.measured_peak_bw()
+    yield "streamfold_triad_peak", 0.0, f"{peak / 1e9:.1f}GB/s"
+
+    rng = np.random.default_rng(1)
+    rank = 16
+    chunk = 2048
+    shapes = [(400_000, 64, 8), (200_000, 256, 32)]
+    if full:
+        shapes.append((1_000_000, 256, 64))
+    for n, m, d in shapes:
+        x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+        c = jnp.asarray(rng.normal(size=(m, d)).astype(np.float32))
+        ds = jnp.full((n,), 3.4e38, jnp.float32)
+        h = jnp.ones((n,), bool)
+        top = engine.top_k_init(rank)
+        bytes_ = _stream_bytes(n, d)
+
+        def fused(blk, ds_):
+            return engine.eim_filter_block(blk, c, ds_, h[: blk.shape[0]],
+                                           top, rank=rank, impl="auto",
+                                           chunk=chunk)
+
+        def scan(blk, ds_):
+            return engine.filter_tile_update(blk, c, ds_, h[: blk.shape[0]],
+                                             rank=rank, impl="ref",
+                                             chunk=chunk)
+
+        t_f = _t(fused, x, ds, reps=5)
+        t_s = _t(scan, x, ds, reps=5)
+        g_f, g_s = bytes_ / t_f / 1e9, bytes_ / t_s / 1e9
+        yield (f"streamfold_fused_n{n}_m{m}_d{d}", t_f * 1e6,
+               f"{g_f:.1f}GB/s;roofline={g_f * 1e9 / peak:.2f}")
+        yield (f"streamfold_scan_n{n}_m{m}_d{d}", t_s * 1e6,
+               f"{g_s:.1f}GB/s;roofline={g_s * 1e9 / peak:.2f}")
+        yield (f"streamfold_speedup_n{n}_m{m}_d{d}", 0.0,
+               f"fused/scan={t_s / t_f:.2f}x")
+        # Launch-bound canary: quarter the work, expect ≥1.5× less time.
+        t_q = _t(lambda: fused(x[: n // 4], ds[: n // 4]), reps=5)
+        yield (f"streamfold_workscale_n{n}_m{m}_d{d}", t_q * 1e6,
+               f"t(n)/t(n/4)={t_f / t_q:.2f};bw_bound={t_f / t_q > 1.5}")

@@ -197,3 +197,42 @@ def full_table(dryrun_dir: str = "experiments/dryrun"):
             if r:
                 rows.append(r)
     return rows
+
+
+# ---------------------------------------------------------------------------
+# Streamed-fold roofline (the fused tile kernels, EXPERIMENTS §Kernels).
+#
+# The LM-stack roofline above prices a *hypothetical* TPU pod from spec
+# sheets; the streamed k-center folds run on whatever backend the bench
+# is on, so their denominator must be *measured*, not quoted: a STREAM-
+# triad (a = b + s·c, 3 streams of traffic) gives the achievable memory
+# bandwidth of this host/device, and each fold's achieved GB/s is
+# reported as a fraction of that. A fold whose fraction approaches the
+# triad's is bandwidth-bound — the fused one-pass claim — while a
+# launch-/dispatch-bound fold would sit far below it AND fail the
+# work-scaling test in kernel_bench.run_streamed.
+# ---------------------------------------------------------------------------
+
+def measured_peak_bw(n: int = 4_000_000, reps: int = 5) -> float:
+    """Empirical streaming bandwidth (bytes/s) via a jitted f32 triad.
+
+    Traffic model: read b, read c, write a = 3·4·n bytes per call. Best
+    of ``reps`` (peak bandwidth wants the min time — interference only
+    ever slows a run down).
+    """
+    import time
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    b = jnp.arange(n, dtype=jnp.float32)
+    c = jnp.ones((n,), jnp.float32)
+    triad = jax.jit(lambda b, c: b + 1.5 * c)
+    jax.block_until_ready(triad(b, c))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(triad(b, c))
+        ts.append(time.perf_counter() - t0)
+    return 3 * 4 * n / float(np.min(ts))

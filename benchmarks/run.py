@@ -27,7 +27,7 @@ def main() -> None:
                          "BENCH_kcenter.json trajectory artifact)")
     ap.add_argument("--only", default=None,
                     help="comma list: tables,runtime,phi,perfcell,kernels,"
-                         "chunked,roofline")
+                         "streamedkernels,chunked,roofline")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -102,6 +102,11 @@ def main() -> None:
     if want("kernels"):
         from . import kernel_bench
         for name, us, derived in kernel_bench.run():
+            emit(name, us, derived)
+
+    if want("streamedkernels"):
+        from . import kernel_bench
+        for name, us, derived in kernel_bench.run_streamed(full=args.full):
             emit(name, us, derived)
 
     if want("chunked"):

@@ -43,6 +43,13 @@ safety net; the paper proves O(1/ε) iterations w.h.p. and observes ≤ 2 in
 practice). Both paths evaluate the condition, the sampling probabilities
 and every distance comparison in f32 with identical expressions, which is
 what makes the parity bitwise rather than approximate.
+
+``impl`` reaches every distance pass of both forms: the executors' filter
+rounds dispatch through ``engine.filter_tile_update`` /
+``engine.eim_filter_block``, so on backends with a native Pallas lowering
+(``impl="auto"`` on TPU, feature-detected GPU) Rounds 2–3 run as the fused
+one-VMEM-pass streamed tile (``kernels/fused_stream.py``) — bitwise the
+ref oracle, as the parity suite pins in interpret mode on CPU.
 """
 from __future__ import annotations
 

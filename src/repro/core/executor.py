@@ -95,16 +95,11 @@ _NEG = jnp.float32(-3.4e38)   # Select's invalid-slot sentinel (matches eim)
 _BIG = jnp.float32(3.4e38)
 
 
-@functools.partial(jax.jit, static_argnames=("rank", "impl", "chunk"))
-def _eim_filter_block(blk, c, d_blk, h_blk, top, *, rank, impl, chunk):
-    """One super-shard's share of EIM Rounds 2–3, fused: incremental-min
-    d(x, S_new) update + this block's contribution to Select's top-k.
-    ``c`` is the fixed-capacity S_new buffer (far-sentinel padded, so one
-    compilation serves every iteration)."""
-    _, d_new = ops.assign_nearest(blk, c, impl=impl, chunk=chunk)
-    d_blk = jnp.minimum(d_blk, d_new)
-    cand = jnp.where(h_blk, d_blk, _NEG)
-    return d_blk, engine.merge_top_k(top, cand, rank)
+# One super-shard's share of EIM Rounds 2–3, fused and jitted: the engine
+# owns the implementation (it dispatches between the jnp oracle and the
+# fused Pallas streamed tile — bitwise-identical); the historical name
+# stays for callers and tests.
+_eim_filter_block = engine.eim_filter_block
 
 
 @functools.partial(jax.jit, static_argnames=("rank",))
@@ -380,8 +375,22 @@ class SimExecutor(Executor):
         h_b = jnp.pad(jnp.asarray(h_mask), (0, pad),
                       constant_values=False).reshape(m, per)
         have_s = s_new is not None and len(s_new) > 0
+        use_pallas, _ = engine._resolve(impl)
         if have_s:
             c = jnp.asarray(np.asarray(s_new, np.float32))
+            if use_pallas:
+                # Fused tile path: vmap over a pallas_call is not a
+                # supported lowering everywhere, and the machine axis is a
+                # simulation artifact — flatten it. The per-row d-update
+                # is machine-oblivious and the global top-k values equal
+                # the merge of per-machine top-k's (value folds are
+                # blocking-invariant), so this is bitwise the vmapped ref.
+                d_flat, top = engine.filter_tile_update(
+                    blocked.reshape(m * per, -1), c, d_b.reshape(-1),
+                    h_b.reshape(-1), rank=rank, impl=impl, chunk=chunk)
+                d_s[:] = np.asarray(d_flat[:n])
+                top = engine.merge_top_k(engine.top_k_init(rank), top, rank)
+                return d_s, _pivot_from_top(top, rank)
 
             def update(pts, dvec):
                 _, dn = ops.assign_nearest(pts, c, impl=impl, chunk=chunk)
@@ -635,11 +644,11 @@ class MeshExecutor(Executor):
                                out_specs=(pspec, pspec),
                                check_replication=False)
             def step(pts, d_blk, h_blk, c):
-                _, dn = ops.assign_nearest(pts, c, impl=impl, chunk=chunk)
-                d_blk = jnp.minimum(d_blk, dn)
-                cand = jnp.where(h_blk, d_blk, _NEG)
-                r = min(rank, cand.shape[0])
-                return d_blk, jax.lax.top_k(cand, r)[0][None]
+                # Per-shard fused filter tile (engine dispatches the
+                # Pallas streamed kernel vs the jnp oracle — bitwise).
+                d_blk, tops = engine.filter_tile_update(
+                    pts, c, d_blk, h_blk, rank=rank, impl=impl, chunk=chunk)
+                return d_blk, tops[None]
 
             self._step_cache[key] = jax.jit(step)
         return self._step_cache[key]

@@ -38,6 +38,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import fused_stream
 from . import ref
 from .assign import DEFAULT_BM as _A_BM
 from .assign import DEFAULT_BN as _A_BN
@@ -60,19 +61,62 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+@functools.lru_cache(maxsize=None)
+def _pallas_native() -> bool:
+    """Can ``pl.pallas_call`` lower *natively* on the default backend?
+
+    TPU always lowers (Mosaic). On GPU the Triton lowering exists only on
+    CUDA jaxlibs of sufficient vintage — keying on the backend *name*
+    alone (the old ``_on_tpu`` test) both under-enables (GPU never got the
+    kernels) and would over-enable (ROCm / old jaxlibs raise at lowering
+    time) — so GPU is feature-detected by compiling one trivial kernel.
+    Anything else (CPU) has no native lowering; interpret mode remains
+    available via ``impl="pallas"``. Cached per process — backend choice
+    is fixed at jax init.
+    """
+    backend = jax.default_backend()
+    if backend == "tpu":
+        return True
+    if backend == "gpu":
+        try:
+            from jax.experimental import pallas as pl
+
+            def _probe(x_ref, o_ref):
+                o_ref[...] = x_ref[...] + 1.0
+
+            out = pl.pallas_call(
+                _probe,
+                out_shape=jax.ShapeDtypeStruct((8, 128), jnp.float32),
+            )(jnp.zeros((8, 128), jnp.float32))
+            jax.block_until_ready(out)
+            return True
+        except Exception:
+            return False
+    return False
+
+
 def _resolve(impl: str):
-    """-> (use_pallas, interpret)"""
+    """-> (use_pallas, interpret)
+
+    ``auto`` uses the Pallas kernels wherever they lower natively (TPU
+    Mosaic, feature-detected GPU Triton) and the jnp reference elsewhere —
+    never interpret mode, which is a correctness tool, not a fast path.
+    ``pallas`` forces the kernels, gracefully falling back to interpret
+    mode on backends without a native lowering (the form the CPU CI parity
+    tests exercise). ``ref`` forces the oracle.
+    """
     if impl == "auto":
-        return (True, False) if _on_tpu() else (False, False)
+        return (True, False) if _pallas_native() else (False, False)
     if impl == "pallas":
-        return True, not _on_tpu()
+        return True, not _pallas_native()
     if impl == "ref":
         return False, False
     raise ValueError(f"unknown impl {impl!r}")
 
 
 def resolve_chunk(n: int, m: int, d: int, *, chunk: int | None = None,
-                  memory_budget: int | None = None) -> int | None:
+                  memory_budget: int | None = None,
+                  sublane: int | None = None) -> int | None:
     """Row-chunk size for an ``(n, d) × (m, d)`` distance op.
 
     Explicit ``chunk`` wins (clipped to ``[1, n]``; ``chunk >= n`` means one
@@ -80,6 +124,14 @@ def resolve_chunk(n: int, m: int, d: int, *, chunk: int | None = None,
     ``memory_budget`` in bytes is solved against the f32 working-set model
     ``4·chunk·(m + d) + 4·m·d`` — the streamed tile plus resident centers.
     Returns None when neither is given (legacy un-chunked path).
+
+    ``sublane`` (Pallas callers pass 8, the f32 sublane minimum) keeps a
+    *budget-derived* chunk honest against the kernels' block rounding: the
+    solved rows are floored to a sublane multiple — never rounded up past
+    what the budget covers — and a budget that cannot hold even one
+    ``sublane``-row block raises instead of silently overshooting.
+    Explicit ``chunk`` is a shape request, not a budget, and is returned
+    unrounded (``_pallas_bn`` may round it up).
     """
     if chunk is not None:
         if chunk < 1:
@@ -88,6 +140,17 @@ def resolve_chunk(n: int, m: int, d: int, *, chunk: int | None = None,
     if memory_budget is not None:
         avail = memory_budget - 4 * m * d
         rows = avail // (4 * (m + d)) if avail > 0 else 0
+        if sublane is not None and sublane > 1:
+            # Floor to the sublane multiple the kernel will actually run:
+            # rounding *up* here could exceed the stated budget (rows is
+            # the largest count the model covers).
+            rows = (rows // sublane) * sublane
+            if rows < 1:
+                raise ValueError(
+                    f"memory_budget={memory_budget} cannot hold one "
+                    f"{sublane}-row sublane block "
+                    f"({4 * m * d} bytes of centers + "
+                    f"{4 * sublane * (m + d)} bytes/block)")
         if rows < 1:
             raise ValueError(
                 f"memory_budget={memory_budget} cannot hold even one row "
@@ -113,7 +176,13 @@ def _blocks(a: jnp.ndarray, chunk: int, fill: float):
 
 def _pallas_bn(bn: int, n: int, chunk: int | None) -> int:
     """Row block for the Pallas grid: ≤ bn, ≤ chunk (rounded up to the 8-row
-    sublane minimum), never below 8."""
+    sublane minimum), never below 8.
+
+    The round-*up* is only safe because budget-derived chunks arrive
+    pre-floored to a sublane multiple (``resolve_chunk(..., sublane=8)``),
+    so it can engage only for explicit user chunks — a shape request, not
+    a byte budget (tests/test_engine.py pins the budget-honesty side).
+    """
     bn_ = min(bn, max(8, n))
     if chunk is not None:
         bn_ = min(bn_, max(8, -(-chunk // 8) * 8))
@@ -145,7 +214,8 @@ def pairwise_dist2(x, c, *, impl: str = "auto", chunk: int | None = None,
     n, m = x.shape[0], c.shape[0]
     d = x.shape[1]
     use_pallas, interpret = _resolve(impl)
-    chunk = resolve_chunk(n, m, d, chunk=chunk, memory_budget=memory_budget)
+    chunk = resolve_chunk(n, m, d, chunk=chunk, memory_budget=memory_budget,
+                          sublane=8 if use_pallas else None)
     if use_pallas:
         bn_ = _pallas_bn(bn, n, chunk)
         bm_ = min(bm, max(8, m))
@@ -170,7 +240,8 @@ def fused_min_argmax(x, c, min_d2, *, impl: str = "auto",
     """Fused Gonzalez step: (new_min_d2 (n,), far_val (), far_idx () i32)."""
     n, d = x.shape
     use_pallas, interpret = _resolve(impl)
-    chunk = resolve_chunk(n, 1, d, chunk=chunk, memory_budget=memory_budget)
+    chunk = resolve_chunk(n, 1, d, chunk=chunk, memory_budget=memory_budget,
+                          sublane=8 if use_pallas else None)
     if use_pallas:
         bn_ = _pallas_bn(bn, n, chunk)
         xp, _ = _pad_rows(x, bn_, 0.0)
@@ -216,7 +287,8 @@ def assign_nearest(x, c, *, impl: str = "auto", chunk: int | None = None,
     n, m = x.shape[0], c.shape[0]
     d = x.shape[1]
     use_pallas, interpret = _resolve(impl)
-    chunk = resolve_chunk(n, m, d, chunk=chunk, memory_budget=memory_budget)
+    chunk = resolve_chunk(n, m, d, chunk=chunk, memory_budget=memory_budget,
+                          sublane=8 if use_pallas else None)
     if use_pallas:
         bn_ = _pallas_bn(bn, n, chunk)
         bm_ = min(bm, max(8, m))
@@ -253,7 +325,8 @@ def argmin_dist2_over_rows(x, c, *, impl: str = "auto",
     n, d = x.shape
     m = c.shape[0]
     use_pallas, _ = _resolve(impl)
-    chunk = resolve_chunk(n, m, d, chunk=chunk, memory_budget=memory_budget)
+    chunk = resolve_chunk(n, m, d, chunk=chunk, memory_budget=memory_budget,
+                          sublane=8 if use_pallas else None)
     if use_pallas or chunk is None or chunk >= n:
         idx, _ = assign_nearest(c, x, impl=impl)
         return idx
@@ -585,6 +658,91 @@ def _source_blocks(source, rows: int, prefetch: int | None):
     return source.blocks(rows)
 
 
+# -- fused Pallas tiles for the streamed folds (kernels/fused_stream.py) ----
+#
+# The fold loops below each have a Pallas branch: every block is padded to
+# ONE fixed ``ceil(rows/bn)·bn`` shape with validity carried as a kernel
+# *operand* (f32 0/1 mask), so a single compilation of the fused tile
+# serves the whole stream, ragged tail included — no recompile per tail
+# shape (tests/test_engine.py spies on the operand shapes as the
+# compile-count proxy). The ref branches are the bitwise oracle; the tile
+# kernels reproduce their bits exactly (rows-only tiling — see the
+# fused_stream module docstring for why that makes bitwise possible).
+
+def _stream_bn(rows: int, chunk: int | None) -> int:
+    """Row tile for the fused streamed kernels: ≤ the kernel default,
+    ≤ chunk (the per-pass VMEM knob, floored to the 8-row sublane so an
+    explicit chunk is never exceeded), never below 8, and never a
+    whole-grid overshoot of a small block."""
+    bn = min(fused_stream.DEFAULT_BN, max(8, -(-rows // 8) * 8))
+    if chunk is not None:
+        bn = min(bn, max(8, (chunk // 8) * 8))
+    return bn
+
+
+def _padded_rows(rows: int, bn: int) -> int:
+    return -(-rows // bn) * bn
+
+
+def _filter_update_tiles(blk, c, d_blk, h_blk, rank: int, chunk: int | None,
+                         interpret: bool):
+    """Traced helper: pad one block to the tile grid and run the fused
+    filter kernel. Returns ``(d_new (rows,), tops (tiles, rank))`` — the
+    d(x,S) min-update for every input row plus each tile's descending
+    top-``rank`` of the H-masked candidates."""
+    rows = blk.shape[0]
+    bn = _stream_bn(rows, chunk)
+    rows_p = _padded_rows(rows, bn)
+    pad = rows_p - rows
+    blk_p = jnp.pad(blk, ((0, pad), (0, 0)))
+    # Padded lanes: d_s at +BIG (their update is sliced off), H=0 so they
+    # never enter the top-k.
+    d_p = jnp.pad(d_blk, (0, pad), constant_values=_BIG)
+    h_p = jnp.pad(h_blk, (0, pad)).astype(jnp.float32)
+    d_new, tops = fused_stream.fused_filter_blocks(
+        blk_p, c, d_p, h_p, rank=rank, bn=bn, interpret=interpret)
+    return d_new[:rows], tops
+
+
+def filter_tile_update(blk, c, d_blk, h_blk, *, rank: int,
+                       impl: str = "auto", chunk: int | None = None):
+    """One machine-block's share of EIM Rounds 2–3 (traceable, unjitted —
+    the executors' shard_map/vmap programs and ``eim_filter_block`` wrap
+    it): ``d_new = min(d_blk, d(blk, c)²)`` plus the block's descending
+    top-``min(rank, rows)`` of ``where(h_blk, d_new, -inf)``.
+
+    The ref branch is the oracle; the Pallas branch fuses the whole update
+    into the streamed tile kernel and reduces the per-tile tops (top-k
+    *values* are blocking-invariant, so the results are bitwise equal).
+    """
+    use_pallas, interpret = _resolve(impl)
+    r = min(rank, d_blk.shape[0])
+    if use_pallas:
+        d_new, tops = _filter_update_tiles(blk, c, d_blk, h_blk, rank,
+                                           chunk, interpret)
+        return d_new, jax.lax.top_k(tops.reshape(-1), r)[0]
+    _, dn = assign_nearest(blk, c, impl=impl, chunk=chunk)
+    d_new = jnp.minimum(d_blk, dn)
+    cand = jnp.where(h_blk, d_new, _NEG)
+    return d_new, jax.lax.top_k(cand, r)[0]
+
+
+@functools.partial(jax.jit, static_argnames=("rank", "impl", "chunk"))
+def eim_filter_block(blk, c, d_blk, h_blk, top, *, rank: int, impl: str,
+                     chunk: int | None = None):
+    """One super-shard's share of EIM Rounds 2–3, fused and jitted:
+    incremental-min d(x, S_new) update + this block's contribution to
+    Select's top-k merged into the running ``top`` carry. ``c`` is the
+    fixed-capacity S_new buffer (far-sentinel padded) and callers pad
+    ``blk``/``d_blk``/``h_blk`` to one fixed ``rows`` shape, so one
+    compilation serves every iteration and every block — ragged tail
+    included. The executors' streamed filter rounds call this; ``impl``
+    picks the fused Pallas tile vs the jnp oracle (bitwise-identical)."""
+    d_blk, tops = filter_tile_update(blk, c, d_blk, h_blk, rank=rank,
+                                     impl=impl, chunk=chunk)
+    return d_blk, merge_top_k(top, tops, rank)
+
+
 def fold_min_d2(source, c, *, impl: str = "auto", chunk: int | None = None,
                 block_rows: int | None = None,
                 memory_budget: int | None = None,
@@ -599,6 +757,26 @@ def fold_min_d2(source, c, *, impl: str = "auto", chunk: int | None = None,
     rows = resolve_block_rows(source.n, source.d, block_rows=block_rows,
                               memory_budget=memory_budget,
                               prefetch=prefetch or DEFAULT_PREFETCH)
+    use_pallas, interpret = _resolve(impl)
+    if use_pallas:
+        # Fused tile path: the filter kernel with rank=1 and a +BIG d_s
+        # carry IS the per-tile max of min-distances; the validity mask
+        # gates padded lanes, so one compilation serves the ragged tail.
+        bn = _stream_bn(rows, chunk)
+        rows_p = _padded_rows(rows, bn)
+        d_big = jnp.full((rows_p,), _BIG)
+        best = None
+        for blk in _source_blocks(source, rows, prefetch):
+            nb = blk.shape[0]
+            blk_p = jnp.pad(blk, ((0, rows_p - nb), (0, 0)))
+            vm = (jnp.arange(rows_p) < nb).astype(jnp.float32)
+            _, tops = fused_stream.fused_filter_blocks(
+                blk_p, c, d_big, vm, rank=1, bn=bn, interpret=interpret)
+            bmax = jnp.max(tops)
+            best = bmax if best is None else jnp.maximum(best, bmax)
+        if best is None:
+            return jnp.float32(0.0)
+        return best
     best = None
     for blk in _source_blocks(source, rows, prefetch):
         _, d2 = assign_nearest(blk, c, impl=impl, chunk=chunk)
@@ -624,6 +802,19 @@ def assign_nearest_source(source, c, *, impl: str = "auto",
     rows = resolve_block_rows(source.n, source.d, block_rows=block_rows,
                               memory_budget=memory_budget,
                               prefetch=prefetch or DEFAULT_PREFETCH)
+    use_pallas, interpret = _resolve(impl)
+    if use_pallas:
+        bn = _stream_bn(rows, chunk)
+        rows_p = _padded_rows(rows, bn)
+        for blk in _source_blocks(source, rows, prefetch):
+            nb = blk.shape[0]
+            blk_p = jnp.pad(blk, ((0, rows_p - nb), (0, 0)))
+            # No mask: padded rows' outputs are sliced off, and the
+            # fixed rows_p shape keeps the stream at one compilation.
+            idx, d2 = fused_stream.fused_assign_blocks(
+                blk_p, c, bn=bn, interpret=interpret)
+            yield idx[:nb], d2[:nb]
+        return
     for blk in _source_blocks(source, rows, prefetch):
         yield assign_nearest(blk, c, impl=impl, chunk=chunk)
 
@@ -645,9 +836,24 @@ def argmin_dist2_over_source(source, c, *, impl: str = "auto",
     rows = resolve_block_rows(source.n, source.d, block_rows=block_rows,
                               memory_budget=memory_budget,
                               prefetch=prefetch or DEFAULT_PREFETCH)
+    use_pallas, interpret = _resolve(impl)
     best_d = jnp.full((m,), _BIG)
     best_i = jnp.zeros((m,), jnp.int32)
     off = 0
+    if use_pallas:
+        bn = _stream_bn(rows, chunk)
+        rows_p = _padded_rows(rows, bn)
+        for blk in _source_blocks(source, rows, prefetch):
+            nb = blk.shape[0]
+            blk_p = jnp.pad(blk, ((0, rows_p - nb), (0, 0)))
+            vm = (jnp.arange(rows_p) < nb).astype(jnp.float32)
+            bd, bi = fused_stream.fused_argmin_blocks(
+                blk_p, c, vm, bn=bn, interpret=interpret)
+            take = bd < best_d
+            best_d = jnp.where(take, bd, best_d)
+            best_i = jnp.where(take, bi + off, best_i)
+            off += nb
+        return best_i
     for blk in _source_blocks(source, rows, prefetch):
         bi, bd = assign_nearest(c, blk, impl=impl, chunk=chunk)
         take = bd < best_d

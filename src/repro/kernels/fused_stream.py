@@ -1,0 +1,259 @@
+"""Pallas TPU kernels: fused tiles for the streamed source × executor folds.
+
+The streamed folds (``engine.fold_min_d2`` / ``assign_nearest_source`` /
+``argmin_dist2_over_source`` and the executors' EIM filter round) are the
+hot per-pass loops of the paper's MapReduce rounds: every super-shard is
+read once, distance-reduced against a small resident center set, and folded
+into O(m)- or O(rank)-sized state. On the reference path each block costs
+several XLA dispatches (distances, min, where, top-k) with the ``(rows, m)``
+distance block materialized between them. The kernels here fuse one block's
+whole share of the round into a single ``pl.pallas_call``: each ``(bn, d)``
+row tile is read from HBM exactly once, the MXU computes the
+``|x|²+|c|²−2·x·cᵀ`` tile, and the min-reduce / carried d(x,S) update /
+per-tile top-k all happen while the tile is VMEM-resident — the
+bandwidth-bound one-pass-per-round claim of §3/§5.1, on the out-of-core
+path and not just the legacy in-memory one.
+
+Design contract (shared by all three kernels; tests/test_engine.py pins it
+bitwise against the ref oracle in interpret mode):
+
+* **Rows-only tiling.** The grid walks row tiles; the ``(m, d)`` center set
+  stays whole in VMEM. Per-row arithmetic is therefore identical to the
+  un-tiled reference expression — row-blocking a matmul's major operand
+  does not change per-element accumulation order — which is what makes the
+  Pallas path bitwise-equal to ref, not merely allclose. VMEM per step is
+  ``4·(bn·d + m·d + bn·m)`` bytes plus O(bn) vectors; the caller bounds
+  ``bn`` via ``chunk`` (engine._stream_bn).
+* **Masked ragged tails.** Callers pad every block to one fixed
+  ``rows_p = ceil(rows/bn)·bn`` shape and pass validity as an *operand*
+  (f32 0/1 — bool has no native TPU tile layout), so one compilation
+  serves every block of a stream, tail included; padded lanes carry the
+  ``-3.4e38`` sentinel through the reductions and can never win.
+* **First-occurrence arg-semantics.** In-tile arg-reductions use
+  ``jnp.argmin``/``argmax`` (first occurrence); cross-tile merges use
+  strict ``<``/``>`` so the earliest tile keeps ties — composing to exactly
+  ``jnp.argmin``/``argmax`` over the whole stream.
+* **Unrolled top-k.** ``lax.top_k``/``sort`` are not relied on inside the
+  tile; the per-tile top-``rank`` is ``rank`` unrolled max+argmax
+  extractions (rank is a static, O(log n)-sized Select parameter). The
+  extracted multiset equals ``lax.top_k``'s, so the caller's
+  ``merge_top_k`` fold is bitwise the monolithic top-k.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+# Default row-tile for the streamed kernels: 512 rows keeps the
+# (bn·d + m·d + bn·m) f32 working set comfortably under VMEM for the
+# d, m regimes the folds see (centers ≲ a few k rows).
+DEFAULT_BN = 512
+
+# numpy scalars, NOT jnp: a jnp scalar is a device array, which a Pallas
+# kernel body would capture as a constant instead of inlining as a literal.
+_BIG = np.float32(3.4e38)
+_NEG = np.float32(-3.4e38)
+
+
+def _dist2_tile(x, c):
+    """(bn, d) × (m, d) -> (bn, m) squared distances, the exact expression
+    ``ref.pairwise_dist2`` evaluates (clamped MXU decomposition) — the
+    bitwise contract of the whole module hangs on this being the same
+    per-element arithmetic as the oracle."""
+    xn = jnp.sum(x * x, axis=-1, keepdims=True)           # (bn, 1)
+    cn = jnp.sum(c * c, axis=-1, keepdims=True)           # (m, 1)
+    prod = jax.lax.dot_general(
+        x, c, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                                     # (bn, m)  MXU
+    return jnp.maximum(xn + cn.T - 2.0 * prod, 0.0)
+
+
+def _top_rank(cand, rank: int):
+    """Per-tile descending top-``rank`` by unrolled max extraction.
+
+    Each step removes exactly one lane (the first-occurrence argmax), so
+    duplicates keep their multiplicity and the value multiset equals
+    ``lax.top_k(cand, rank)`` — with ``rank > bn`` the surplus slots fill
+    with the ``_NEG`` sentinel, exactly like ``engine.top_k_init``.
+    """
+    lanes = jax.lax.iota(jnp.int32, cand.shape[0])
+    out = []
+    for _ in range(rank):
+        i = jnp.argmax(cand).astype(jnp.int32)
+        out.append(cand[i])
+        cand = jnp.where(lanes == i, _NEG, cand)
+    return jnp.stack(out)
+
+
+def _filter_kernel(x_ref, c_ref, ds_ref, hm_ref, newds_ref, top_ref, *,
+                   rank: int):
+    x = x_ref[...].astype(jnp.float32)                    # (bn, d)
+    c = c_ref[...].astype(jnp.float32)                    # (m, d)
+    d2 = _dist2_tile(x, c)
+    new_ds = jnp.minimum(ds_ref[...], jnp.min(d2, axis=-1))
+    newds_ref[...] = new_ds
+    # hm gates top-k candidacy only (EIM's H set ∧ tail validity); the
+    # d(x,S) update above runs on every lane — callers slice padding off.
+    cand = jnp.where(hm_ref[...] > 0, new_ds, _NEG)
+    top_ref[...] = _top_rank(cand, rank)[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("rank", "bn", "interpret"))
+def fused_filter_blocks(
+    x: jnp.ndarray,
+    c: jnp.ndarray,
+    d_s: jnp.ndarray,
+    hm: jnp.ndarray,
+    *,
+    rank: int,
+    bn: int = DEFAULT_BN,
+    interpret: bool = False,
+):
+    """EIM Rounds 2–3 block tile: one fused pass computing
+    ``new_d_s = min(d_s, d(x, c)²)`` and each tile's descending
+    top-``rank`` of ``where(hm > 0, new_d_s, -inf)``.
+
+    ``x (n, d)`` with ``n % bn == 0`` (callers pad), ``d_s (n,)`` f32,
+    ``hm (n,)`` f32 0/1. Returns ``(new_d_s (n,), tops (n/bn, rank))``;
+    the caller merges tile tops with ``engine.merge_top_k`` (top-k values
+    are blocking-invariant). With ``rank=1`` and ``d_s = +BIG`` this is
+    the covering-radius fold's block max of min-distances.
+    """
+    n, d = x.shape
+    m = c.shape[0]
+    assert n % bn == 0, (n, bn)
+    nb = n // bn
+    return pl.pallas_call(
+        functools.partial(_filter_kernel, rank=rank),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((m, d), lambda i: (0, 0)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((1, rank), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((nb, rank), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, c, d_s, hm)
+
+
+def _assign_kernel(x_ref, c_ref, idx_ref, d2_ref):
+    d2 = _dist2_tile(x_ref[...].astype(jnp.float32),
+                     c_ref[...].astype(jnp.float32))
+    d2_ref[...] = jnp.min(d2, axis=-1)
+    idx_ref[...] = jnp.argmin(d2, axis=-1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+def fused_assign_blocks(
+    x: jnp.ndarray,
+    c: jnp.ndarray,
+    *,
+    bn: int = DEFAULT_BN,
+    interpret: bool = False,
+):
+    """Nearest-center tile for the streamed assignment fold: returns
+    ``(idx (n,) int32, d2 (n,) f32)``. ``n % bn == 0`` (callers pad and
+    slice the tail back off — no mask is needed because padded rows'
+    outputs are simply discarded). Unlike ``assign.py`` this keeps the
+    center set un-tiled, so in-tile ``argmin`` is the whole first-
+    occurrence answer and values are bitwise the ref oracle's.
+    """
+    n, d = x.shape
+    m = c.shape[0]
+    assert n % bn == 0, (n, bn)
+    idx, d2 = pl.pallas_call(
+        _assign_kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((m, d), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, c)
+    return idx, d2
+
+
+def _argmin_rows_kernel(x_ref, c_ref, vm_ref, bestd_ref, besti_ref):
+    i = pl.program_id(0)
+    bn = x_ref.shape[0]
+    d2 = _dist2_tile(x_ref[...].astype(jnp.float32),
+                     c_ref[...].astype(jnp.float32))      # (bn, m)
+    # Invalid (padded) rows go to the +BIG sentinel so they can never be
+    # any center's nearest row (real distances are finite and smaller).
+    d2 = jnp.where(vm_ref[...][:, None] > 0, d2, _BIG)
+    loc_d = jnp.min(d2, axis=0)                           # (m,)
+    loc_i = jnp.argmin(d2, axis=0).astype(jnp.int32) + i * bn
+
+    @pl.when(i == 0)
+    def _init():
+        bestd_ref[...] = loc_d
+        besti_ref[...] = loc_i
+
+    @pl.when(i > 0)
+    def _update():
+        prev_d = bestd_ref[...]
+        # Strict < keeps the earliest tile on ties — composing with the
+        # in-tile first-occurrence argmin to global jnp.argmin semantics.
+        take = loc_d < prev_d
+        bestd_ref[...] = jnp.where(take, loc_d, prev_d)
+        besti_ref[...] = jnp.where(take, loc_i, besti_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+def fused_argmin_blocks(
+    x: jnp.ndarray,
+    c: jnp.ndarray,
+    vm: jnp.ndarray,
+    *,
+    bn: int = DEFAULT_BN,
+    interpret: bool = False,
+):
+    """Per-center argmin over a block's rows: for each center row of
+    ``c (m, d)``, the (min d², first-occurrence argmin row) over the valid
+    rows of ``x (n, d)``. ``vm (n,)`` is the f32 0/1 row-validity mask;
+    ``n % bn == 0``. Returns ``(best_d (m,), best_i (m,) int32)`` — the
+    running (m,)-carry accumulates across tiles in the revisited output
+    block (sequential TPU grid), so the block never materializes (n, m).
+    """
+    n, d = x.shape
+    m = c.shape[0]
+    assert n % bn == 0, (n, bn)
+    best_d, best_i = pl.pallas_call(
+        _argmin_rows_kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((m, d), lambda i: (0, 0)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((m,), lambda i: (0,)),
+            pl.BlockSpec((m,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m,), jnp.float32),
+            jax.ShapeDtypeStruct((m,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(x, c, vm)
+    return best_d, best_i

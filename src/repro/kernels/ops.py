@@ -46,6 +46,12 @@ fold_min_d2 = engine.fold_min_d2
 assign_nearest_source = engine.assign_nearest_source
 argmin_dist2_over_source = engine.argmin_dist2_over_source
 
+# Fused streamed filter primitives (engine.py over kernels/fused_stream.py):
+# the executors' EIM Rounds 2–3 block step — d(x,S) min-update + per-block
+# top-k in one pass, Pallas tile or jnp oracle per ``impl`` (bitwise-equal).
+filter_tile_update = engine.filter_tile_update
+eim_filter_block = engine.eim_filter_block
+
 # Counter-based per-row sampling + streamed top-k (engine.py): the
 # blocking-invariant Bernoulli draws and the cross-block pivot Select that
 # the out-of-core EIM sampler is built on.

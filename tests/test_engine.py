@@ -207,3 +207,200 @@ def test_resolve_block_rows_model():
         engine.resolve_block_rows(100, 1024, memory_budget=64)
     with pytest.raises(ValueError):
         engine.resolve_block_rows(100, 8, memory_budget=1 << 20, prefetch=0)
+
+
+# ---------------------------------------------------------------------------
+# fused streamed tiles (kernels/fused_stream.py via engine dispatch):
+# impl="pallas" (interpret on CPU) must be BITWISE the ref oracle — the
+# rows-only tiling contract, not an allclose approximation.
+# ---------------------------------------------------------------------------
+
+STREAM_ROWS = [1, 8, 77, 256, 999, 1000, 4096]   # ragged tails, sub-sublane,
+                                                 # exact tiles, multi-tile
+
+
+@pytest.mark.parametrize("rows", STREAM_ROWS)
+def test_fold_min_d2_pallas_bitwise(rows):
+    from repro.data import HostSource
+    x, c, _ = _data(seed=20)
+    r0 = ops.fold_min_d2(HostSource(np.asarray(x)), c, impl="ref",
+                         block_rows=rows)
+    r1 = ops.fold_min_d2(HostSource(np.asarray(x)), c, impl="pallas",
+                         block_rows=rows)
+    assert float(r0) == float(r1)
+
+
+@pytest.mark.parametrize("rows", STREAM_ROWS)
+def test_assign_nearest_source_pallas_bitwise(rows):
+    from repro.data import HostSource
+    x, c, _ = _data(seed=21)
+
+    def cat(impl):
+        parts = list(ops.assign_nearest_source(
+            HostSource(np.asarray(x)), c, impl=impl, block_rows=rows))
+        return (np.concatenate([np.asarray(i) for i, _ in parts]),
+                np.concatenate([np.asarray(d) for _, d in parts]))
+
+    i0, d0 = cat("ref")
+    i1, d1 = cat("pallas")
+    np.testing.assert_array_equal(i0, i1)
+    np.testing.assert_array_equal(d0, d1)
+
+
+@pytest.mark.parametrize("rows", STREAM_ROWS)
+def test_argmin_dist2_over_source_pallas_bitwise(rows):
+    from repro.data import HostSource
+    x, c, _ = _data(seed=22)
+    i0 = ops.argmin_dist2_over_source(HostSource(np.asarray(x)), c,
+                                      impl="ref", block_rows=rows)
+    i1 = ops.argmin_dist2_over_source(HostSource(np.asarray(x)), c,
+                                      impl="pallas", block_rows=rows)
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+
+
+def test_argmin_source_pallas_cross_block_tie_first():
+    # The nearest row to each center is duplicated in a *later* block:
+    # first-occurrence must win, exactly like jnp.argmin over the stream.
+    from repro.data import HostSource
+    rng = np.random.default_rng(23)
+    x = rng.normal(size=(40, 3)).astype(np.float32)
+    x[31] = x[7]          # block 2 duplicates block 0's row 7
+    c = (x[7] + 1e-3).reshape(1, 3).astype(np.float32)
+    for impl in ("ref", "pallas"):
+        i = ops.argmin_dist2_over_source(HostSource(x), c, impl=impl,
+                                         block_rows=16)
+        assert int(np.asarray(i)[0]) == 7, impl
+
+
+@pytest.mark.parametrize("chunk", [None, 8, 100, 999])
+@pytest.mark.parametrize("rank", [1, 5, 64])
+def test_filter_tile_update_pallas_bitwise(rank, chunk):
+    x, c, md = _data(seed=24)
+    h = np.asarray(md) > 10.0          # a nontrivial H mask
+    d0, t0 = engine.filter_tile_update(x, c, md, jnp.asarray(h),
+                                       rank=rank, impl="ref", chunk=chunk)
+    d1, t1 = engine.filter_tile_update(x, c, md, jnp.asarray(h),
+                                       rank=rank, impl="pallas", chunk=chunk)
+    np.testing.assert_array_equal(np.asarray(d0), np.asarray(d1))
+    np.testing.assert_array_equal(np.asarray(t0), np.asarray(t1))
+
+
+def test_filter_tile_update_rank_exceeds_rows():
+    # rank > rows: surplus slots fill with the -BIG sentinel on both paths.
+    x, c, md = _data(n=5, seed=25)
+    h = jnp.ones((5,), bool)
+    d0, t0 = engine.filter_tile_update(x, c, md, h, rank=200, impl="ref")
+    d1, t1 = engine.filter_tile_update(x, c, md, h, rank=200, impl="pallas")
+    np.testing.assert_array_equal(np.asarray(d0), np.asarray(d1))
+    np.testing.assert_array_equal(np.asarray(t0), np.asarray(t1))
+
+
+@pytest.mark.parametrize("chunk", [None, 64])
+def test_eim_filter_block_pallas_bitwise(chunk):
+    x, c, md = _data(seed=26)
+    h = jnp.asarray(np.asarray(md) > 8.0)
+    rank = 7
+    top = engine.top_k_init(rank)
+    outs = {}
+    for impl in ("ref", "pallas"):
+        d1, t1 = engine.eim_filter_block(x, c, md, h, top, rank=rank,
+                                         impl=impl, chunk=chunk)
+        outs[impl] = (np.asarray(d1), np.asarray(t1))
+    np.testing.assert_array_equal(outs["ref"][0], outs["pallas"][0])
+    np.testing.assert_array_equal(outs["ref"][1], outs["pallas"][1])
+
+
+@pytest.mark.parametrize("rows", [256, 999])
+def test_mrg_eim_host_stream_pallas_bitwise(rows):
+    import jax
+    from repro.core import HostStreamExecutor, eim, mrg
+    from repro.data import HostSource
+    rng = np.random.default_rng(27)
+    x = rng.normal(size=(3000, 4)).astype(np.float32)
+    ex = HostStreamExecutor(block_rows=rows)
+    m0 = mrg(HostSource(x), 6, executor=ex, impl="ref")
+    m1 = mrg(HostSource(x), 6, executor=ex, impl="pallas")
+    np.testing.assert_array_equal(np.asarray(m0.centers),
+                                  np.asarray(m1.centers))
+    assert float(m0.radius2) == float(m1.radius2)
+    e0 = eim(HostSource(x), 5, jax.random.PRNGKey(0), executor=ex,
+             impl="ref")
+    e1 = eim(HostSource(x), 5, jax.random.PRNGKey(0), executor=ex,
+             impl="pallas")
+    np.testing.assert_array_equal(np.asarray(e0.centers),
+                                  np.asarray(e1.centers))
+    assert float(e0.radius2) == float(e1.radius2)
+
+
+def test_sim_executor_filter_round_pallas_bitwise():
+    import jax
+    from repro.core import SimExecutor, eim
+    rng = np.random.default_rng(28)
+    x = rng.normal(size=(2000, 4)).astype(np.float32)
+    ex = SimExecutor(m=7)
+    e0 = eim(jnp.asarray(x), 5, jax.random.PRNGKey(1), executor=ex,
+             impl="ref")
+    e1 = eim(jnp.asarray(x), 5, jax.random.PRNGKey(1), executor=ex,
+             impl="pallas")
+    np.testing.assert_array_equal(np.asarray(e0.centers),
+                                  np.asarray(e1.centers))
+    assert float(e0.radius2) == float(e1.radius2)
+
+
+def test_fused_stream_one_compilation_across_ragged_tails(monkeypatch):
+    # One fixed padded shape — and thus one compilation — must serve every
+    # block of a stream, ragged tail included (the R004 contract).
+    from repro.data import HostSource
+    from repro.kernels import fused_stream
+    x, c, _ = _data(seed=29)             # n=1000, blocks of 256 -> tail 232
+    real = fused_stream.fused_filter_blocks
+    if hasattr(real, "clear_cache"):
+        real.clear_cache()
+    seen = []
+
+    def spy(xp, cp, dp, hp, **kw):
+        seen.append((xp.shape, dp.shape, hp.shape,
+                     kw["rank"], kw["bn"], kw["interpret"]))
+        return real(xp, cp, dp, hp, **kw)
+
+    monkeypatch.setattr(engine.fused_stream, "fused_filter_blocks", spy)
+    ops.fold_min_d2(HostSource(np.asarray(x)), c, impl="pallas",
+                    block_rows=256)
+    assert len(seen) == 4                 # 256+256+256+232
+    assert len(set(seen)) == 1            # ...all padded to ONE signature
+    if hasattr(real, "_cache_size"):
+        assert real._cache_size() == 1    # one XLA compilation total
+
+
+def test_resolve_chunk_sublane_budget_honesty():
+    # Budget-derived chunks are floored to the sublane multiple the kernel
+    # will actually run, so the stated budget is never exceeded.
+    n, m, d = 10 ** 6, 100, 32
+    budget = 256 * 1024
+    chunk = engine.resolve_chunk(n, m, d, memory_budget=budget, sublane=8)
+    assert chunk % 8 == 0
+    assert 4 * chunk * (m + d) + 4 * m * d <= budget
+    # ...and flooring never loses more than one sublane block of rows.
+    assert 4 * (chunk + 8) * (m + d) + 4 * m * d > budget
+    # A budget that can't hold one sublane block raises rather than
+    # silently overshooting.
+    tiny = 4 * m * d + 4 * 7 * (m + d)    # covers 7 rows < one block
+    with pytest.raises(ValueError, match="sublane"):
+        engine.resolve_chunk(n, m, d, memory_budget=tiny, sublane=8)
+    # Explicit chunk is a shape request: returned unrounded.
+    assert engine.resolve_chunk(n, m, d, chunk=13, sublane=8) == 13
+
+
+def test_resolve_impl_feature_detection(monkeypatch):
+    # On the CPU CI backend there is no native lowering: auto falls back
+    # to ref, and forcing pallas engages interpret mode.
+    assert not engine._pallas_native()    # CPU test environment
+    assert engine._resolve("ref") == (False, False)
+    assert engine._resolve("auto") == (False, False)
+    assert engine._resolve("pallas") == (True, True)
+    with pytest.raises(ValueError):
+        engine._resolve("mosaic")
+    # With a native lowering available, auto uses Pallas natively.
+    monkeypatch.setattr(engine, "_pallas_native", lambda: True)
+    assert engine._resolve("auto") == (True, False)
+    assert engine._resolve("pallas") == (True, False)

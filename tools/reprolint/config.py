@@ -83,9 +83,15 @@ RAGGED_STREAMS: Tuple[str, ...] = (
 )
 
 # Callees known to be jitted but defined in another module (module-local
-# jit decorations/wrappings are auto-detected by the rule).
+# jit decorations/wrappings are auto-detected by the rule). The fused
+# streamed-tile entry points (kernels/fused_stream.py + engine.py) are
+# jitted on (rank/bn/interpret)-static signatures: feeding them raw ragged
+# tail blocks would recompile per tail shape, so R004 demands the
+# pad-to-fixed-rows dance wherever a ragged stream reaches them.
 JITTED_CALLEES: Tuple[str, ...] = (
     "bernoulli_rows_block", "bernoulli_rows_at_block",
+    "eim_filter_block", "_eim_filter_block",
+    "fused_filter_blocks", "fused_assign_blocks", "fused_argmin_blocks",
 )
 
 # Call names that sanitize a ragged block (pad-to-``rows`` family).
