@@ -27,7 +27,7 @@ def main() -> None:
                          "BENCH_kcenter.json trajectory artifact)")
     ap.add_argument("--only", default=None,
                     help="comma list: tables,runtime,phi,perfcell,kernels,"
-                         "streamedkernels,chunked,roofline")
+                         "streamedkernels,chunked,serve,roofline")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -112,6 +112,11 @@ def main() -> None:
     if want("chunked"):
         from . import chunked_scaling
         for name, us, derived in chunked_scaling.run(full=args.full):
+            emit(name, us, derived)
+
+    if want("serve"):
+        from . import serve_bench
+        for name, us, derived in serve_bench.run(full=args.full):
             emit(name, us, derived)
 
     if want("roofline"):

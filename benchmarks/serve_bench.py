@@ -1,0 +1,263 @@
+"""Serving load generator: latency/QPS percentiles for ``KCenterService``.
+
+Closed-loop (fixed client concurrency, each client waits for its answer
+before sending the next) and open-loop (fixed arrival rate, async tickets)
+drivers over the online k-center service, plus the insert-heavy ingest
+micro-bench for ``stream_update``'s sequential tail (host-side O(b·new)
+vs the legacy per-insertion device pass).
+
+Recorded into ``BENCH_kcenter.json`` via ``benchmarks/run.py --only
+serve``. The quick mode doubles as the CI smoke: it *asserts* the serving
+contracts —
+
+  * parity anchor: a served ``assign`` is bitwise ``ops.assign_nearest``
+    on the snapshot centers;
+  * p99 latency is finite under load (no stuck tickets);
+  * batched QPS ≥ 5× the unbatched single-query baseline whenever the
+    achieved mean batch is ≥ 32 rows (the continuous-batching win).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Iterator, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import stream_init, stream_update
+from repro.data import gau
+from repro.kernels import ops
+from repro.serve import KCenterService
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _pcts_us(lat_s) -> Tuple[float, float, float, float]:
+    """(mean, p50, p95, p99) of a latency sample, in microseconds."""
+    a = np.asarray(lat_s, np.float64) * 1e6
+    if a.size == 0:
+        return (float("nan"),) * 4
+    return (float(a.mean()), float(np.percentile(a, 50)),
+            float(np.percentile(a, 95)), float(np.percentile(a, 99)))
+
+
+def _bootstrap(k: int, d: int, n_boot: int, seed: int,
+               **service_kw) -> Tuple[KCenterService, np.ndarray]:
+    """Service with an ingested bootstrap set; returns (service, points).
+
+    Clustered points (``data.gau``) so the doubling sketch actually
+    retains a multi-center set — an isotropic blob collapses to one
+    center, a degenerate service."""
+    pts = gau(n_boot, k, d=d, seed=seed)
+    svc = KCenterService(k, d, **service_kw)
+    svc.submit_points(pts)
+    svc.drain(timeout=120)
+    return svc, pts
+
+
+def closed_loop(svc: KCenterService, *, clients: int, duration_s: float,
+                rows_per_req: int = 1, seed: int = 0):
+    """Fixed-concurrency driver: each client thread sends one request,
+    waits for the answer, repeats until the deadline. Returns
+    ``(latencies_s, qps)`` over completed requests."""
+    rng = np.random.default_rng(seed)
+    qs = [rng.normal(size=(rows_per_req, svc._d)).astype(np.float32)
+          for _ in range(clients)]
+    lats: list = [[] for _ in range(clients)]
+    start_gate = threading.Barrier(clients + 1)
+    stop = threading.Event()
+
+    def client(i: int) -> None:
+        q = qs[i]
+        out = lats[i]
+        start_gate.wait()
+        while not stop.is_set():
+            t0 = time.monotonic()
+            svc.assign(q, timeout=60)
+            out.append(time.monotonic() - t0)
+
+    threads = [threading.Thread(target=client, args=(i,), daemon=True)
+               for i in range(clients)]
+    for t in threads:
+        t.start()
+    start_gate.wait()
+    t0 = time.monotonic()
+    time.sleep(duration_s)
+    stop.set()
+    for t in threads:
+        t.join()
+    wall = time.monotonic() - t0
+    all_lats = [x for per in lats for x in per]
+    return all_lats, len(all_lats) / wall
+
+
+def open_loop(svc: KCenterService, *, rate_qps: float, duration_s: float,
+              rows_per_req: int = 1, seed: int = 0):
+    """Fixed-arrival-rate driver: submit async tickets on a pacing clock
+    regardless of completions (the open-loop column of serving papers —
+    it surfaces queueing delay a closed loop hides). Returns
+    ``(latencies_s, achieved_qps)``."""
+    rng = np.random.default_rng(seed)
+    q = rng.normal(size=(rows_per_req, svc._d)).astype(np.float32)
+    period = 1.0 / rate_qps
+    tickets = []
+    t0 = time.monotonic()
+    n = 0
+    while True:
+        now = time.monotonic()
+        if now - t0 >= duration_s:
+            break
+        target = t0 + n * period
+        if now < target:
+            time.sleep(min(target - now, 0.001))
+            continue
+        tickets.append(svc.assign_async(q))
+        n += 1
+    for t in tickets:
+        t.result(timeout=60)
+    wall = time.monotonic() - t0
+    lats = [t.t_done - t.t_submit for t in tickets]
+    return lats, len(tickets) / wall
+
+
+def ingest_tail_time(tail: str, *, n: int, k: int, d: int, batch: int,
+                     seed: int = 0) -> Tuple[float, int]:
+    """Wall seconds to sketch an insert-heavy stream with the given
+    ``stream_update`` tail. Points arrive at growing scale so the radius
+    keeps doubling — the regime where the legacy tail pays one device
+    round-trip per inserted center. Returns ``(seconds, center_count)``."""
+    rng = np.random.default_rng(seed)
+    pts = rng.normal(size=(n, d)).astype(np.float32)
+    pts *= np.linspace(1.0, 64.0, n, dtype=np.float32)[:, None]
+    st = stream_init(k, d)
+    t0 = time.perf_counter()
+    for i in range(0, n, batch):
+        st = stream_update(st, pts[i:i + batch], tail=tail)
+    return time.perf_counter() - t0, st.count
+
+
+# ---------------------------------------------------------------------------
+# bench sections
+# ---------------------------------------------------------------------------
+
+def run(full: bool = False) -> Iterator[Tuple[str, float, str]]:
+    """Yield ``(name, us_per_call, derived)`` rows; assert the serving
+    smoke contracts (parity / finite p99 / ≥5× batching win)."""
+    k, d = 16, 16
+    clients = 64
+    dur = 3.0 if full else 0.8
+    rng = np.random.default_rng(7)
+
+    # -- parity anchor (the CI smoke's correctness gate) -------------------
+    svc, _ = _bootstrap(k, d, 4096, seed=1)
+    q = rng.normal(size=(37, d)).astype(np.float32)
+    epoch, centers, _ = svc.snapshot()
+    res = svc.assign(q, timeout=60)
+    ri, rd = ops.assign_nearest(jnp.asarray(q), jnp.asarray(centers))
+    assert res.epoch == epoch
+    assert np.array_equal(np.asarray(ri), res.idx), "served idx != offline"
+    assert np.array_equal(np.asarray(rd), res.d2), "served d2 != offline"
+    yield "serve_parity_anchor", 0, "bitwise=TRUE"
+
+    # warmup: touch every query bucket once so the measured loops see the
+    # steady state (zero new operand signatures)
+    for b in (1, 8, 64, 256):
+        svc.assign(rng.normal(size=(b, d)).astype(np.float32), timeout=60)
+
+    # -- closed loop: batched vs unbatched single-query baseline ----------
+    lat_b, qps_b = closed_loop(svc, clients=clients, duration_s=dur)
+    st = svc.stats
+    mean_batch = st["batched_rows"] / max(st["batches"], 1)
+    mean_us, p50, p95, p99 = _pcts_us(lat_b)
+    assert np.isfinite(p99), "batched p99 latency not finite"
+    yield (f"serve_closed_batched_c{clients}", mean_us,
+           f"qps={qps_b:.0f};p50={p50:.0f};p95={p95:.0f};p99={p99:.0f};"
+           f"mean_batch={mean_batch:.1f}")
+    svc.close()
+
+    svc_u, _ = _bootstrap(k, d, 4096, seed=1, batching=False)
+    svc_u.assign(rng.normal(size=(1, d)).astype(np.float32), timeout=60)
+    lat_u, qps_u = closed_loop(svc_u, clients=clients, duration_s=dur)
+    mean_us, p50, p95, p99 = _pcts_us(lat_u)
+    assert np.isfinite(p99), "unbatched p99 latency not finite"
+    yield (f"serve_closed_unbatched_c{clients}", mean_us,
+           f"qps={qps_u:.0f};p50={p50:.0f};p95={p95:.0f};p99={p99:.0f}")
+    svc_u.close()
+
+    speedup = qps_b / max(qps_u, 1e-9)
+    if mean_batch >= 32:
+        assert speedup >= 5.0, (
+            f"batched QPS only {speedup:.1f}x the single-query baseline "
+            f"at mean batch {mean_batch:.1f}")
+    yield ("serve_batch_speedup", 0,
+           f"x{speedup:.1f};mean_batch={mean_batch:.1f};"
+           f"qps_batched={qps_b:.0f};qps_unbatched={qps_u:.0f}")
+
+    # -- closed loop with live ingest ------------------------------------
+    svc_i, boot = _bootstrap(k, d, 4096, seed=1)
+    svc_i.assign(rng.normal(size=(1, d)).astype(np.float32), timeout=60)
+    stop_feed = threading.Event()
+    # steady-state ingest: same cluster centers as the bootstrap (same
+    # gau seed), so arriving points are overwhelmingly covered and epochs
+    # stay rare by design
+    feed_pool = gau(16_384, k, d=d, seed=1)
+
+    def feeder() -> None:
+        off = 0
+        while not stop_feed.is_set():
+            svc_i.submit_points(feed_pool[off:off + 512])
+            off = (off + 512) % (feed_pool.shape[0] - 512)
+            time.sleep(0.002)
+
+    feed = threading.Thread(target=feeder, daemon=True)
+    feed.start()
+    lat_i, qps_i = closed_loop(svc_i, clients=clients, duration_s=dur)
+    stop_feed.set()
+    feed.join()
+    svc_i.drain(timeout=120)
+    st_i = svc_i.stats
+    mean_us, p50, p95, p99 = _pcts_us(lat_i)
+    assert np.isfinite(p99), "ingest-on p99 latency not finite"
+    yield (f"serve_closed_ingest_on_c{clients}", mean_us,
+           f"qps={qps_i:.0f};p50={p50:.0f};p95={p95:.0f};p99={p99:.0f};"
+           f"epochs={st_i['epochs']};refreshes={st_i['cache_refreshes']}")
+    svc_i.close()
+
+    # -- open loop at half the measured batched capacity ------------------
+    svc_o, _ = _bootstrap(k, d, 4096, seed=1)
+    svc_o.assign(rng.normal(size=(1, d)).astype(np.float32), timeout=60)
+    rate = max(qps_b * 0.3, 100.0)
+    lat_o, qps_o = open_loop(svc_o, rate_qps=rate, duration_s=dur)
+    mean_us, p50, p95, p99 = _pcts_us(lat_o)
+    assert np.isfinite(p99), "open-loop p99 latency not finite"
+    yield (f"serve_open_rate{rate:.0f}", mean_us,
+           f"qps={qps_o:.0f};p50={p50:.0f};p95={p95:.0f};p99={p99:.0f}")
+    svc_o.close()
+
+    # -- ingest tail micro-bench (insert-heavy regime) --------------------
+    n_ing = 40_000 if full else 4_000
+    t_host, c_host = ingest_tail_time("host", n=n_ing, k=64, d=8, batch=512)
+    t_dev, c_dev = ingest_tail_time("device", n=n_ing, k=64, d=8, batch=512)
+    yield (f"serve_ingest_tail_host_n{n_ing}", t_host * 1e6,
+           f"centers={c_host}")
+    yield (f"serve_ingest_tail_device_n{n_ing}", t_dev * 1e6,
+           f"centers={c_dev}")
+    yield ("serve_ingest_tail_speedup", 0,
+           f"x{t_dev / max(t_host, 1e-9):.1f}")
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for name, us, derived in run(full=args.full):
+        print(f"{name},{us:.0f},{derived}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -53,7 +53,8 @@ def _min_d2(x: np.ndarray, centers: np.ndarray,
 def stream_update(state: StreamState, batch, *,
                   chunk: int | None = None,
                   block_rows: int | None = None,
-                  memory_budget: int | None = None) -> StreamState:
+                  memory_budget: int | None = None,
+                  tail: str = "host") -> StreamState:
     """Fold one batch of points (b,d) into the sketch.
 
     ``batch`` may also be any ``PointSource`` (host numpy, on-disk shards,
@@ -65,7 +66,17 @@ def stream_update(state: StreamState, batch, *,
 
     ``chunk`` streams the per-batch coverage pass in row-blocks
     (kernels/engine.py) so arbitrarily large batches never materialize a
-    (b, k) distance block."""
+    (b, k) distance block.
+
+    ``tail`` picks the sequential-insertion tail: ``"host"`` (default)
+    checks insertion candidates against only the centers added since the
+    batch's vectorized coverage pass — O(b·new) host flops, one device
+    pass per doubling instead of one per insertion; ``"device"`` is the
+    legacy per-insertion re-pass (one ``assign_nearest`` round-trip per
+    inserted center), kept as the before/after micro-bench baseline
+    (``benchmarks/serve_bench.py``, insert-heavy regime)."""
+    if tail not in ("host", "device"):
+        raise ValueError(f"tail must be 'host' or 'device', got {tail!r}")
     if is_source(batch):
         rows = ops.resolve_block_rows(batch.n, batch.d,
                                       block_rows=block_rows,
@@ -78,7 +89,7 @@ def stream_update(state: StreamState, batch, *,
         else:
             blocks = (np.asarray(b) for b in batch.blocks(rows))
         for blk in blocks:
-            state = stream_update(state, blk, chunk=chunk)
+            state = stream_update(state, blk, chunk=chunk, tail=tail)
         return state
     centers, count, r, k = (np.array(state.centers), state.count,
                             state.r, state.k)
@@ -103,37 +114,84 @@ def stream_update(state: StreamState, batch, *,
 
     while batch.size:
         # vectorized drop of covered points (≤ 4r of a center: the
-        # doubling invariant allows absorbing them)
+        # doubling invariant allows absorbing them) — ONE device pass
         d2 = _min_d2(batch, centers[:count], chunk)
-        far = batch[np.sqrt(d2) > 4.0 * r]
-        if far.size == 0:
+        dist = np.sqrt(d2)
+        keep = dist > 4.0 * r
+        batch, dist = batch[keep], dist[keep]
+        if batch.size == 0:
             break
+        batch, centers, count, r = _insert_tail(
+            batch, dist, centers, count, r, k,
+            one_per_pass=(tail == "device"))
+    return StreamState(centers, count, r, k)
+
+
+def _insert_tail(batch: np.ndarray, dist: np.ndarray, centers: np.ndarray,
+                 count: int, r: float, k: int, *, one_per_pass: bool):
+    """Sequential-insertion tail of one ``stream_update`` coverage pass.
+
+    Every row of ``batch`` already failed the ≤4r coverage test against the
+    pass-time center set; ``dist`` caches those pass-time min-distances.
+    Insertion candidates are re-checked host-side against only the centers
+    *added since the pass* — O(b·new) flops, no per-point host↔device
+    round-trip. A doubling+merge shrinks the center set to a subset of the
+    pass-time centers, so the cached distances survive only as lower
+    bounds; the tail hands the unconsumed rows back for a fresh vectorized
+    pass instead of consuming stale bounds (that keeps ``_merge``'s
+    coverage rebuild on the vectorized device path). A center inserted
+    this tail is at true distance > 4r from every live center (cached
+    distance ≤ true distance), so the doubling separation invariant holds
+    exactly as in the legacy tail.
+
+    ``one_per_pass=True`` reproduces the legacy device tail bit-for-bit:
+    return after the first insertion so every candidate is re-screened by
+    a fresh ``assign_nearest`` pass.
+    """
+    added: list = []                    # centers inserted since the pass
+    for i in range(batch.shape[0]):
+        x = batch[i]
+        cd = float(dist[i])
+        for c in added:
+            diff = x - c
+            cd = min(cd, float(np.sqrt(np.dot(diff, diff))))
+        if cd <= 4.0 * r:
+            continue                    # covered by a center added mid-tail
         if count < k + 1:
-            centers[count] = far[0]
+            centers[count] = x
             count += 1
-            batch = far[1:]
             if count == k + 1:
                 # classic doubling: never rest with more than k centers
                 r *= 2.0
                 centers, count = _merge(centers, count, r, k)
+                return batch[i + 1:], centers, count, r
+            added.append(x.copy())
+            if one_per_pass:
+                return batch[i + 1:], centers, count, r
         else:
             r *= 2.0
             centers, count = _merge(centers, count, r, k)
-            batch = far
-    return StreamState(centers, count, r, k)
+            return batch[i:], centers, count, r
+    return batch[:0], centers, count, r
 
 
 def _merge(centers: np.ndarray, count: int, r: float, k: int):
     """Greedy re-cluster of the kept centers at scale 4r: keep a maximal
-    subset with pairwise distance > 4r."""
+    subset with pairwise distance > 4r. The rebuild is vectorized — one
+    (count, count) distance block (count ≤ k+1) plus a masked greedy scan,
+    no per-pair python distance loop."""
+    live = centers[:count]
+    diff = live[:, None, :] - live[None, :, :]
+    d2 = np.einsum("ijk,ijk->ij", diff, diff)
+    thr = (4.0 * r) ** 2
+    ok = np.ones(count, bool)
     kept = []
     for i in range(count):
-        c = centers[i]
-        if all(np.sum((c - centers[j]) ** 2) > (4.0 * r) ** 2
-               for j in kept):
+        if ok[i]:
             kept.append(i)
+            ok &= d2[i] > thr
     new = np.zeros_like(centers)
-    new[: len(kept)] = centers[kept]
+    new[: len(kept)] = live[kept]
     return new, len(kept)
 
 

@@ -310,6 +310,62 @@ def assign_nearest(x, c, *, impl: str = "auto", chunk: int | None = None,
     return idx.reshape(-1)[:n0], d2.reshape(-1)[:n0]
 
 
+# Coordinate-space far sentinel for padded/invalid center rows: distance to
+# a 1e18-coordinate row is ~1e36·d (or +inf past f32 range) — it loses every
+# nearest reduction, so sentinel rows never win an assignment.
+_FAR_CENTER = jnp.float32(1e18)
+
+
+def assign_bucketed(q, c, cmask, *, impl: str = "auto",
+                    chunk: int | None = None):
+    """Nearest-center assignment against a *bucketed* cached center set —
+    the online-serving query program (``repro/serve/kcenter.py``).
+
+    ``c (m_cap, d)`` is a fixed power-of-two bucket holding ``m <= m_cap``
+    live centers and ``cmask (m_cap,)`` marks the live rows (0/1 operand,
+    f32 or bool). Invalid rows are pushed to the far coordinate sentinel —
+    the same 1e18 fill ``assign_nearest`` pads centers with — so they can
+    never win a nearest reduction: for every valid query row the result is
+    **bitwise** equal to ``assign_nearest(q[:b], c[:m])``. Callers pad the
+    query block to a fixed row bucket and slice the tail off themselves
+    (tests/test_serve_kcenter.py pins both contracts).
+
+    Deliberately NOT module-jitted: the repo-wide assignment contract is
+    the *eager* ``assign_nearest`` bits, and jitting fuses the
+    ``|x|² − 2x·c + |c|²`` matmul differently on CPU (1-ulp d2 drift — the
+    same reason ``Executor.radius2`` stays an eager fold). Recompile
+    avoidance comes from the fixed bucket shapes instead: every operand
+    signature is one of O(log max_batch · log m_cap) buckets, so the op
+    cache serves the steady state with zero new compilations. Epoch bumps
+    of the serving cache re-upload the *same* shapes — never a new
+    signature. reprolint R004 lists this entry point in ``JITTED_CALLEES``
+    so a ragged block stream must do the pad dance before reaching it.
+
+    Eager-only for a second reason: the mask is read *concretely* to
+    special-case a single live center (the m=1 dot lowers as a matvec with
+    different accumulation than the m>=2 gemm — masking it inside the
+    bucket would cost 1 ulp of parity), so ``cmask`` must not be a tracer.
+    """
+    cmask_h = np.asarray(cmask) > 0
+    if cmask_h.shape[0] != c.shape[0]:
+        raise ValueError(
+            f"cmask rows {cmask_h.shape[0]} != center bucket rows {c.shape[0]}")
+    nvalid = int(cmask_h.sum())
+    if nvalid == 1:
+        # XLA lowers the m=1 distance dot as a matvec whose accumulation
+        # differs from the m>=2 gemm by 1 ulp, so a single live center
+        # masked inside the bucket would break bitwise parity with the
+        # unbucketed reference. Route through the true 1-row set — still a
+        # fixed operand signature per query bucket — and restore the
+        # bucket-row index.
+        j = int(np.argmax(cmask_h))
+        idx, d2 = assign_nearest(q, jnp.asarray(c)[j:j + 1],
+                                 impl=impl, chunk=chunk)
+        return idx + jnp.int32(j), d2
+    c = jnp.where(jnp.asarray(cmask)[:, None] > 0, c, _FAR_CENTER)
+    return assign_nearest(q, c, impl=impl, chunk=chunk)
+
+
 def argmin_dist2_over_rows(x, c, *, impl: str = "auto",
                            chunk: int | None = None,
                            memory_budget: int | None = None):

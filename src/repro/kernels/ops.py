@@ -37,6 +37,7 @@ dist2_to_center = engine.dist2_to_center
 pairwise_dist2 = engine.pairwise_dist2
 fused_min_argmax = engine.fused_min_argmax
 assign_nearest = engine.assign_nearest
+assign_bucketed = engine.assign_bucketed
 argmin_dist2_over_rows = engine.argmin_dist2_over_rows
 
 # Source folds (engine.py): block-streamed ops over a PointSource, so the

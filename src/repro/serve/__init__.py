@@ -1,2 +1,16 @@
-from .engine import Engine, Request  # noqa: F401
-from .sampler import sample  # noqa: F401
+"""Serving layer — two engines: the seed's LM continuous-batching
+``Engine`` (token decode over fixed slots, serve/engine.py) and the
+k-center query service ``KCenterService`` (batched nearest-center
+assignment over a live streamed sketch, serve/kcenter.py)."""
+from .engine import Engine, Request
+from .kcenter import AssignResult, AssignTicket, KCenterService
+from .sampler import sample
+
+__all__ = [
+    "Engine",
+    "Request",
+    "sample",
+    "KCenterService",
+    "AssignResult",
+    "AssignTicket",
+]

@@ -1,0 +1,438 @@
+"""High-QPS online k-center serving: batched nearest-center queries over a
+live streamed sketch.
+
+This is the ROADMAP's "online k-center serving engine": the last mile
+between the streaming doubling sketch (``core/streaming.py``, Charikar–
+Chekuri–Feder–Motwani) and a production query path. Ceccarello–
+Pietracaprina–Pucci (arXiv 1802.09205) settle the *accuracy* side —
+streamed k-center matches offline quality in one pass — so the engineering
+problem left is throughput: answer ``assign(queries)`` at high QPS while
+the center set evolves under continuous ingest.
+
+Three mechanisms, mirroring the recompile-avoidance discipline of the
+fused streamed kernels (PR 4/7):
+
+  * **ingest / query separation** — ``submit_points`` enqueues point
+    batches (or whole ``PointSource``s) for a dedicated ingest thread that
+    folds them into the sketch via ``stream_update``; queries never wait
+    on ingest compute, only on the snapshot lock (a few loads).
+  * **epoch-versioned device-resident center cache** — the sketch's live
+    centers publish under an epoch counter that bumps *only when the
+    center set actually changes*; at a stable radius every covered point
+    is absorbed without touching the centers, so the steady-state common
+    case is zero invalidations. The query path keeps the centers
+    device-resident in a fixed power-of-two bucket with a validity-mask
+    operand; a stale epoch re-uploads the *same shapes* (no new program),
+    and only crossing a power-of-two center count grows the bucket.
+  * **fixed-shape micro-batching** — an admission queue coalesces
+    concurrent ``assign`` calls into one micro-batch per device dispatch
+    (continuous batching: while a batch is in flight, new arrivals pile up
+    and ship together on the next dispatch). Each micro-batch is padded to
+    a power-of-two row bucket, so every dispatch hits one of
+    O(log max_batch) operand signatures — zero compilations after warmup,
+    ragged arrival sizes included.
+
+The device program is ``ops.assign_bucketed`` (kernels/engine.py): eager
+by design so served answers are **bitwise** equal to the offline
+``ops.assign_nearest`` on the same snapshot centers (jit fuses the matmul
+differently on CPU — see the entry point's docstring), with ``impl=``
+threaded through to the fused Pallas assignment tile on backends where it
+lowers natively.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from typing import Dict, List, NamedTuple, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.streaming import stream_init, stream_update
+from repro.data.source import is_source
+from repro.kernels import ops
+
+_SHUTDOWN = object()
+
+
+def _pow2_at_least(n: int, floor: int) -> int:
+    """Smallest power of two >= max(n, floor)."""
+    b = max(int(floor), 1)
+    while b < n:
+        b *= 2
+    return b
+
+
+class AssignResult(NamedTuple):
+    """One served assignment: nearest-center index + squared distance per
+    query row, tagged with the center-set epoch that answered it."""
+    idx: np.ndarray     # (b,) int32
+    d2: np.ndarray      # (b,) float32
+    epoch: int
+
+
+class AssignTicket:
+    """Handle for an in-flight ``assign_async`` request; ``result()``
+    blocks until the dispatch thread answers (or raises its error).
+    ``t_submit``/``t_done`` are ``time.monotonic`` stamps for load-gen
+    latency accounting (the ``Engine.Request`` idiom)."""
+
+    __slots__ = ("q", "t_submit", "t_done", "_event", "_idx", "_d2",
+                 "_epoch", "_err")
+
+    def __init__(self, q: np.ndarray):
+        self.q = q
+        self.t_submit = time.monotonic()
+        self.t_done = 0.0
+        self._event = threading.Event()
+        self._err: Optional[BaseException] = None
+
+    def _resolve(self, idx, d2, epoch) -> None:
+        self._idx, self._d2, self._epoch = idx, d2, epoch
+        self.t_done = time.monotonic()
+        self._event.set()
+
+    def _fail(self, err: BaseException) -> None:
+        self._err = err
+        self.t_done = time.monotonic()
+        self._event.set()
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> AssignResult:
+        if not self._event.wait(timeout):
+            raise TimeoutError("assign timed out")
+        if self._err is not None:
+            raise self._err
+        return AssignResult(self._idx, self._d2, self._epoch)
+
+
+class KCenterService:
+    """Online k-center service: live ingest + batched assignment queries.
+
+    ::
+
+        svc = KCenterService(k=16, d=8)
+        svc.submit_points(points)          # async: any (b, d) array or
+        svc.drain()                        #        any PointSource
+        res = svc.assign(queries)          # (idx, d2, epoch) — blocking
+        epoch, centers, r = svc.snapshot() # the live sketch at `epoch`
+        svc.close()
+
+    ``assign`` is thread-safe and designed to be called from many client
+    threads at once — concurrent calls coalesce into micro-batches.
+    Contracts (tests/test_serve_kcenter.py):
+
+      * every result is bitwise ``ops.assign_nearest(queries, centers)``
+        for the snapshot centers of ``result.epoch``;
+      * a dispatch's operand signature is a function of the (query-bucket,
+        center-bucket) pair only — warmup covers them once, after which
+        ragged query sizes and epoch bumps add zero signatures;
+      * ingest that leaves the center set unchanged (covered points — the
+        steady state) bumps no epoch and refreshes no cache.
+
+    Knobs: ``batching=False`` dispatches every request alone (the bench's
+    single-query baseline); ``max_batch`` caps coalesced rows per
+    dispatch; ``batch_wait_s`` optionally lingers for stragglers (default
+    0 — purely opportunistic coalescing); ``impl``/``chunk`` thread
+    through to the query kernels; ``snapshot_history=True`` retains every
+    epoch's centers (tests; O(epochs · k · d) host bytes).
+    """
+
+    def __init__(self, k: int, d: int, *, impl: str = "auto",
+                 chunk: Optional[int] = None, max_batch: int = 256,
+                 min_bucket: int = 8, center_bucket_min: int = 8,
+                 batching: bool = True, batch_wait_s: float = 0.0,
+                 ingest_tail: str = "host",
+                 ingest_block_rows: Optional[int] = None,
+                 ingest_memory_budget: Optional[int] = None,
+                 snapshot_history: bool = False):
+        if k < 1:
+            raise ValueError(f"k must be >= 1, got {k}")
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        self._k, self._d = int(k), int(d)
+        self._impl, self._chunk = impl, chunk
+        self._max_batch = int(max_batch)
+        self._min_bucket = _pow2_at_least(min_bucket, 1)
+        self._center_bucket_min = _pow2_at_least(center_bucket_min, 1)
+        self._batching = bool(batching)
+        self._batch_wait_s = float(batch_wait_s)
+        self._ingest_tail = ingest_tail
+        self._ingest_block_rows = ingest_block_rows
+        self._ingest_memory_budget = ingest_memory_budget
+
+        # -- sketch + published snapshot (epoch-versioned) ---------------
+        self._state = stream_init(k, d)         # ingest-thread private
+        self._mu = threading.Lock()
+        self._epoch = 0                         # 0 = empty center set
+        self._centers = np.zeros((0, d), np.float32)
+        self._r = 0.0
+        self._history: Optional[Dict[int, np.ndarray]] = (
+            {} if snapshot_history else None)
+        self._stats = {"queries": 0, "batches": 0, "batched_rows": 0,
+                       "epochs": 0, "cache_refreshes": 0,
+                       "bucket_growths": 0}
+
+        # -- device-resident center cache (dispatch-thread private) ------
+        self._cache_epoch = -1
+        self._cache_mcap = 0
+        self._cache_buf = None                  # (m_cap, d) device f32
+        self._cache_mask = None                 # (m_cap,) device f32 0/1
+
+        # -- ingest queue + admission queue ------------------------------
+        self._ingest_q: queue.Queue = queue.Queue()
+        self._req_q: queue.Queue = queue.Queue()
+        self._ingest_cv = threading.Condition()
+        self._ingest_pending = 0
+        self._ingest_err: Optional[BaseException] = None
+        self._closed = False
+
+        self._ingest_thread = threading.Thread(
+            target=self._ingest_loop, name="kcenter-ingest", daemon=True)
+        self._dispatch_thread = threading.Thread(
+            target=self._dispatch_loop, name="kcenter-dispatch", daemon=True)
+        self._ingest_thread.start()
+        self._dispatch_thread.start()
+
+    # -- lifecycle --------------------------------------------------------
+    def __enter__(self) -> "KCenterService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def close(self) -> None:
+        """Stop both threads; outstanding requests fail with RuntimeError."""
+        if self._closed:
+            return
+        self._closed = True
+        self._ingest_q.put(_SHUTDOWN)
+        self._req_q.put(_SHUTDOWN)
+        self._ingest_thread.join()
+        self._dispatch_thread.join()
+        while True:                 # fail anything admitted after shutdown
+            try:
+                item = self._req_q.get_nowait()
+            except queue.Empty:
+                break
+            if item is not _SHUTDOWN:
+                item._fail(RuntimeError("KCenterService closed"))
+
+    def _check_open(self) -> None:
+        if self._closed:
+            raise RuntimeError("KCenterService is closed")
+
+    # -- ingest side ------------------------------------------------------
+    def submit_points(self, points) -> None:
+        """Asynchronously fold ``points`` — a (b, d) array or any
+        ``PointSource`` — into the sketch. Returns immediately; ``drain``
+        waits for completion (and surfaces ingest errors)."""
+        self._check_open()
+        self._raise_ingest_err()
+        if not is_source(points):
+            points = np.asarray(points, np.float32)
+            if points.ndim != 2 or points.shape[1] != self._d:
+                raise ValueError(
+                    f"expected (b, {self._d}) points, got {points.shape}")
+        with self._ingest_cv:
+            self._ingest_pending += 1
+        self._ingest_q.put(points)
+
+    def drain(self, timeout: Optional[float] = None) -> None:
+        """Block until every submitted batch has been folded in."""
+        with self._ingest_cv:
+            if not self._ingest_cv.wait_for(
+                    lambda: self._ingest_pending == 0, timeout):
+                raise TimeoutError("ingest queue did not drain")
+        self._raise_ingest_err()
+
+    def _raise_ingest_err(self) -> None:
+        with self._mu:
+            err = self._ingest_err
+        if err is not None:
+            raise RuntimeError("ingest thread failed") from err
+
+    def _ingest_loop(self) -> None:
+        while True:
+            item = self._ingest_q.get()
+            if item is _SHUTDOWN:
+                return
+            try:
+                old = self._state
+                new = stream_update(
+                    old, item, chunk=self._chunk,
+                    block_rows=self._ingest_block_rows,
+                    memory_budget=self._ingest_memory_budget,
+                    tail=self._ingest_tail)
+                self._state = new
+                # Epoch bumps ONLY on a real center-set change — covered
+                # points (the steady state) publish nothing.
+                changed = (new.count != old.count or new.r != old.r
+                           or not np.array_equal(new.centers[:new.count],
+                                                 old.centers[:old.count]))
+                if changed:
+                    snap = np.array(new.centers[:new.count], np.float32)
+                    with self._mu:
+                        self._epoch += 1
+                        self._centers = snap
+                        self._r = new.r
+                        self._stats["epochs"] += 1
+                        if self._history is not None:
+                            self._history[self._epoch] = snap
+            except BaseException as e:  # noqa: BLE001 — surfaced via drain
+                with self._mu:
+                    self._ingest_err = e
+            finally:
+                with self._ingest_cv:
+                    self._ingest_pending -= 1
+                    self._ingest_cv.notify_all()
+
+    # -- snapshots --------------------------------------------------------
+    def snapshot(self) -> Tuple[int, np.ndarray, float]:
+        """-> (epoch, centers (count, d), radius lower bound r). The
+        centers array is the published copy — treat it as read-only."""
+        with self._mu:
+            return self._epoch, self._centers, self._r
+
+    def snapshot_at(self, epoch: int) -> np.ndarray:
+        """Centers of a historical epoch (requires snapshot_history)."""
+        if self._history is None:
+            raise RuntimeError(
+                "snapshot_at needs KCenterService(snapshot_history=True)")
+        with self._mu:
+            return self._history[epoch]
+
+    @property
+    def stats(self) -> Dict[str, int]:
+        with self._mu:
+            return dict(self._stats)
+
+    # -- query side -------------------------------------------------------
+    def assign_async(self, queries) -> AssignTicket:
+        """Submit a query batch (b, d); returns an ``AssignTicket`` whose
+        ``result()`` blocks until the answer is dispatched."""
+        self._check_open()
+        q = np.asarray(queries, np.float32)
+        if q.ndim == 1:
+            q = q[None, :]
+        if q.ndim != 2 or q.shape[1] != self._d:
+            raise ValueError(
+                f"expected (b, {self._d}) queries, got {np.shape(queries)}")
+        if q.shape[0] == 0:
+            raise ValueError("empty query batch")
+        ticket = AssignTicket(q)
+        self._req_q.put(ticket)
+        return ticket
+
+    def assign(self, queries, timeout: Optional[float] = None) -> AssignResult:
+        """Blocking ``assign_async(...).result()`` — the client call."""
+        return self.assign_async(queries).result(timeout)
+
+    # -- dispatch thread --------------------------------------------------
+    def _dispatch_loop(self) -> None:
+        while True:
+            first = self._req_q.get()
+            if first is _SHUTDOWN:
+                return
+            batch: List[AssignTicket] = [first]
+            rows = first.q.shape[0]
+            stop = False
+            if self._batching:
+                # Opportunistic coalescing: drain whatever piled up while
+                # the previous dispatch was in flight (continuous
+                # batching); optionally linger batch_wait_s for more.
+                deadline = None
+                if self._batch_wait_s > 0:
+                    deadline = time.monotonic() + self._batch_wait_s
+                while rows < self._max_batch:
+                    try:
+                        if deadline is None:
+                            nxt = self._req_q.get_nowait()
+                        else:
+                            left = deadline - time.monotonic()
+                            if left <= 0:
+                                break
+                            nxt = self._req_q.get(timeout=left)
+                    except queue.Empty:
+                        break
+                    if nxt is _SHUTDOWN:
+                        stop = True
+                        break
+                    batch.append(nxt)
+                    rows += nxt.q.shape[0]
+            self._run_batch(batch)
+            if stop:
+                return
+
+    def _run_batch(self, batch: List[AssignTicket]) -> None:
+        try:
+            if len(batch) == 1:
+                qcat = batch[0].q
+            else:
+                qcat = np.concatenate([t.q for t in batch], axis=0)
+            idx, d2, epoch = self._dispatch(qcat)
+            off = 0
+            for t in batch:
+                b = t.q.shape[0]
+                t._resolve(idx[off:off + b], d2[off:off + b], epoch)
+                off += b
+            with self._mu:
+                self._stats["queries"] += len(batch)
+                self._stats["batches"] += 1
+                self._stats["batched_rows"] += qcat.shape[0]
+        except BaseException as e:  # noqa: BLE001 — propagate per ticket
+            for t in batch:
+                t._fail(e)
+
+    def _refresh_cache(self):
+        """Device-resident epoch-versioned center cache (dispatch-thread
+        private). A stale epoch re-uploads into the same bucket shapes;
+        only a center count crossing the power-of-two bucket boundary
+        changes the operand signature (one warmup compile per bucket)."""
+        with self._mu:
+            epoch, centers = self._epoch, self._centers
+        if epoch != self._cache_epoch:
+            count = centers.shape[0]
+            if count == 0:
+                raise RuntimeError(
+                    "no centers yet — submit_points + drain before assign")
+            mcap = _pow2_at_least(count, self._center_bucket_min)
+            host = np.full((mcap, self._d), 1e18, np.float32)
+            host[:count] = centers
+            mask = np.zeros((mcap,), np.float32)
+            mask[:count] = 1.0
+            grew = mcap != self._cache_mcap
+            self._cache_buf = jnp.asarray(host)
+            self._cache_mask = jnp.asarray(mask)
+            self._cache_epoch, self._cache_mcap = epoch, mcap
+            with self._mu:
+                self._stats["cache_refreshes"] += 1
+                if grew:
+                    self._stats["bucket_growths"] += 1
+        return self._cache_buf, self._cache_mask, self._cache_epoch
+
+    def _dispatch(self, q: np.ndarray):
+        """Run one coalesced micro-batch through the bucketed query
+        program: pad to the power-of-two row bucket (max_batch-sized
+        slices for oversized requests), one ``ops.assign_bucketed`` call
+        per slice, results sliced back to the real rows."""
+        buf, mask, epoch = self._refresh_cache()
+        b = q.shape[0]
+        out_i = np.empty((b,), np.int32)
+        out_d = np.empty((b,), np.float32)
+        for start in range(0, b, self._max_batch):
+            blk = q[start:start + self._max_batch]
+            nb = blk.shape[0]
+            # pow2 bucket, capped at max_batch (itself a fixed shape even
+            # when not a power of two) — O(log max_batch) signatures total
+            bq = min(_pow2_at_least(nb, self._min_bucket), self._max_batch)
+            qp = np.zeros((bq, self._d), np.float32)
+            qp[:nb] = blk
+            idx, d2 = ops.assign_bucketed(jnp.asarray(qp), buf, mask,
+                                          impl=self._impl, chunk=self._chunk)
+            out_i[start:start + nb] = np.asarray(idx)[:nb]
+            out_d[start:start + nb] = np.asarray(d2)[:nb]
+        return out_i, out_d, epoch

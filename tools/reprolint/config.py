@@ -92,6 +92,12 @@ JITTED_CALLEES: Tuple[str, ...] = (
     "bernoulli_rows_block", "bernoulli_rows_at_block",
     "eim_filter_block", "_eim_filter_block",
     "fused_filter_blocks", "fused_assign_blocks", "fused_argmin_blocks",
+    # The serving query entry point (kernels/engine.py): eager rather than
+    # jitted, but shape-signature-sensitive all the same — its recompile
+    # discipline rests on callers padding to the fixed (query-bucket,
+    # center-bucket) shapes, so ragged streams must do the pad dance
+    # before reaching it (serve/kcenter.py does).
+    "assign_bucketed",
 )
 
 # Call names that sanitize a ragged block (pad-to-``rows`` family).
