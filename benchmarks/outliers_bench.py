@@ -1,0 +1,82 @@
+"""(k,z)-center benchmark: the outlier objective's cost next to plain MRG.
+
+Two questions, one contaminated GAU cloud (planted clusters + far
+outliers at a fixed contamination rate):
+
+  * **radius vs z** — sweeping the outlier budget through the true
+    contamination count: the reported (k,z) radius should collapse to the
+    cluster scale exactly when z reaches the planted contamination (below
+    it, some outlier must be covered), while plain MRG is pinned at the
+    contamination distance for every z;
+  * **wall-clock vs plain** — the streamed weighted-coreset pipeline's
+    overhead over plain streamed MRG on the same executor/blocking (the
+    extra work is the per-block weight aggregation, the weighted combine,
+    the O(coreset²) host solve, and the top-(z+1) radius fold).
+
+Run: ``PYTHONPATH=src python -m benchmarks.outliers_bench [--full]``,
+or via ``python -m benchmarks.run --only outliers``. Yields
+benchmarks/run.py-style ``(name, us_per_call, derived)`` rows.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import HostStreamExecutor, kz_center, mrg
+from repro.data import HostSource, gau
+
+
+def _contaminated(n: int, z: int, k_prime: int = 25, spread: float = 1000.0,
+                  seed: int = 0):
+    """GAU clusters + z outliers *scattered* at the spread scale — mutually
+    far apart, so no k' ≪ z centers can absorb them (a tight contamination
+    cluster would just cost plain k-center one center)."""
+    x = np.asarray(gau(n, k_prime, seed=seed), np.float32).copy()
+    rng = np.random.default_rng(seed + 1)
+    x[:z] = (rng.normal(size=(z, x.shape[1])) * spread).astype(np.float32)
+    return x
+
+
+def run(full: bool = False):
+    n = 200_000 if full else 20_000
+    k = 16
+    z_true = n // 500                      # 0.2% contamination
+    x = _contaminated(n, z_true)
+    rows = -(-n // 50)
+    ex = HostStreamExecutor(block_rows=rows)
+
+    t0 = time.time()
+    plain = mrg(HostSource(x), k, executor=ex)
+    t_plain = time.time() - t0
+    r_plain = float(np.sqrt(np.asarray(plain.radius2)))
+    yield (f"outliers_plain_mrg_n{n}_k{k}", t_plain * 1e6,
+           f"radius={r_plain:.4g}")
+
+    for z in (0, z_true // 2, z_true, 2 * z_true):
+        t0 = time.time()
+        res = kz_center(HostSource(x), k, z, executor=ex)
+        t_kz = time.time() - t0
+        r = float(np.sqrt(np.asarray(res.radius2)))
+        yield (f"outliers_kz_n{n}_k{k}_z{z}", t_kz * 1e6,
+               f"radius={r:.4g};coreset={res.coreset_size};"
+               f"rounds={res.rounds};vs_plain={t_kz / t_plain:.2f}x")
+        if z >= z_true:
+            # enough budget to exclude every planted outlier: the radius
+            # must collapse to the cluster scale while plain MRG stays
+            # pinned by the scattered contamination
+            assert r < r_plain / 4.0, (z, r, r_plain)
+
+
+def main(full: bool = False) -> None:
+    print("name,us_per_call,derived")
+    for name, us, derived in run(full=full):
+        print(f"{name},{us:.0f},{derived}", flush=True)
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-scale n")
+    main(ap.parse_args().full)

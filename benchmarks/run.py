@@ -27,7 +27,7 @@ def main() -> None:
                          "BENCH_kcenter.json trajectory artifact)")
     ap.add_argument("--only", default=None,
                     help="comma list: tables,runtime,phi,perfcell,kernels,"
-                         "streamedkernels,chunked,serve,roofline")
+                         "streamedkernels,chunked,serve,outliers,roofline")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -117,6 +117,11 @@ def main() -> None:
     if want("serve"):
         from . import serve_bench
         for name, us, derived in serve_bench.run(full=args.full):
+            emit(name, us, derived)
+
+    if want("outliers"):
+        from . import outliers_bench
+        for name, us, derived in outliers_bench.run(full=args.full):
             emit(name, us, derived)
 
     if want("roofline"):

@@ -10,6 +10,8 @@
                 device masks or streamed out-of-core over any executor)
   metrics.py  — covering radius, assignment, brute-force OPT (tests)
   coreset.py  — k-center coreset selection (framework data-curation hook)
+  outliers.py — (k,z)-center with outliers: weighted coreset + host solve
+                (Ceccarello et al. 1802.09205 over the weighted folds)
 """
 from .coreset import Coreset, embed_batches, select_coreset  # noqa: F401
 from .eim import EIMResult, EIMSample, eim, eim_sample  # noqa: F401
@@ -17,11 +19,18 @@ from .executor import (  # noqa: F401
     Executor,
     HostStreamExecutor,
     MeshExecutor,
+    Objective,
     SimExecutor,
 )
 from .gonzalez import GonzalezResult, covering_radius, gonzalez  # noqa: F401
-from .metrics import assignment, brute_force_opt, covering_radius2  # noqa: F401
+from .metrics import (  # noqa: F401
+    assignment,
+    brute_force_opt,
+    brute_force_opt_z,
+    covering_radius2,
+)
 from .mrg import MRGResult, mrg, mrg_distributed, mrg_sim, plan_rounds  # noqa: F401
+from .outliers import KZResult, covering_radius_excluding, kz_center  # noqa: F401
 from .streaming import (  # noqa: F401
     StreamState,
     stream_init,

@@ -14,7 +14,7 @@ from typing import Callable, NamedTuple, Sequence
 import jax.numpy as jnp
 from jax.sharding import Mesh
 
-from repro.data.source import ArraySource, is_source
+from repro.data.source import ArraySource, has_weights, is_source
 from repro.kernels import ops
 
 from .executor import Executor
@@ -97,13 +97,21 @@ def select_coreset(
     if streamed:
         # Fold both reverse passes over the source — block-bounded device
         # residency; counts and indices match the in-memory pass exactly
-        # (first-occurrence ties, order-exact integer adds).
+        # (first-occurrence ties, order-exact integer adds). A weighted
+        # source accumulates its row weights instead of counts, so the
+        # coreset's importance weights stay weighted instances end to end.
         weights = jnp.zeros((k,), jnp.float32)
-        for idx, _ in ops.assign_nearest_source(src, centers, impl=impl,
-                                                chunk=chunk,
-                                                block_rows=block_rows,
-                                                memory_budget=memory_budget):
-            weights = weights.at[idx].add(1.0)
+        if has_weights(src):
+            for idx, _, w_blk in ops.assign_nearest_source(
+                    src, centers, impl=impl, chunk=chunk,
+                    block_rows=block_rows, memory_budget=memory_budget,
+                    with_weights=True):
+                weights = weights.at[idx].add(w_blk)
+        else:
+            for idx, _ in ops.assign_nearest_source(
+                    src, centers, impl=impl, chunk=chunk,
+                    block_rows=block_rows, memory_budget=memory_budget):
+                weights = weights.at[idx].add(1.0)
         cidx = ops.argmin_dist2_over_source(src, centers, impl=impl,
                                             chunk=chunk,
                                             block_rows=block_rows,

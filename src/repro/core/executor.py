@@ -74,6 +74,7 @@ from __future__ import annotations
 import functools
 import warnings
 import weakref
+from dataclasses import dataclass
 from typing import Callable, Sequence
 
 import jax
@@ -84,12 +85,57 @@ from jax.sharding import PartitionSpec as P
 
 from repro import compat
 from repro.data.source import (ArraySource, ShardedSource, as_source,
-                               shard_source, stream_device)
+                               shard_source, stream_device, weights_of)
 from repro.kernels import engine, ops
 
 from .gonzalez import gonzalez
 
 BlockFn = Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]
+# Weighted round-1 reducer: (points (rows,d), mask (rows,), w (rows,)) ->
+# (centers (k,d), cluster weights (k,)).
+WeightedBlockFn = Callable[
+    [jnp.ndarray, jnp.ndarray, jnp.ndarray],
+    tuple[jnp.ndarray, jnp.ndarray]]
+
+
+@dataclass(frozen=True)
+class Objective:
+    """Pluggable fold objective over the source × executor substrate.
+
+    The executors' round surface (``run_blocks`` / ``combine_weighted`` /
+    ``radius2`` / ``mrg``) dispatches on this descriptor instead of
+    hard-coding unit-weight plain k-center:
+
+    * ``weighted`` — round 1 reduces *weighted* instances: the per-machine
+      reducer also emits per-cluster weight sums (the coreset outputs of
+      Ceccarello et al. 1802.09205 — each center stands in for its
+      cluster's total weight), carried through the Lemma-3 combine so the
+      final k centers arrive with their cluster weights.
+    * ``outliers`` — z: ``radius2`` becomes the top-(z+1) evaluation fold
+      (squared covering radius after excluding the z farthest points),
+      i.e. the (k,z)-center objective value.
+
+    The default descriptor (``Objective()``, equivalently passing
+    ``objective=None``) is plain k-center and keeps every executor code
+    path *literally* unchanged — the bitwise contract the parity tests
+    pin. Center *selection* is weight-oblivious throughout (k-center's
+    max-min objective over the support doesn't scale with multiplicity),
+    which is also what makes unit-weight weighted runs bitwise the plain
+    runs.
+    """
+
+    name: str = "kcenter"
+    weighted: bool = False
+    outliers: int = 0
+
+    def __post_init__(self):
+        if self.outliers < 0:
+            raise ValueError(f"outliers must be >= 0, got {self.outliers}")
+
+
+def _is_plain(objective: Objective | None) -> bool:
+    return objective is None or (not objective.weighted
+                                 and objective.outliers == 0)
 
 _NEG = jnp.float32(-3.4e38)   # Select's invalid-slot sentinel (matches eim)
 _BIG = jnp.float32(3.4e38)
@@ -103,11 +149,14 @@ _eim_filter_block = engine.eim_filter_block
 
 
 @functools.partial(jax.jit, static_argnames=("rank",))
-def _eim_pivot_block(d_blk, h_blk, top, *, rank):
+def _eim_pivot_block(d_blk, h_blk, top, w_blk=None, *, rank):
     """Pivot-only block step for a zero-sample iteration (the distance
     state must stay bit-for-bit untouched, like the device path's
-    ``any(s_valid)`` gate)."""
-    cand = jnp.where(h_blk, d_blk, _NEG)
+    ``any(s_valid)`` gate). ``w_blk=None`` is an empty jit pytree leaf —
+    the unweighted compiled program is byte-identical to the pre-weights
+    one; when present, ``w <= 0`` rows are gated out like ``H=False``."""
+    sel = h_blk if w_blk is None else h_blk & (w_blk > 0)
+    cand = jnp.where(sel, d_blk, _NEG)
     return engine.merge_top_k(top, cand, rank)
 
 
@@ -136,6 +185,35 @@ def gon_block_fn(k: int, impl: str = "auto",
 
 
 @functools.lru_cache(maxsize=None)
+def weighted_gon_block_fn(k: int, impl: str = "auto",
+                          chunk: int | None = None, *,
+                          mask_zero: bool = True) -> WeightedBlockFn:
+    """The weighted per-machine reducer: masked GON + per-cluster weight
+    sums — one machine's share of a weighted coreset (Ceccarello et al.
+    1802.09205: the per-reducer weighted instance).
+
+    Selection runs the *same* masked GON as ``gon_block_fn`` (k-center's
+    objective is weight-oblivious over the support), then each valid row's
+    weight is summed onto its nearest selected center. f32 sums of
+    integer-valued weights (cluster counts) are exact below 2^24.
+    ``mask_zero`` additionally drops ``w <= 0`` rows from selection (they
+    are absent from the instance) — round 1 wants that; the combine levels
+    pass ``mask_zero=False`` so their selection mask is *exactly* the
+    plain ``combine``'s (zero-weight duplicate rows from short blocks stay
+    selectable there, keeping unit-weight runs bitwise plain).
+    """
+    def fn(points: jnp.ndarray, mask: jnp.ndarray, w: jnp.ndarray):
+        sel = mask & (w > 0) if mask_zero else mask
+        centers = gonzalez(points, k, mask=sel, impl=impl,
+                           chunk=chunk).centers
+        idx, _ = ops.assign_nearest(points, centers, impl=impl, chunk=chunk)
+        cw = jnp.zeros((k,), jnp.float32).at[idx].add(
+            jnp.where(sel, w, 0.0))
+        return centers, cw
+    return fn
+
+
+@functools.lru_cache(maxsize=None)
 def _vmapped(fn: BlockFn):
     return jax.jit(jax.vmap(fn))
 
@@ -160,6 +238,17 @@ def _run_round(points_blocked: jnp.ndarray, mask_blocked: jnp.ndarray,
     any_valid = jnp.any(mask_blocked, axis=1)              # (m,)
     valid = jnp.repeat(any_valid, k)                       # (m*k,)
     return centers, valid
+
+
+def _run_round_w(points_blocked: jnp.ndarray, mask_blocked: jnp.ndarray,
+                 w_blocked: jnp.ndarray, fn: WeightedBlockFn):
+    """Weighted ``_run_round``: also flattens the per-block cluster-weight
+    sums -> ``(centers (m*k, d), valid (m*k,), weights (m*k,))``."""
+    centers, cw = _vmapped(fn)(points_blocked, mask_blocked, w_blocked)
+    m, k = centers.shape[0], centers.shape[1]
+    any_valid = jnp.any(mask_blocked, axis=1)
+    valid = jnp.repeat(any_valid, k)
+    return centers.reshape(m * k, -1), valid, cw.reshape(-1)
 
 
 def _mrg_round(points_blocked: jnp.ndarray, mask_blocked: jnp.ndarray,
@@ -204,10 +293,15 @@ def check_combine_capacity(k: int, capacity: int, *,
 class Executor:
     """Base: block-mapped round 1 + shared Lemma-3 reduction."""
 
-    def run_blocks(self, fn: BlockFn, source):
+    def run_blocks(self, fn, source, *, objective: Objective | None = None):
         """Round 1: map ``fn`` over the source's machine-blocks.
 
-        Returns ``(centers (M·k, d), valid (M·k,) bool)``.
+        Plain (default) objective: ``fn`` is a ``BlockFn`` and the return
+        is ``(centers (M·k, d), valid (M·k,) bool)`` — exactly the
+        pre-objective surface. With ``objective.weighted``, ``fn`` is a
+        ``WeightedBlockFn`` (e.g. ``weighted_gon_block_fn``) and the
+        return gains the per-cluster weight sums:
+        ``(centers, valid, weights (M·k,) f32)``.
         """
         raise NotImplementedError
 
@@ -252,20 +346,82 @@ class Executor:
         final = gonzalez(centers, k, mask=valid, impl=impl, chunk=chunk)
         return final.centers, extra
 
+    def combine_weighted(self, centers: jnp.ndarray, valid: jnp.ndarray,
+                         weights: jnp.ndarray, k: int, capacity: int, *,
+                         impl: str = "auto", chunk: int | None = None,
+                         final_gon: bool = True):
+        """Lemma-3 reduction carrying cluster weights — coreset outputs
+        stay weighted instances through every level.
+
+        Each level re-blocks the weighted union and picks per-block GON
+        centers with *exactly* ``combine``'s selection mask (validity
+        only — weights never steer selection, so on unit-weight inputs the
+        per-level center unions are bitwise the plain ``combine``'s), then
+        re-aggregates every row's weight onto its nearest new center
+        (Ceccarello et al.'s coreset re-weighting; f32 sums of integer
+        weights are exact below 2^24). With ``final_gon=False`` the
+        reduction stops as soon as the union fits ``capacity`` — the
+        weighted-coreset form ``core.outliers.kz_center`` hands to its
+        host-side solve — otherwise the final single-machine GON runs and
+        the weights are re-aggregated onto the k winners.
+
+        Returns ``(centers, weights, valid, extra_rounds)``; after a
+        final GON, ``centers`` is (k, d) and ``valid`` all-True.
+        """
+        check_combine_capacity(k, capacity)
+        w = jnp.asarray(weights, jnp.float32)
+        fn = weighted_gon_block_fn(k, impl, chunk, mask_zero=False)
+        extra = 0
+        while centers.shape[0] > capacity and centers.shape[0] > k:
+            m2 = -(-centers.shape[0] // capacity)
+            if m2 * k >= centers.shape[0] or extra >= 64:
+                raise ValueError(_DIVERGED_MSG)
+            blocked, bmask = _block(centers, m2)
+            vpad = jnp.pad(valid, (0, bmask.size - valid.shape[0]),
+                           constant_values=False)
+            bmask = bmask & vpad.reshape(bmask.shape)
+            wpad = jnp.pad(w, (0, bmask.size - w.shape[0]))
+            centers, valid, w = _run_round_w(blocked, bmask,
+                                             wpad.reshape(bmask.shape), fn)
+            extra += 1
+        if not final_gon:
+            return centers, w, valid, extra
+        final = gonzalez(centers, k, mask=valid, impl=impl, chunk=chunk)
+        idx, _ = ops.assign_nearest(centers, final.centers, impl=impl,
+                                    chunk=chunk)
+        w_out = jnp.zeros((k,), jnp.float32).at[idx].add(
+            jnp.where(valid, w, 0.0))
+        return (final.centers, w_out,
+                jnp.ones((k,), bool), extra)
+
     def radius2(self, source, centers: jnp.ndarray, *, impl: str = "auto",
-                chunk: int | None = None) -> jnp.ndarray:
+                chunk: int | None = None,
+                objective: Objective | None = None) -> jnp.ndarray:
         """Squared covering radius over ALL source points (streamed).
 
         Returns the squared fold ``max(min_d2)`` *directly* — no
         ``sqrt(d2)`` → ``r*r`` round-trip, which is lossy in f32 (the fold
         is already squared). All executor paths return the same exact
         value, which is what the cross-path bitwise parity tests compare.
+
+        A non-plain ``objective`` generalizes the fold: ``outliers=z``
+        evaluates the (k,z) objective — the top-(z+1) streamed fold's last
+        slot, i.e. the covering radius after excluding the z farthest
+        points — and ``weighted`` restricts candidacy to the source's
+        positive-weight support. The default objective takes the exact
+        pre-objective code path.
         """
+        if not _is_plain(objective):
+            top = engine.fold_top_k_min_d2(
+                source, centers, objective.outliers + 1, impl=impl,
+                chunk=chunk, weighted=objective.weighted)
+            return jnp.maximum(top[objective.outliers], jnp.float32(0.0))
         return engine.fold_min_d2(source, centers, impl=impl, chunk=chunk)
 
     def run_filter_round(self, source, s_new, d_s: np.ndarray,
                          h_mask: np.ndarray, rank: int, *,
-                         impl: str = "auto", chunk: int | None = None):
+                         impl: str = "auto", chunk: int | None = None,
+                         weights: np.ndarray | None = None):
         """One EIM iteration's Rounds 2–3 over this executor's machines.
 
         ``s_new`` is the iteration's newly sampled centers ``(m_new, d)``
@@ -278,6 +434,13 @@ class Executor:
         ``min(d_s, d(x, S_new)^2)`` (paper §4 Round 3's incremental
         update) and reduces Select's pivot — the ``rank``-th largest
         updated ``d_s`` over H (Round 2) — in the same pass.
+
+        ``weights`` (optional host ``(n,) f32``, aligned with ``d_s``)
+        threads the weighted objective through the fused update+top-k:
+        ``w <= 0`` rows are gated out of pivot candidacy exactly like
+        ``h_mask=False`` rows (their d(x,S) still updates). ``None`` — the
+        only form existing callers pass — runs the exact pre-weights
+        program.
 
         Returns ``(d_s, pivot)`` with ``pivot`` an np.float32 (−1.0 when H
         held fewer than ``rank`` points).
@@ -293,8 +456,16 @@ class Executor:
         across ``run_filter_round`` calls. Default: nothing to release."""
 
     def mrg(self, source, k: int, *, capacity: int | None = None,
-            impl: str = "auto", chunk: int | None = None):
-        """Full MRG on this executor. Returns ``(centers, radius2, rounds)``."""
+            impl: str = "auto", chunk: int | None = None,
+            objective: Objective | None = None):
+        """Full MRG on this executor. Returns ``(centers, radius2,
+        rounds)`` — or, with a weighted ``objective``, ``(centers,
+        radius2, rounds, weights (k,))``: the same rounds run weighted
+        (``weighted_gon_block_fn`` + ``combine_weighted``), so the k
+        centers arrive with their cluster weights (a weighted coreset).
+        An ``outliers=z`` objective scores ``radius2`` as the top-(z+1)
+        evaluation fold; the default objective is byte-for-byte the
+        pre-objective orchestration."""
         source = as_source(source)
         if capacity is None:
             capacity = self.default_capacity(source, k)
@@ -302,11 +473,21 @@ class Executor:
         # all of n, not inside combine's reduction loop (warn=False:
         # combine's own check owns the §3.3 warning).
         check_combine_capacity(k, capacity, warn=False)
+        if objective is not None and objective.weighted:
+            wfn = weighted_gon_block_fn(k, impl, chunk)
+            centers, valid, cw = self.run_blocks(wfn, source,
+                                                 objective=objective)
+            centers, w, _, extra = self.combine_weighted(
+                centers, valid, cw, k, capacity, impl=impl, chunk=chunk)
+            r2 = self.radius2(source, centers, impl=impl, chunk=chunk,
+                              objective=objective)
+            return centers, r2, 2 + extra, w
         fn = gon_block_fn(k, impl, chunk)
         centers, valid = self.run_blocks(fn, source)
         centers, extra = self.combine(centers, valid, k, capacity,
                                       impl=impl, chunk=chunk)
-        r2 = self.radius2(source, centers, impl=impl, chunk=chunk)
+        r2 = self.radius2(source, centers, impl=impl, chunk=chunk,
+                          objective=objective)
         return centers, r2, 2 + extra
 
 
@@ -320,23 +501,39 @@ class SimExecutor(Executor):
             raise ValueError(f"need at least one machine, got m={m}")
         self.m = m
 
-    def run_blocks(self, fn: BlockFn, source):
-        x = as_source(source).materialize()
+    def run_blocks(self, fn, source, *, objective: Objective | None = None):
+        src = as_source(source)
+        x = src.materialize()
         blocked, mask = _block(x, self.m)
+        if objective is not None and objective.weighted:
+            w = jnp.asarray(weights_of(src, 0, src.n))
+            wb = jnp.pad(w, (0, mask.size - w.shape[0]))
+            return _run_round_w(blocked, mask, wb.reshape(mask.shape), fn)
         return _run_round(blocked, mask, fn)
 
     def default_capacity(self, source, k: int) -> int:
         return max(-(-source.n // self.m), 2 * k)
 
-    def radius2(self, source, centers, *, impl="auto", chunk=None):
+    def radius2(self, source, centers, *, impl="auto", chunk=None,
+                objective: Objective | None = None):
         # Device-resident input: one single-pass fold (avoids re-blocking
         # an array that is already in HBM). Returns the squared max
         # directly — the sqrt→square round-trip of ``covering_radius`` is
         # lossy in f32 and would break cross-path bitwise parity.
+        src = as_source(source)
         # reprolint: disable=R002 -- SimExecutor simulates m machines on one device; inputs are device-resident by contract
-        _, d2 = ops.assign_nearest(source.materialize(), centers, impl=impl,
+        _, d2 = ops.assign_nearest(src.materialize(), centers, impl=impl,
                                    chunk=chunk)
-        return jnp.max(d2)
+        if _is_plain(objective):
+            return jnp.max(d2)
+        # Same eager d2; the objective only changes the reduction (top-1
+        # of a multiset == its max, so weighted unit runs keep the bits).
+        if objective.weighted:
+            w = jnp.asarray(weights_of(src, 0, src.n))
+            d2 = jnp.where(w > 0, d2, _NEG)
+        r = objective.outliers + 1
+        top = engine.merge_top_k(engine.top_k_init(r), d2, r)
+        return jnp.maximum(top[r - 1], jnp.float32(0.0))
 
     def _blocked_for(self, source):
         """Materialize + block once per source object (EIM calls the
@@ -361,10 +558,12 @@ class SimExecutor(Executor):
         self._eim_blocked_cache = None
 
     def run_filter_round(self, source, s_new, d_s, h_mask, rank, *,
-                         impl="auto", chunk=None):
+                         impl="auto", chunk=None, weights=None):
         """Vmapped-machines EIM round: each of the m blocks updates its
         slice of d(x,S) against S_new and emits a per-machine top-k; the
-        host merge of those tops is the simulated shuffle."""
+        host merge of those tops is the simulated shuffle. ``weights``
+        (optional, aligned with ``d_s``) gates ``w <= 0`` rows out of
+        pivot candidacy — ``None`` runs the exact pre-weights program."""
         n, blocked = self._blocked_for(source)              # (m, per, d)
         m, per = blocked.shape[0], blocked.shape[1]
         pad = m * per - n
@@ -374,6 +573,11 @@ class SimExecutor(Executor):
                       constant_values=_BIG).reshape(m, per)
         h_b = jnp.pad(jnp.asarray(h_mask), (0, pad),
                       constant_values=False).reshape(m, per)
+        w_b = None
+        if weights is not None:
+            # Padded lanes at weight 0 — gated out of candidacy like H=0.
+            w_b = jnp.pad(jnp.asarray(np.asarray(weights, np.float32)),
+                          (0, pad)).reshape(m, per)
         have_s = s_new is not None and len(s_new) > 0
         use_pallas, _ = engine._resolve(impl)
         if have_s:
@@ -387,7 +591,8 @@ class SimExecutor(Executor):
                 # blocking-invariant), so this is bitwise the vmapped ref.
                 d_flat, top = engine.filter_tile_update(
                     blocked.reshape(m * per, -1), c, d_b.reshape(-1),
-                    h_b.reshape(-1), rank=rank, impl=impl, chunk=chunk)
+                    h_b.reshape(-1), rank=rank, impl=impl, chunk=chunk,
+                    w_blk=None if w_b is None else w_b.reshape(-1))
                 d_s[:] = np.asarray(d_flat[:n])
                 top = engine.merge_top_k(engine.top_k_init(rank), top, rank)
                 return d_s, _pivot_from_top(top, rank)
@@ -398,7 +603,8 @@ class SimExecutor(Executor):
 
             d_b = jax.vmap(update)(blocked, d_b)
             d_s[:] = np.asarray(d_b.reshape(-1)[:n])
-        cand = jnp.where(h_b, d_b, _NEG)
+        cand_mask = h_b if w_b is None else h_b & (w_b > 0)
+        cand = jnp.where(cand_mask, d_b, _NEG)
         r = min(rank, per)
         tops = jax.vmap(lambda v: jax.lax.top_k(v, r)[0])(cand)  # (m, r)
         top = jax.lax.top_k(tops.reshape(-1), rank)[0]
@@ -435,11 +641,20 @@ class HostStreamExecutor(Executor):
     def _blocks(self, source, rows: int):
         return engine._source_blocks(source, rows, self.prefetch)
 
-    def run_blocks(self, fn: BlockFn, source):
+    def run_blocks(self, fn, source, *, objective: Objective | None = None):
         rows = self.rows_for(source)
-        outs = []
+        weighted = objective is not None and objective.weighted
+        outs, wouts = [], []
+        off = 0
         for blk in self._blocks(source, rows):
             nb = blk.shape[0]
+            w_blk = None
+            if weighted:
+                # Padded lanes carry weight 0 — like mask=False, they can
+                # never contribute to the per-cluster weight sums.
+                w_np = np.zeros((rows,), np.float32)
+                w_np[:nb] = engine._source_weights(source, off, nb)
+                w_blk = jnp.asarray(w_np)
             if nb < rows:
                 # Pad the ragged final block to the common shape and mask
                 # the padding off: one compilation of the per-machine GON
@@ -448,21 +663,36 @@ class HostStreamExecutor(Executor):
                 # sit at the _NEG sentinel and can never be selected).
                 blk = jnp.pad(blk, ((0, rows - nb), (0, 0)))
             mask = jnp.arange(rows) < nb
-            outs.append(fn(blk, mask))                     # (k, d) each
+            if weighted:
+                c, cw = fn(blk, mask, w_blk)               # (k, d), (k,)
+                outs.append(c)
+                wouts.append(cw)
+            else:
+                outs.append(fn(blk, mask))                 # (k, d) each
+            off += nb
         centers = jnp.concatenate(outs, axis=0)            # (M*k, d)
         valid = jnp.ones((centers.shape[0],), bool)
+        if weighted:
+            return centers, valid, jnp.concatenate(wouts, axis=0)
         return centers, valid
 
     def default_capacity(self, source, k: int) -> int:
         return max(self.rows_for(source), 2 * k)
 
-    def radius2(self, source, centers, *, impl="auto", chunk=None):
+    def radius2(self, source, centers, *, impl="auto", chunk=None,
+                objective: Objective | None = None):
+        if not _is_plain(objective):
+            top = engine.fold_top_k_min_d2(
+                source, centers, objective.outliers + 1, impl=impl,
+                chunk=chunk, block_rows=self.rows_for(source),
+                prefetch=self.prefetch, weighted=objective.weighted)
+            return jnp.maximum(top[objective.outliers], jnp.float32(0.0))
         return engine.fold_min_d2(source, centers, impl=impl, chunk=chunk,
                                   block_rows=self.rows_for(source),
                                   prefetch=self.prefetch)
 
     def run_filter_round(self, source, s_new, d_s, h_mask, rank, *,
-                         impl="auto", chunk=None):
+                         impl="auto", chunk=None, weights=None):
         """EIM Rounds 2–3 as one out-of-core fold: each super-shard's
         d(x, S_new) update and its contribution to Select's top-k happen
         while the shard is device-resident; only the shard, S_new, and the
@@ -475,7 +705,11 @@ class HostStreamExecutor(Executor):
         to the resolved ``rows`` shape — padded lanes carry ``H=False``
         (never enter the pivot top-k) and their distance update is
         discarded — so one compilation of the fused block kernel serves
-        all iterations over a given view, ragged tail included."""
+        all iterations over a given view, ragged tail included.
+
+        ``weights`` (optional, aligned with ``d_s``) gates ``w <= 0``
+        rows out of pivot candidacy; ``None`` (every plain caller) keeps
+        the block programs byte-identical to the pre-weights ones."""
         rows = self.rows_for(source)
         have_s = s_new is not None and len(s_new) > 0
         if have_s:
@@ -486,6 +720,11 @@ class HostStreamExecutor(Executor):
             nb = blk.shape[0]
             d_np = d_s[off:off + nb]
             h_np = h_mask[off:off + nb]
+            w_blk = None
+            if weights is not None:
+                w_np = np.zeros((rows,), np.float32)
+                w_np[:nb] = np.asarray(weights[off:off + nb], np.float32)
+                w_blk = jnp.asarray(w_np)
             if nb < rows:
                 pad = rows - nb
                 blk = jnp.pad(blk, ((0, pad), (0, 0)))
@@ -496,11 +735,11 @@ class HostStreamExecutor(Executor):
             h_blk = jnp.asarray(h_np)
             if have_s:
                 d_blk, top = _eim_filter_block(blk, c, d_blk, h_blk, top,
-                                               rank=rank, impl=impl,
+                                               w_blk, rank=rank, impl=impl,
                                                chunk=chunk)
                 d_s[off:off + nb] = np.asarray(d_blk)[:nb]
             else:
-                top = _eim_pivot_block(d_blk, h_blk, top, rank=rank)
+                top = _eim_pivot_block(d_blk, h_blk, top, w_blk, rank=rank)
             off += nb
         return d_s, _pivot_from_top(top, rank)
 
@@ -612,6 +851,24 @@ class MeshExecutor(Executor):
         return stream_device(engine.zip_shard_blocks(sh.shards, rows),
                              self.prefetch, put=put)
 
+    def _stream_steps_w(self, sh: ShardedSource, rows: int):
+        """Weighted sibling of ``_stream_steps``: each step additionally
+        ships the shards' per-row weight slices (padded lanes at weight
+        0), yielding ``(pts, mask, w, counts)`` global arrays."""
+        mesh, pspec = self.mesh, self._pspec()
+
+        def put(step):
+            pts, wts, counts = step          # (S, rows, d), (S, rows), (S,)
+            mask = np.arange(rows)[None, :] < counts[:, None]
+            g_p = compat.global_array_from_shards(mesh, pspec, list(pts))
+            g_m = compat.global_array_from_shards(mesh, pspec, list(mask))
+            g_w = compat.global_array_from_shards(mesh, pspec, list(wts))
+            return g_p, g_m, g_w, counts
+
+        return stream_device(
+            engine.zip_shard_blocks(sh.shards, rows, with_weights=True),
+            self.prefetch, put=put)
+
     def _replicated(self, arr) -> jnp.ndarray:
         return jax.device_put(jnp.asarray(arr, jnp.float32),
                               NamedSharding(self.mesh, P()))
@@ -630,6 +887,22 @@ class MeshExecutor(Executor):
             def step(pts, mask):                    # local (rows, d), (rows,)
                 c = fn(pts, mask)                   # (k, d)
                 return c[None], jnp.any(mask)[None]
+
+            self._step_cache[key] = jax.jit(step)
+        return self._step_cache[key]
+
+    def _round1w_step(self, fn: WeightedBlockFn):
+        key = ("round1w", fn)
+        if key not in self._step_cache:
+            pspec = self._pspec()
+
+            @functools.partial(compat.shard_map, mesh=self.mesh,
+                               in_specs=(pspec, pspec, pspec),
+                               out_specs=(pspec, pspec, pspec),
+                               check_replication=False)
+            def step(pts, mask, w):        # local (rows, d), (rows,), (rows,)
+                c, cw = fn(pts, mask, w)   # (k, d), (k,)
+                return c[None], cw[None], jnp.any(mask)[None]
 
             self._step_cache[key] = jax.jit(step)
         return self._step_cache[key]
@@ -672,21 +945,31 @@ class MeshExecutor(Executor):
 
     # -- the Executor interface, sharded ------------------------------------
 
-    def run_blocks(self, fn: BlockFn, source):
+    def run_blocks(self, fn, source, *, objective: Objective | None = None):
         """Round 1 over the mesh machines: every step feeds each shard's
         next (padded, masked) block into its own address space and runs
         one shard_map of per-shard GONs. The center union is ordered
         shard-major (shard 0's blocks first) — global row order, exactly
         the sequential ``HostStreamExecutor`` union for the same blocking.
-        """
+        Weighted objectives run the 3-operand sibling step, shipping the
+        shards' weight slices through the same ring."""
         sh = self._sharded(source)
         rows = self.rows_for(sh)
-        step = self._round1_step(fn)
-        cs, vs = [], []
-        for pts, mask, _ in self._stream_steps(sh, rows):
-            c, v = step(pts, mask)                  # (S, k, d), (S,)
-            cs.append(np.asarray(c))
-            vs.append(np.asarray(v))
+        weighted = objective is not None and objective.weighted
+        cs, vs, ws = [], [], []
+        if weighted:
+            step = self._round1w_step(fn)
+            for pts, mask, w, _ in self._stream_steps_w(sh, rows):
+                c, cw, v = step(pts, mask, w)       # (S,k,d), (S,k), (S,)
+                cs.append(np.asarray(c))
+                ws.append(np.asarray(cw))
+                vs.append(np.asarray(v))
+        else:
+            step = self._round1_step(fn)
+            for pts, mask, _ in self._stream_steps(sh, rows):
+                c, v = step(pts, mask)              # (S, k, d), (S,)
+                cs.append(np.asarray(c))
+                vs.append(np.asarray(v))
         if not cs:
             raise ValueError("cannot run round 1 over an empty source")
         cent = np.stack(cs, axis=1)                 # (S, B, k, d) after swap
@@ -694,12 +977,16 @@ class MeshExecutor(Executor):
         k = cent.shape[2]
         centers = jnp.asarray(cent.reshape(-1, cent.shape[-1]))   # (S·B·k, d)
         valid = jnp.asarray(np.repeat(val.reshape(-1), k))
+        if weighted:
+            wgt = np.stack(ws, axis=1)              # (S, B, k)
+            return centers, valid, jnp.asarray(wgt.reshape(-1))
         return centers, valid
 
     def default_capacity(self, source, k: int) -> int:
         return max(self.rows_for(source), 2 * k)
 
-    def radius2(self, source, centers, *, impl="auto", chunk=None):
+    def radius2(self, source, centers, *, impl="auto", chunk=None,
+                objective: Objective | None = None):
         """Squared covering radius over the sharded stream.
 
         Runs the *eager* per-block ``engine.fold_min_d2`` over the
@@ -718,14 +1005,29 @@ class MeshExecutor(Executor):
             # reprolint: disable=R002 -- ArraySource is already in HBM; materialize() is a zero-copy unwrap
             _, d2 = ops.assign_nearest(src.materialize(), centers,
                                        impl=impl, chunk=chunk)
-            return jnp.max(d2)
+            if _is_plain(objective):
+                return jnp.max(d2)
+            # Same eager d2 bits; the objective only changes the reduction
+            # (top-1 of a multiset == its max, preserving unit-weight bits).
+            if objective.weighted:
+                w = jnp.asarray(weights_of(src, 0, src.n))
+                d2 = jnp.where(w > 0, d2, _NEG)
+            r = objective.outliers + 1
+            top = engine.merge_top_k(engine.top_k_init(r), d2, r)
+            return jnp.maximum(top[r - 1], jnp.float32(0.0))
         sh = self._sharded(src)
+        if not _is_plain(objective):
+            top = engine.fold_top_k_min_d2(
+                sh, centers, objective.outliers + 1, impl=impl, chunk=chunk,
+                block_rows=self.rows_for(sh), prefetch=self.prefetch,
+                weighted=objective.weighted)
+            return jnp.maximum(top[objective.outliers], jnp.float32(0.0))
         return engine.fold_min_d2(sh, centers, impl=impl, chunk=chunk,
                                   block_rows=self.rows_for(sh),
                                   prefetch=self.prefetch)
 
     def run_filter_round(self, source, s_new, d_s, h_mask, rank, *,
-                         impl="auto", chunk=None):
+                         impl="auto", chunk=None, weights=None):
         """EIM Rounds 2–3 over the mesh machines: each step updates every
         shard's slice of d(x, S_new) in its own address space and emits a
         per-shard top-k; the host merge of the per-shard tops is the
@@ -734,6 +1036,15 @@ class MeshExecutor(Executor):
         compacted ``IndexedSource`` view — it is split into contiguous
         machine ranges on the fly; ``d_s``/``h_mask`` hold the per-view
         slices, updated in place exactly like the other executors."""
+        if weights is not None:
+            # Weighted EIM needs per-shard weight slices riding the state
+            # ring; no weighted caller exists yet (kz_center solves on the
+            # host-resident coreset), so fail loudly rather than silently
+            # ignoring the weights.
+            raise NotImplementedError(
+                "MeshExecutor.run_filter_round does not support weights "
+                "yet — use SimExecutor or HostStreamExecutor for weighted "
+                "filter rounds")
         sh = self._sharded(source)
         rows = self.rows_for(sh)
         S = sh.num_shards
@@ -787,14 +1098,18 @@ class MeshExecutor(Executor):
     # -- MRG: fused device program, or the streamed sharded orchestration ---
 
     def mrg(self, source, k: int, *, capacity: int | None = None,
-            impl: str = "auto", chunk: int | None = None):
+            impl: str = "auto", chunk: int | None = None,
+            objective: Objective | None = None):
         """MRG on the mesh. Device-resident inputs (raw arrays /
         ``ArraySource``) run the fused shard_map program (capacity is
         fixed by the mesh blocking there — ``capacity=`` raises);
         sharded / host-backed sources run the streamed per-shard rounds
-        with the shared Lemma-3 ``combine`` (``capacity`` honored)."""
+        with the shared Lemma-3 ``combine`` (``capacity`` honored).
+        Non-plain objectives always take the streamed orchestration —
+        the fused program has no weight operand, and grafting one in
+        would recompile (and risk perturbing) the plain device path."""
         src = as_source(source)
-        if isinstance(src, ArraySource):
+        if isinstance(src, ArraySource) and _is_plain(objective):
             if capacity is not None:
                 raise ValueError(
                     "MeshExecutor's machine capacity on the device path is "
@@ -803,7 +1118,8 @@ class MeshExecutor(Executor):
                     "hierarchical, or pass a ShardedSource / host-backed "
                     "source for the streamed path")
             return self._mrg_fused(src, k, impl=impl, chunk=chunk)
-        return super().mrg(src, k, capacity=capacity, impl=impl, chunk=chunk)
+        return super().mrg(src, k, capacity=capacity, impl=impl, chunk=chunk,
+                           objective=objective)
 
     def _mrg_fused(self, source, k: int, *, impl: str = "auto",
                    chunk: int | None = None):

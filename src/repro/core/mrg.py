@@ -55,6 +55,9 @@ class MRGResult(NamedTuple):
     centers: jnp.ndarray   # (k, d)
     radius2: jnp.ndarray   # () squared covering radius over ALL points
     rounds: int            # number of GON levels used (2 = classic MRG)
+    # (k,) per-cluster weight sums when run with a weighted Objective (the
+    # centers then form a weighted coreset); None on plain k-center runs.
+    weights: jnp.ndarray | None = None
 
 
 # ---------------------------------------------------------------------------
@@ -88,7 +91,7 @@ def plan_rounds(n: int, m: int, k: int, capacity: int) -> int:
 
 def mrg(points, k: int, *, executor: Executor | None = None, m: int = 50,
         capacity: int | None = None, impl: str = "auto",
-        chunk: int | None = None) -> MRGResult:
+        chunk: int | None = None, objective=None) -> MRGResult:
     """Paper Algorithm 1 over any point source and machine substrate.
 
     ``points`` is anything ``repro.data.source.as_source`` accepts: an
@@ -118,6 +121,12 @@ def mrg(points, k: int, *, executor: Executor | None = None, m: int = 50,
     >>> res = mrg(x, 4, m=8)          # 8 simulated machines, 2 rounds
     >>> res.centers.shape, res.rounds
     ((4, 2), 2)
+
+    ``objective`` (a ``core.executor.Objective``; default ``None`` = plain
+    k-center, byte-for-byte the historical orchestration) generalizes the
+    run: ``weighted=True`` threads the source's per-row weights through
+    every round and fills ``MRGResult.weights`` with the per-cluster
+    sums; ``outliers=z`` scores ``radius2`` with the top-(z+1) fold.
     """
     streamed = is_source(points) and not isinstance(points, ArraySource)
     if streamed:
@@ -129,8 +138,20 @@ def mrg(points, k: int, *, executor: Executor | None = None, m: int = 50,
             else ArraySource(points)
     if executor is None:
         executor = (HostStreamExecutor() if streamed else SimExecutor(m=m))
-    centers, r2, rounds = executor.mrg(source, k, capacity=capacity,
-                                       impl=impl, chunk=chunk)
+    if objective is not None and objective.weighted:
+        centers, r2, rounds, w = executor.mrg(
+            source, k, capacity=capacity, impl=impl, chunk=chunk,
+            objective=objective)
+        return MRGResult(centers, r2, rounds, w)
+    if objective is None:
+        # Plain runs call without the kwarg so custom Executor subclasses
+        # written against the pre-objective signature keep working.
+        centers, r2, rounds = executor.mrg(source, k, capacity=capacity,
+                                           impl=impl, chunk=chunk)
+    else:
+        centers, r2, rounds = executor.mrg(source, k, capacity=capacity,
+                                           impl=impl, chunk=chunk,
+                                           objective=objective)
     return MRGResult(centers, r2, rounds)
 
 

@@ -9,9 +9,13 @@ from .source import (  # noqa: F401
     ShardedSource,
     SliceSource,
     SyntheticSource,
+    WeightedSource,
     as_device_array,
     as_source,
+    has_weights,
     is_source,
     shard_source,
     synthetic_source,
+    take_weights,
+    weights_of,
 )

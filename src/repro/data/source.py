@@ -38,6 +38,18 @@ Sources:
                         genuinely distributed inputs. ``MeshExecutor``
                         streams each shard into its own mesh address
                         space, so no host ever holds all n rows.
+  * ``WeightedSource`` — per-row f32 weights attached to any source (the
+                        weighted instances of Ceccarello et al.
+                        1802.09205: coreset points carrying cluster
+                        sizes). Weights ride the same blocking as the
+                        points — ``weights_of(start, rows)`` returns the
+                        block's weight slice — and every *unweighted*
+                        source gets the default-ones path through the
+                        module-level ``weights_of``/``take_weights``
+                        helpers, so weighted folds run on any source.
+                        Views compose: an ``IndexedSource``/
+                        ``SliceSource``/``ShardedSource`` over a weighted
+                        parent serves its rows' weights through the view.
 
 ``blocks(block_rows)`` yields float32 device arrays of shape
 ``(<= block_rows, d)`` covering rows ``[0, n)`` in order; it may be called
@@ -123,6 +135,45 @@ def _check_rows(block_rows: int) -> int:
     if block_rows < 1:
         raise ValueError(f"block_rows must be >= 1, got {block_rows}")
     return int(block_rows)
+
+
+def has_weights(source) -> bool:
+    """True iff ``source`` carries per-row weights (a ``WeightedSource`` or
+    a view over one). Duck-typed so the check is safe on any source."""
+    return bool(getattr(source, "has_weights", False))
+
+
+def weights_of(source, start: int, rows: int) -> np.ndarray:
+    """f32 weights of rows ``[start, start + rows)`` of ``source``.
+
+    This is *the* default-ones path: unweighted sources (no ``weights_of``
+    method) get ``np.ones(rows)``, so every weighted fold runs unchanged on
+    every existing source — with unit weights it computes the plain
+    objective bit-for-bit (the masks it builds from ``w > 0`` are the
+    all-True masks of the unweighted program)."""
+    fn = getattr(source, "weights_of", None)
+    if fn is None:
+        return np.ones((int(rows),), np.float32)
+    w = np.asarray(fn(start, rows), np.float32).reshape(-1)
+    if w.shape[0] != rows:
+        raise ValueError(
+            f"weights_of({start}, {rows}) returned {w.shape[0]} weights")
+    return w
+
+
+def take_weights(source, indices) -> np.ndarray:
+    """f32 weights of the gathered rows ``indices`` (ones when unweighted
+    — the gather-side sibling of ``weights_of``)."""
+    fn = getattr(source, "take_weights", None)
+    idx = np.asarray(indices, np.int64).reshape(-1)
+    if fn is None:
+        return np.ones((idx.size,), np.float32)
+    w = np.asarray(fn(idx), np.float32).reshape(-1)
+    if w.shape[0] != idx.size:
+        raise ValueError(
+            f"take_weights returned {w.shape[0]} weights for "
+            f"{idx.size} indices")
+    return w
 
 
 def stream_device(host_blocks: Iterator[np.ndarray],
@@ -490,6 +541,18 @@ class IndexedSource:
         idx = _check_take_indices(indices, self.n)
         return self._parent.take(self._idx[idx])
 
+    @property
+    def has_weights(self) -> bool:
+        return has_weights(self._parent)
+
+    def weights_of(self, start: int, rows: int) -> np.ndarray:
+        stop = min(start + rows, self.n)
+        return take_weights(self._parent, self._idx[start:stop])
+
+    def take_weights(self, indices) -> np.ndarray:
+        idx = _check_take_indices(indices, self.n)
+        return take_weights(self._parent, self._idx[idx])
+
     def materialize(self) -> jnp.ndarray:
         return jnp.asarray(self._parent.take(self._idx))
 
@@ -571,6 +634,19 @@ class SliceSource:
         """Gather view rows — offsets through to the parent."""
         idx = _check_take_indices(indices, self.n)
         return self._parent.take(idx + self._start)
+
+    @property
+    def has_weights(self) -> bool:
+        return has_weights(self._parent)
+
+    def weights_of(self, start: int, rows: int) -> np.ndarray:
+        stop = min(start + rows, self.n)
+        return weights_of(self._parent, self._start + start,
+                          max(stop - start, 0))
+
+    def take_weights(self, indices) -> np.ndarray:
+        idx = _check_take_indices(indices, self.n)
+        return take_weights(self._parent, idx + self._start)
 
     def materialize(self) -> jnp.ndarray:
         return jnp.asarray(self._parent.take(
@@ -695,9 +771,110 @@ class ShardedSource:
                 np.float32)
         return out
 
+    @property
+    def has_weights(self) -> bool:
+        return any(has_weights(s) for s in self._shards)
+
+    def weights_of(self, start: int, rows: int) -> np.ndarray:
+        stop = min(start + rows, self.n)
+        out = np.ones((max(stop - start, 0),), np.float32)
+        pos = start
+        while pos < stop:
+            s = int(self._locate(np.asarray([pos]))[0])
+            off = int(self._offsets[s])
+            hi = min(stop, int(self._offsets[s + 1]))
+            out[pos - start:hi - start] = weights_of(
+                self._shards[s], pos - off, hi - pos)
+            pos = hi
+        return out
+
+    def take_weights(self, indices) -> np.ndarray:
+        idx = _check_take_indices(indices, self.n)
+        out = np.ones((idx.size,), np.float32)
+        shard = self._locate(idx)
+        for s in np.unique(shard):
+            sel = shard == s
+            out[sel] = take_weights(self._shards[s],
+                                    idx[sel] - self._offsets[s])
+        return out
+
     def materialize(self) -> jnp.ndarray:
         return jnp.concatenate(
             [jnp.asarray(b) for b in self.host_blocks(1 << 20)], axis=0)
+
+
+class WeightedSource:
+    """Any source plus per-row f32 weights — a weighted instance.
+
+    The weighted objectives of Ceccarello et al. (1802.09205) operate on
+    points carrying multiplicities (coreset points standing in for their
+    clusters). ``WeightedSource`` attaches a host-resident ``(n,)`` f32
+    weight vector to an arbitrary parent source; the points themselves are
+    delegated untouched (same blocks, same bits), and consumers fetch the
+    weight slice aligned with each block via ``weights_of(start, rows)``.
+    Weights are O(n) *host* floats — 4 bytes/row, the same budget class as
+    the streamed EIM's host-resident relations — never device-resident as
+    a whole.
+
+    Weights must be finite and non-negative; ``w == 0`` marks a row as
+    absent from the instance (weighted folds gate it out of candidacy).
+    """
+
+    def __init__(self, parent, weights):
+        parent = as_source(parent)
+        w = np.asarray(weights, np.float32).reshape(-1)
+        if w.shape[0] != parent.n:
+            raise ValueError(
+                f"weights have {w.shape[0]} rows, source has {parent.n}")
+        if w.size and (not np.all(np.isfinite(w)) or w.min() < 0):
+            raise ValueError("weights must be finite and non-negative")
+        self._parent = parent
+        self._w = w
+
+    @property
+    def parent(self):
+        return self._parent
+
+    @property
+    def has_weights(self) -> bool:
+        return True
+
+    @property
+    def n(self) -> int:
+        return self._parent.n
+
+    @property
+    def d(self) -> int:
+        return self._parent.d
+
+    def weights_of(self, start: int, rows: int) -> np.ndarray:
+        return self._w[start:start + rows]
+
+    def take_weights(self, indices) -> np.ndarray:
+        return self._w[_check_take_indices(indices, self.n)]
+
+    def host_blocks(self, block_rows: int) -> Iterator[np.ndarray]:
+        if hasattr(self._parent, "host_blocks"):
+            yield from self._parent.host_blocks(block_rows)
+        else:
+            for blk in self._parent.blocks(block_rows):
+                yield np.asarray(blk, np.float32)
+
+    def blocks(self, block_rows: int, *,
+               prefetch: int = DEFAULT_PREFETCH) -> Iterator[jnp.ndarray]:
+        try:
+            return self._parent.blocks(block_rows, prefetch=prefetch)
+        except TypeError:
+            return self._parent.blocks(block_rows)
+
+    def row(self, idx: int) -> np.ndarray:
+        return self._parent.row(idx)
+
+    def take(self, indices) -> np.ndarray:
+        return self._parent.take(indices)
+
+    def materialize(self) -> jnp.ndarray:
+        return self._parent.materialize()
 
 
 def _shard_count(shards, shard_axes=None) -> int:

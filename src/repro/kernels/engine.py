@@ -662,7 +662,7 @@ def host_blocks_of(source, rows: int):
         yield np.asarray(blk, np.float32)
 
 
-def zip_shard_blocks(shards, rows: int):
+def zip_shard_blocks(shards, rows: int, *, with_weights: bool = False):
     """Per-shard fold entry point: align the shards' host streams into
     lockstep steps.
 
@@ -673,6 +673,12 @@ def zip_shard_blocks(shards, rows: int):
     contributes all-padding steps with ``counts == 0``. The host working
     set is one step — ``S · rows · d`` floats — never a full shard, and
     never n.
+
+    ``with_weights=True`` inserts each shard's per-row f32 weights between
+    the points and the counts — ``(pts, w (S, rows), counts)``, padded
+    rows at weight 0 — fetched per shard through ``weights_of`` (default
+    ones), tracked by per-shard row cursors so the slices stay aligned
+    with the blocks.
     """
     if rows < 1:
         raise ValueError(f"rows must be >= 1, got {rows}")
@@ -681,8 +687,10 @@ def zip_shard_blocks(shards, rows: int):
         raise ValueError("zip_shard_blocks needs at least one shard")
     d = shards[0].d
     its = [host_blocks_of(s, rows) for s in shards]
+    pos = [0] * len(shards)
     while True:
         pts = np.zeros((len(shards), rows, d), np.float32)
+        w = np.zeros((len(shards), rows), np.float32) if with_weights else None
         counts = np.zeros((len(shards),), np.int64)
         any_rows = False
         for s, it in enumerate(its):
@@ -695,12 +703,18 @@ def zip_shard_blocks(shards, rows: int):
                     f"shard {s} yielded a {nb}-row block for "
                     f"block_rows={rows}")
             pts[s, :nb] = blk
+            if with_weights:
+                w[s, :nb] = _source_weights(shards[s], pos[s], nb)
+            pos[s] += nb
             counts[s] = nb
             if nb:
                 any_rows = True
         if not any_rows:
             return
-        yield pts, counts
+        if with_weights:
+            yield pts, w, counts
+        else:
+            yield pts, counts
 
 
 def _source_blocks(source, rows: int, prefetch: int | None):
@@ -712,6 +726,22 @@ def _source_blocks(source, rows: int, prefetch: int | None):
         except TypeError:
             pass
     return source.blocks(rows)
+
+
+def _source_weights(source, start: int, rows: int) -> np.ndarray:
+    """Per-row f32 weights of rows ``[start, start + rows)``, duck-typed
+    (this module imports nothing from ``repro.data`` — cycle direction);
+    sources without a ``weights_of`` method get the default-ones path.
+    ``repro.data.source.weights_of`` is the public form of the same
+    contract."""
+    fn = getattr(source, "weights_of", None)
+    if fn is None:
+        return np.ones((int(rows),), np.float32)
+    w = np.asarray(fn(start, rows), np.float32).reshape(-1)
+    if w.shape[0] != rows:
+        raise ValueError(
+            f"weights_of({start}, {rows}) returned {w.shape[0]} weights")
+    return w
 
 
 # -- fused Pallas tiles for the streamed folds (kernels/fused_stream.py) ----
@@ -741,11 +771,13 @@ def _padded_rows(rows: int, bn: int) -> int:
 
 
 def _filter_update_tiles(blk, c, d_blk, h_blk, rank: int, chunk: int | None,
-                         interpret: bool):
+                         interpret: bool, w_blk=None):
     """Traced helper: pad one block to the tile grid and run the fused
     filter kernel. Returns ``(d_new (rows,), tops (tiles, rank))`` — the
     d(x,S) min-update for every input row plus each tile's descending
-    top-``rank`` of the H-masked candidates."""
+    top-``rank`` of the H-masked candidates. ``w_blk`` (optional per-row
+    weights) routes to the weighted sibling kernel, whose extra VMEM
+    operand gates ``w <= 0`` rows out of candidacy."""
     rows = blk.shape[0]
     bn = _stream_bn(rows, chunk)
     rows_p = _padded_rows(rows, bn)
@@ -755,13 +787,19 @@ def _filter_update_tiles(blk, c, d_blk, h_blk, rank: int, chunk: int | None,
     # never enter the top-k.
     d_p = jnp.pad(d_blk, (0, pad), constant_values=_BIG)
     h_p = jnp.pad(h_blk, (0, pad)).astype(jnp.float32)
-    d_new, tops = fused_stream.fused_filter_blocks(
-        blk_p, c, d_p, h_p, rank=rank, bn=bn, interpret=interpret)
+    if w_blk is None:
+        d_new, tops = fused_stream.fused_filter_blocks(
+            blk_p, c, d_p, h_p, rank=rank, bn=bn, interpret=interpret)
+    else:
+        w_p = jnp.pad(w_blk, (0, pad)).astype(jnp.float32)
+        d_new, tops = fused_stream.fused_filter_blocks_w(
+            blk_p, c, d_p, h_p, w_p, rank=rank, bn=bn, interpret=interpret)
     return d_new[:rows], tops
 
 
 def filter_tile_update(blk, c, d_blk, h_blk, *, rank: int,
-                       impl: str = "auto", chunk: int | None = None):
+                       impl: str = "auto", chunk: int | None = None,
+                       w_blk=None):
     """One machine-block's share of EIM Rounds 2–3 (traceable, unjitted —
     the executors' shard_map/vmap programs and ``eim_filter_block`` wrap
     it): ``d_new = min(d_blk, d(blk, c)²)`` plus the block's descending
@@ -770,46 +808,70 @@ def filter_tile_update(blk, c, d_blk, h_blk, *, rank: int,
     The ref branch is the oracle; the Pallas branch fuses the whole update
     into the streamed tile kernel and reduces the per-tile tops (top-k
     *values* are blocking-invariant, so the results are bitwise equal).
+    ``w_blk`` (optional per-row f32 weights) additionally gates ``w <= 0``
+    rows out of top-k candidacy; ``w_blk=None`` runs the exact pre-weights
+    program.
     """
     use_pallas, interpret = _resolve(impl)
     r = min(rank, d_blk.shape[0])
     if use_pallas:
         d_new, tops = _filter_update_tiles(blk, c, d_blk, h_blk, rank,
-                                           chunk, interpret)
+                                           chunk, interpret, w_blk=w_blk)
         return d_new, jax.lax.top_k(tops.reshape(-1), r)[0]
     _, dn = assign_nearest(blk, c, impl=impl, chunk=chunk)
     d_new = jnp.minimum(d_blk, dn)
-    cand = jnp.where(h_blk, d_new, _NEG)
+    if w_blk is None:
+        cand = jnp.where(h_blk, d_new, _NEG)
+    else:
+        cand = jnp.where(h_blk & (w_blk > 0), d_new, _NEG)
     return d_new, jax.lax.top_k(cand, r)[0]
 
 
 @functools.partial(jax.jit, static_argnames=("rank", "impl", "chunk"))
-def eim_filter_block(blk, c, d_blk, h_blk, top, *, rank: int, impl: str,
-                     chunk: int | None = None):
+def eim_filter_block(blk, c, d_blk, h_blk, top, w_blk=None, *, rank: int,
+                     impl: str, chunk: int | None = None):
     """One super-shard's share of EIM Rounds 2–3, fused and jitted:
     incremental-min d(x, S_new) update + this block's contribution to
     Select's top-k merged into the running ``top`` carry. ``c`` is the
     fixed-capacity S_new buffer (far-sentinel padded) and callers pad
-    ``blk``/``d_blk``/``h_blk`` to one fixed ``rows`` shape, so one
-    compilation serves every iteration and every block — ragged tail
-    included. The executors' streamed filter rounds call this; ``impl``
-    picks the fused Pallas tile vs the jnp oracle (bitwise-identical)."""
+    ``blk``/``d_blk``/``h_blk`` (and ``w_blk`` when weighted) to one fixed
+    ``rows`` shape, so one compilation serves every iteration and every
+    block — ragged tail included. The executors' streamed filter rounds
+    call this; ``impl`` picks the fused Pallas tile vs the jnp oracle
+    (bitwise-identical). ``w_blk=None`` (an empty jit pytree leaf, not an
+    operand) keeps the unweighted compiled program byte-identical."""
     d_blk, tops = filter_tile_update(blk, c, d_blk, h_blk, rank=rank,
-                                     impl=impl, chunk=chunk)
+                                     impl=impl, chunk=chunk, w_blk=w_blk)
     return d_blk, merge_top_k(top, tops, rank)
 
 
 def fold_min_d2(source, c, *, impl: str = "auto", chunk: int | None = None,
                 block_rows: int | None = None,
                 memory_budget: int | None = None,
-                prefetch: int | None = None) -> jnp.ndarray:
+                prefetch: int | None = None,
+                weighted: bool = False) -> jnp.ndarray:
     """Max over all source points of the min squared distance to ``c`` —
     the squared covering radius, as a streamed fold.
 
     Per-block maxima combine exactly (max is associative and order-safe),
     so the result is bitwise-identical to the in-memory
     ``max(assign_nearest(x, c)[1])`` for any blocking.
+
+    ``weighted=True`` restricts the max to rows with source weight > 0
+    (the weighted instance's support), via the rank-1 case of
+    ``fold_top_k_min_d2``; for a source whose weights are all positive —
+    unit weights in particular — the value is the same max over the same
+    per-block d² multisets, hence bitwise the unweighted fold.
     """
+    if weighted:
+        top = fold_top_k_min_d2(source, c, 1, impl=impl, chunk=chunk,
+                                block_rows=block_rows,
+                                memory_budget=memory_budget,
+                                prefetch=prefetch, weighted=True)
+        # An empty support leaves the -inf sentinel; report radius 0 like
+        # the empty-source fold below (real d² are >= 0, so the clamp is
+        # the identity on any nonempty support).
+        return jnp.maximum(top[0], jnp.float32(0.0))
     rows = resolve_block_rows(source.n, source.d, block_rows=block_rows,
                               memory_budget=memory_budget,
                               prefetch=prefetch or DEFAULT_PREFETCH)
@@ -843,22 +905,92 @@ def fold_min_d2(source, c, *, impl: str = "auto", chunk: int | None = None,
     return best
 
 
+def fold_top_k_min_d2(source, c, rank: int, *, impl: str = "auto",
+                      chunk: int | None = None,
+                      block_rows: int | None = None,
+                      memory_budget: int | None = None,
+                      prefetch: int | None = None,
+                      weighted: bool = False) -> jnp.ndarray:
+    """Descending top-``rank`` of the min squared distances to ``c`` over
+    all source points — the streamed evaluation fold of the outlier
+    objective: with ``rank = z + 1``, slot ``z`` is the squared covering
+    radius after excluding the ``z`` farthest points
+    (``core.outliers.covering_radius_excluding``).
+
+    Top-k *values* are blocking-invariant (``merge_top_k``), so the result
+    is bitwise the in-memory ``lax.top_k(assign_nearest(x, c)[1], rank)``
+    for any blocking; slots beyond the support size carry the -inf
+    sentinel. ``weighted=True`` gates rows with source weight <= 0 out of
+    candidacy (they are absent from the weighted instance) — on the Pallas
+    branch via the weighted tile's extra VMEM operand, on the ref branch
+    via an eager mask; all-positive (e.g. unit) weights leave the
+    candidate multiset untouched, hence the bits.
+    """
+    if rank < 1:
+        raise ValueError(f"rank must be >= 1, got {rank}")
+    rows = resolve_block_rows(source.n, source.d, block_rows=block_rows,
+                              memory_budget=memory_budget,
+                              prefetch=prefetch or DEFAULT_PREFETCH)
+    use_pallas, interpret = _resolve(impl)
+    top = top_k_init(rank)
+    off = 0
+    if use_pallas:
+        bn = _stream_bn(rows, chunk)
+        rows_p = _padded_rows(rows, bn)
+        d_big = jnp.full((rows_p,), _BIG)
+        for blk in _source_blocks(source, rows, prefetch):
+            nb = blk.shape[0]
+            blk_p = jnp.pad(blk, ((0, rows_p - nb), (0, 0)))
+            vm = (jnp.arange(rows_p) < nb).astype(jnp.float32)
+            if weighted:
+                w_p = np.zeros((rows_p,), np.float32)
+                w_p[:nb] = _source_weights(source, off, nb)
+                _, tops = fused_stream.fused_filter_blocks_w(
+                    blk_p, c, d_big, vm, jnp.asarray(w_p), rank=rank,
+                    bn=bn, interpret=interpret)
+            else:
+                _, tops = fused_stream.fused_filter_blocks(
+                    blk_p, c, d_big, vm, rank=rank, bn=bn,
+                    interpret=interpret)
+            top = merge_top_k(top, tops, rank)
+            off += nb
+        return top
+    for blk in _source_blocks(source, rows, prefetch):
+        nb = blk.shape[0]
+        _, d2 = assign_nearest(blk, c, impl=impl, chunk=chunk)
+        if weighted:
+            w = jnp.asarray(_source_weights(source, off, nb))
+            d2 = jnp.where(w > 0, d2, _NEG)
+        top = merge_top_k(top, d2, rank)
+        off += nb
+    return top
+
+
 def assign_nearest_source(source, c, *, impl: str = "auto",
                           chunk: int | None = None,
                           block_rows: int | None = None,
                           memory_budget: int | None = None,
-                          prefetch: int | None = None):
+                          prefetch: int | None = None,
+                          with_weights: bool = False):
     """Streaming nearest-center assignment over a source.
 
     Yields ``(idx (rows,) i32, d2 (rows,))`` per block, in row order —
     callers fold (counts, sums, maxima) instead of holding an (n,) result
     on device. Concatenating the yields equals the in-memory
     ``assign_nearest`` output bitwise.
+
+    ``with_weights=True`` appends each block's per-row f32 weights to the
+    yield — ``(idx, d2, w (rows,))`` — fetched through the source's
+    ``weights_of`` (default ones for unweighted sources), so weighted
+    accumulations (``engine`` leaves those to the caller: e.g.
+    ``counts.at[idx].add(w)``) ride the same stream with zero extra
+    passes. The idx/d2 arithmetic is untouched by the flag.
     """
     rows = resolve_block_rows(source.n, source.d, block_rows=block_rows,
                               memory_budget=memory_budget,
                               prefetch=prefetch or DEFAULT_PREFETCH)
     use_pallas, interpret = _resolve(impl)
+    off = 0
     if use_pallas:
         bn = _stream_bn(rows, chunk)
         rows_p = _padded_rows(rows, bn)
@@ -869,10 +1001,21 @@ def assign_nearest_source(source, c, *, impl: str = "auto",
             # fixed rows_p shape keeps the stream at one compilation.
             idx, d2 = fused_stream.fused_assign_blocks(
                 blk_p, c, bn=bn, interpret=interpret)
-            yield idx[:nb], d2[:nb]
+            if with_weights:
+                yield (idx[:nb], d2[:nb],
+                       jnp.asarray(_source_weights(source, off, nb)))
+            else:
+                yield idx[:nb], d2[:nb]
+            off += nb
         return
     for blk in _source_blocks(source, rows, prefetch):
-        yield assign_nearest(blk, c, impl=impl, chunk=chunk)
+        nb = blk.shape[0]
+        if with_weights:
+            idx, d2 = assign_nearest(blk, c, impl=impl, chunk=chunk)
+            yield idx, d2, jnp.asarray(_source_weights(source, off, nb))
+        else:
+            yield assign_nearest(blk, c, impl=impl, chunk=chunk)
+        off += nb
 
 
 def argmin_dist2_over_source(source, c, *, impl: str = "auto",

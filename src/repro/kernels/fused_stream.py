@@ -14,8 +14,8 @@ per-tile top-k all happen while the tile is VMEM-resident — the
 bandwidth-bound one-pass-per-round claim of §3/§5.1, on the out-of-core
 path and not just the legacy in-memory one.
 
-Design contract (shared by all three kernels; tests/test_engine.py pins it
-bitwise against the ref oracle in interpret mode):
+Design contract (shared by all the kernels here; tests/test_engine.py pins
+it bitwise against the ref oracle in interpret mode):
 
 * **Rows-only tiling.** The grid walks row tiles; the ``(m, d)`` center set
   stays whole in VMEM. Per-row arithmetic is therefore identical to the
@@ -146,6 +146,68 @@ def fused_filter_blocks(
         ],
         interpret=interpret,
     )(x, c, d_s, hm)
+
+
+def _filter_kernel_w(x_ref, c_ref, ds_ref, hm_ref, w_ref, newds_ref,
+                     top_ref, *, rank: int):
+    x = x_ref[...].astype(jnp.float32)                    # (bn, d)
+    c = c_ref[...].astype(jnp.float32)                    # (m, d)
+    d2 = _dist2_tile(x, c)
+    new_ds = jnp.minimum(ds_ref[...], jnp.min(d2, axis=-1))
+    newds_ref[...] = new_ds
+    # Weights join hm in gating candidacy only: a w <= 0 row is absent
+    # from the weighted instance, so it cannot contribute to the fold's
+    # top-k, but its carried d(x,S) still updates like any padded lane.
+    cand = jnp.where((hm_ref[...] > 0) & (w_ref[...] > 0), new_ds, _NEG)
+    top_ref[...] = _top_rank(cand, rank)[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("rank", "bn", "interpret"))
+def fused_filter_blocks_w(
+    x: jnp.ndarray,
+    c: jnp.ndarray,
+    d_s: jnp.ndarray,
+    hm: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    rank: int,
+    bn: int = DEFAULT_BN,
+    interpret: bool = False,
+):
+    """Weighted sibling of ``fused_filter_blocks``: per-row f32 weights
+    ``w (n,)`` ride as one extra VMEM operand (``4·bn`` bytes per step on
+    top of the plain tile's working set) and gate top-k candidacy — rows
+    with ``w <= 0`` are absent from the weighted instance. The arithmetic
+    of the d(x,S) update and the top-k extraction is untouched, so with
+    ``w > 0`` everywhere (unit weights) the program computes bitwise the
+    plain kernel's outputs (pinned in tests/test_engine.py). A separate
+    entry point — not a flag on ``fused_filter_blocks`` — so the plain
+    kernel's compiled program is byte-identical to before this refactor.
+    """
+    n, d = x.shape
+    m = c.shape[0]
+    assert n % bn == 0, (n, bn)
+    nb = n // bn
+    return pl.pallas_call(
+        functools.partial(_filter_kernel_w, rank=rank),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((m, d), lambda i: (0, 0)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((1, rank), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((nb, rank), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, c, d_s, hm, w)
 
 
 def _assign_kernel(x_ref, c_ref, idx_ref, d2_ref):

@@ -44,6 +44,7 @@ argmin_dist2_over_rows = engine.argmin_dist2_over_rows
 # input itself — not just the distance block — stays out of device memory.
 resolve_block_rows = engine.resolve_block_rows
 fold_min_d2 = engine.fold_min_d2
+fold_top_k_min_d2 = engine.fold_top_k_min_d2
 assign_nearest_source = engine.assign_nearest_source
 argmin_dist2_over_source = engine.argmin_dist2_over_source
 

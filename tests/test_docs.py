@@ -26,6 +26,7 @@ DOCTEST_MODULES = [
     "repro.core.gonzalez",
     "repro.core.eim",
     "repro.core.coreset",
+    "repro.core.outliers",
     "repro.data.source",
 ]
 
@@ -67,3 +68,21 @@ def test_quickstart_example_runs():
     assert out.returncode == 0, out.stderr[-3000:]
     for tag in ("GON", "MRG", "EIM", "out-of-core", "sharded"):
         assert tag in out.stdout, f"quickstart output lost its {tag} row"
+
+
+def test_coreset_curation_example_runs():
+    """The curation example end to end (small --n): its internal
+    assertions double as checks that curated ≤ random under the same
+    streamed fold, weights are conserved, and the outlier pass excludes
+    the planted contamination."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    out = subprocess.run(
+        [sys.executable,
+         os.path.join(REPO, "examples", "coreset_curation.py"),
+         "--n", "4000"],
+        capture_output=True, text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    for tag in ("curated", "random", "weighted coreset", "kz_center"):
+        assert tag in out.stdout, f"curation output lost its {tag} row"

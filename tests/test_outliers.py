@@ -1,0 +1,348 @@
+"""(k,z)-center with outliers + the weighted-fold substrate beneath it.
+
+Contracts under test (core/outliers.py + the weighted Objective paths):
+
+  * ``kz_center`` matches the brute-force (k,z) optimum within the
+    coreset-then-solve approximation bound at small n, and its streamed
+    pipeline never materializes the source;
+  * the streamed top-(z+1) fold (``fold_top_k_min_d2`` /
+    ``covering_radius_excluding`` / ``radius2(objective=...)``) is exact
+    vs the numpy sort oracle for every blocking, source, and impl;
+  * unit-weight weighted objectives are *bitwise* the plain programs on
+    all three executors (the PR's no-regression contract): same centers,
+    same radius bits, for Array / Host / Memmap sources and ragged and
+    even blockings alike;
+  * weights compose through the source views (WeightedSource wrapped by
+    Indexed / Slice / Sharded views) and are conserved by the weighted
+    rounds (per-cluster sums total the source weight).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import compat
+from repro.core import (HostStreamExecutor, MeshExecutor, Objective,
+                        SimExecutor, brute_force_opt_z,
+                        covering_radius_excluding, kz_center, mrg,
+                        select_coreset)
+from repro.core.executor import weighted_gon_block_fn
+from repro.data import (ArraySource, HostSource, IndexedSource, MemmapSource,
+                        WeightedSource, shard_source, take_weights,
+                        weights_of)
+from repro.kernels import ops
+
+
+def _pts(n=640, d=5, seed=0):
+    return np.random.default_rng(seed).normal(size=(n, d)).astype(np.float32)
+
+
+def _clustered_with_outliers(n=500, d=3, k=4, z=3, spread=100.0, seed=0):
+    """k tight planted clusters + z far-flung outliers."""
+    rng = np.random.default_rng(seed)
+    cents = rng.normal(size=(k, d)).astype(np.float32) * 10.0
+    x = (cents[rng.integers(0, k, size=n)] +
+         rng.normal(size=(n, d)).astype(np.float32) * 0.5)
+    out = rng.normal(size=(z, d)).astype(np.float32) * 0.1 + spread
+    x[:z] = out
+    return x.astype(np.float32)
+
+
+def _one_device_mesh():
+    return compat.make_mesh(np.array(jax.devices()[:1]), ("data",))
+
+
+# ---------------------------------------------------------------------------
+# kz_center vs the brute-force (k,z) oracle
+# ---------------------------------------------------------------------------
+
+def test_kz_center_within_approximation_bound_of_brute_force():
+    """Small-n oracle: coreset-then-solve stays within the paper-family
+    bound (coreset construction + 3-approx Charikar ⇒ O(1); we assert a
+    conservative 13x with fp slack) and never collapses to the plain
+    k-center answer when the outliers are extreme."""
+    rng = np.random.default_rng(7)
+    x = rng.normal(size=(14, 2)).astype(np.float32)
+    x[:2] += 50.0                       # 2 extreme outliers
+    k, z = 2, 2
+    opt = brute_force_opt_z(x, k, z)
+    assert opt > 0.0
+    for ex in (SimExecutor(m=3), HostStreamExecutor(block_rows=5)):
+        src = x if isinstance(ex, SimExecutor) else HostSource(x)
+        res = kz_center(src, k, z, executor=ex, impl="ref")
+        r = float(np.sqrt(res.radius2))
+        assert r / opt <= 13.0 + 1e-5, (r, opt)
+        # the outliers were excluded: the (k,z) radius is far below the
+        # plain covering radius the 50-unit outliers would force
+        assert r < 25.0
+
+
+def test_kz_center_excludes_planted_outliers_all_executors():
+    x = _clustered_with_outliers(n=500, k=4, z=3)
+    for name, ex, src in [
+        ("sim", SimExecutor(m=5), x),
+        ("host", HostStreamExecutor(block_rows=128), HostSource(x)),
+        ("mesh", MeshExecutor(_one_device_mesh(), block_rows=128),
+         HostSource(x)),
+    ]:
+        res = kz_center(src, 4, 3, executor=ex, impl="ref")
+        assert res.centers.shape == (4, x.shape[1])
+        # outliers sit ~100 away; excluding z of them must leave a small
+        # radius (planted clusters have sigma 0.5 around spread-10 means)
+        assert float(np.sqrt(res.radius2)) < 30.0, name
+        assert res.rounds >= 2
+
+
+def test_kz_center_z0_reduces_to_plain_objective_value():
+    """z=0: the (k,0) objective IS the covering radius — the streamed
+    top-1 fold must equal the plain radius fold bitwise for the returned
+    centers."""
+    x = _pts(300, 3, seed=3)
+    res = kz_center(x, 5, 0, m=4, impl="ref")
+    _, d2 = ops.assign_nearest(jnp.asarray(x), res.centers, impl="ref")
+    assert float(res.radius2) == float(jnp.max(d2))
+
+
+def test_kz_center_validates_arguments():
+    x = _pts(32, 2)
+    with pytest.raises(ValueError):
+        kz_center(x, 0, 1)
+    with pytest.raises(ValueError):
+        kz_center(x, 2, -1)
+    with pytest.raises(ValueError):
+        kz_center(x, 4, 1, t=2)
+    with pytest.raises(ValueError):
+        Objective(outliers=-1)
+
+
+def test_kz_center_streams_without_materializing():
+    """The R002 contract as a runtime fact: the full streamed pipeline
+    (round 1, weighted combine, host solve, top-(z+1) radius fold) never
+    pulls all n rows onto the device."""
+    class NoMaterialize(HostSource):
+        def materialize(self):
+            raise AssertionError("kz_center materialized the source")
+
+    x = _clustered_with_outliers(n=400, k=3, z=2)
+    src = NoMaterialize(x)
+    res = kz_center(src, 3, 2, executor=HostStreamExecutor(block_rows=64),
+                    solve_capacity=24, impl="ref")
+    assert res.centers.shape == (3, x.shape[1])
+    assert res.rounds > 2          # solve_capacity forced extra levels
+    r = covering_radius_excluding(NoMaterialize(x), np.asarray(res.centers),
+                                  2, block_rows=64)
+    assert float(r) ** 2 == pytest.approx(float(res.radius2), rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# the streamed top-(z+1) fold vs the numpy sort oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("block_rows", [256, 999])
+@pytest.mark.parametrize("impl", ["ref", "pallas"])
+def test_fold_top_k_min_d2_matches_sort_oracle(block_rows, impl, tmp_path):
+    x = _pts(1234, 4, seed=5)
+    c = _pts(7, 4, seed=6)
+    d2 = np.asarray(ops.assign_nearest(jnp.asarray(x), jnp.asarray(c),
+                                       impl="ref")[1])
+    order = np.sort(d2)[::-1]
+    sources = [ArraySource(x), HostSource(x),
+               MemmapSource.save_shards(x, tmp_path / impl,
+                                        rows_per_shard=500)]
+    for src in sources:
+        for z in (0, 1, 5):
+            top = ops.fold_top_k_min_d2(src, jnp.asarray(c), z + 1,
+                                        impl=impl, block_rows=block_rows)
+            # value folds are blocking-invariant: exact, not approx
+            np.testing.assert_array_equal(np.asarray(top), order[:z + 1])
+            r = covering_radius_excluding(src, c, z, impl=impl,
+                                          block_rows=block_rows)
+            assert float(r) == float(np.sqrt(np.float32(order[z])))
+
+
+def test_radius2_objective_consistent_across_executors():
+    """Executor.radius2 under an outlier objective: every executor's
+    reduction (Sim eager top-k, HostStream/Mesh streamed fold) returns
+    the identical top-(z+1) slot."""
+    x = _pts(800, 3, seed=8)
+    c = _pts(6, 3, seed=9)
+    obj = Objective(name="kz_center", weighted=True, outliers=4)
+    vals = {
+        "sim": SimExecutor(m=4).radius2(x, jnp.asarray(c), impl="ref",
+                                        objective=obj),
+        "host": HostStreamExecutor(block_rows=300).radius2(
+            HostSource(x), jnp.asarray(c), impl="ref", objective=obj),
+        "mesh_arr": MeshExecutor(_one_device_mesh(), block_rows=300).radius2(
+            ArraySource(x), jnp.asarray(c), impl="ref", objective=obj),
+        "mesh_str": MeshExecutor(_one_device_mesh(), block_rows=300).radius2(
+            HostSource(x), jnp.asarray(c), impl="ref", objective=obj),
+    }
+    d2 = np.asarray(ops.assign_nearest(jnp.asarray(x), jnp.asarray(c),
+                                       impl="ref")[1])
+    want = np.sort(d2)[::-1][4]
+    for name, v in vals.items():
+        assert float(v) == float(np.float32(want)), name
+
+
+# ---------------------------------------------------------------------------
+# unit-weight weighted folds are bitwise the plain programs (parity grid)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("block_rows", [256, 999])
+def test_unit_weight_parity_grid_streamed_executors(block_rows, tmp_path):
+    """The tentpole no-regression contract, streamed half: for Host /
+    Memmap sources on HostStream and (single-device) Mesh executors, the
+    weighted objective with implicit unit weights reproduces today's
+    plain mrg bits — centers, radius2, and rounds."""
+    n, d, k = 1234, 3, 5
+    x = _pts(n, d, seed=11)
+    obj = Objective(weighted=True)
+    mesh = _one_device_mesh()
+    sources = {
+        "host": lambda: HostSource(x),
+        "memmap": lambda: MemmapSource.save_shards(
+            x, tmp_path / str(block_rows), rows_per_shard=500),
+    }
+    for sname, mk in sources.items():
+        for ename, ex in [
+            ("hoststream", HostStreamExecutor(block_rows=block_rows)),
+            ("mesh", MeshExecutor(mesh, block_rows=block_rows)),
+        ]:
+            plain = mrg(mk(), k, executor=ex, impl="ref")
+            wres = mrg(mk(), k, executor=ex, impl="ref", objective=obj)
+            cell = f"{sname}×{ename}×{block_rows}"
+            np.testing.assert_array_equal(np.asarray(plain.centers),
+                                          np.asarray(wres.centers), cell)
+            assert float(plain.radius2) == float(wres.radius2), cell
+            assert plain.rounds == wres.rounds, cell
+            assert plain.weights is None
+            w = np.asarray(wres.weights)
+            assert w.shape == (k,) and float(w.sum()) == float(n), cell
+
+
+def test_unit_weight_parity_sim_and_mesh_array_source():
+    """Device-resident half of the grid: SimExecutor on a raw array, and
+    the MeshExecutor's ArraySource weighted fallback — which must match
+    the *streamed* plain run of the same blocking (the fused device
+    program has no weight operand and is deliberately not taken)."""
+    n, d, k = 1234, 3, 5
+    x = _pts(n, d, seed=11)
+    obj = Objective(weighted=True)
+    plain = mrg(x, k, m=7, impl="ref")
+    wres = mrg(x, k, m=7, impl="ref", objective=obj)
+    np.testing.assert_array_equal(np.asarray(plain.centers),
+                                  np.asarray(wres.centers))
+    assert float(plain.radius2) == float(wres.radius2)
+    assert float(np.asarray(wres.weights).sum()) == float(n)
+
+    mesh = _one_device_mesh()
+    ex = MeshExecutor(mesh, block_rows=256)
+    wm = mrg(ArraySource(x), k, executor=ex, impl="ref", objective=obj)
+    ph = mrg(HostSource(x), k,
+             executor=HostStreamExecutor(block_rows=256), impl="ref")
+    np.testing.assert_array_equal(np.asarray(wm.centers),
+                                  np.asarray(ph.centers))
+    # radius differs in *path* (mesh-array evaluates eagerly) but not in
+    # value bits: both reduce the same eager-assign d2 multiset
+    assert float(wm.radius2) == float(ph.radius2)
+
+
+@pytest.mark.parametrize("impl", ["ref", "pallas"])
+def test_weighted_filter_round_unit_weights_bitwise(impl):
+    """run_filter_round with all-ones weights reproduces the plain pivot
+    and distance bits (Sim and HostStream; both impls — the pallas cell
+    exercises ``fused_filter_blocks_w`` in interpret mode off-TPU), and
+    zero weights gate rows out of pivot candidacy exactly like H=False."""
+    n, d = 700, 3
+    x = _pts(n, d, seed=13)
+    s_new = _pts(4, d, seed=14)
+    rank = 9
+    for ex in (SimExecutor(m=4), HostStreamExecutor(block_rows=256)):
+        src = x if isinstance(ex, SimExecutor) else HostSource(x)
+        base_d = np.full(n, np.float32(3.4e38), np.float32)
+        h = np.ones(n, bool)
+        d_plain, piv_plain = ex.run_filter_round(
+            src, s_new, base_d.copy(), h, rank, impl=impl)
+        d_ones, piv_ones = ex.run_filter_round(
+            src, s_new, base_d.copy(), h, rank, impl=impl,
+            weights=np.ones(n, np.float32))
+        np.testing.assert_array_equal(d_plain, d_ones)
+        assert float(piv_plain) == float(piv_ones)
+        # zero out the weight of every current top-rank row: the pivot
+        # must drop to the best of the remaining support
+        order = np.argsort(d_plain)[::-1]
+        w = np.ones(n, np.float32)
+        w[order[:rank]] = 0.0
+        d_gated, piv_gated = ex.run_filter_round(
+            src, s_new, d_plain.copy(), h, rank, impl=impl, weights=w)
+        np.testing.assert_array_equal(d_gated, d_plain)  # d still updates
+        assert float(piv_gated) == float(
+            np.float32(np.sort(d_plain)[::-1][2 * rank - 1]))
+
+
+def test_mesh_filter_round_rejects_weights():
+    x = _pts(128, 2)
+    ex = MeshExecutor(_one_device_mesh(), block_rows=64)
+    with pytest.raises(NotImplementedError):
+        ex.run_filter_round(HostSource(x), _pts(2, 2),
+                            np.full(128, np.float32(3.4e38), np.float32),
+                            np.ones(128, bool), 3, weights=np.ones(128,
+                                                                   np.float32))
+
+
+# ---------------------------------------------------------------------------
+# weights through the source views
+# ---------------------------------------------------------------------------
+
+def test_weighted_source_composes_through_views():
+    x = _pts(200, 2, seed=17)
+    w = (np.arange(200) % 5 + 1).astype(np.float32)
+    ws = WeightedSource(HostSource(x), w)
+    np.testing.assert_array_equal(weights_of(ws, 30, 40), w[30:70])
+    # plain sources default to unit weights
+    np.testing.assert_array_equal(weights_of(HostSource(x), 0, 10),
+                                  np.ones(10, np.float32))
+    idx = np.asarray([5, 3, 199, 0])
+    np.testing.assert_array_equal(take_weights(ws, idx), w[idx])
+    sub = IndexedSource(ws, np.arange(0, 200, 3))
+    np.testing.assert_array_equal(weights_of(sub, 2, 4),
+                                  w[np.arange(0, 200, 3)][2:6])
+    sh = shard_source(ws, 3)
+    got = np.concatenate([weights_of(sh, off, 50)
+                          for off in (0, 50, 100, 150)])
+    np.testing.assert_array_equal(got, w)
+    with pytest.raises(ValueError):
+        WeightedSource(HostSource(x), w[:-1])
+    with pytest.raises(ValueError):
+        WeightedSource(HostSource(x), -w)
+
+
+def test_weighted_rounds_conserve_total_weight():
+    """Per-cluster weight sums total the source weight through round 1,
+    every combine level, and the final aggregation — f32 adds of integer
+    weights are exact here (total << 2^24)."""
+    x = _pts(900, 3, seed=19)
+    w = (np.arange(900) % 7 + 1).astype(np.float32)
+    ws = WeightedSource(HostSource(x), w)
+    res = mrg(ws, 4, executor=HostStreamExecutor(block_rows=128),
+              capacity=16, impl="ref", objective=Objective(weighted=True))
+    assert float(np.asarray(res.weights).sum()) == float(w.sum())
+    assert res.rounds > 2          # capacity forced combine levels
+
+    cs = select_coreset(ws, 6, executor=HostStreamExecutor(block_rows=128),
+                        impl="ref")
+    assert float(np.asarray(cs.weights).sum()) == float(w.sum())
+
+
+def test_weighted_block_fn_zero_weight_rows_never_selected():
+    """Round-1 selection masks out w<=0 rows (they carry no objective
+    mass), and their weight contributes nothing to the cluster sums."""
+    x = np.zeros((8, 2), np.float32)
+    x[0] = (100.0, 100.0)              # far row, weight 0
+    x[1:] = _pts(7, 2, seed=23)
+    w = np.ones(8, np.float32)
+    w[0] = 0.0
+    fn = weighted_gon_block_fn(3, "ref", None)
+    centers, cw = fn(jnp.asarray(x), jnp.ones(8, bool), jnp.asarray(w))
+    assert not np.any(np.all(np.asarray(centers) == x[0], axis=1))
+    assert float(np.asarray(cw).sum()) == 7.0

@@ -92,6 +92,10 @@ JITTED_CALLEES: Tuple[str, ...] = (
     "bernoulli_rows_block", "bernoulli_rows_at_block",
     "eim_filter_block", "_eim_filter_block",
     "fused_filter_blocks", "fused_assign_blocks", "fused_argmin_blocks",
+    # The weighted sibling of fused_filter_blocks (one extra (bn,) weight
+    # operand, same (rank/bn/interpret)-static jit signature): the same
+    # ragged-tail recompile hazard, so the same pad-dance obligation.
+    "fused_filter_blocks_w",
     # The serving query entry point (kernels/engine.py): eager rather than
     # jitted, but shape-signature-sensitive all the same — its recompile
     # discipline rests on callers padding to the fixed (query-bucket,
