@@ -1,0 +1,45 @@
+"""Multi-process cluster benchmark — wall-clock of genuine 2-process
+``jax.distributed`` runs on localhost (CPU, gloo collectives).
+
+Opt-in only (``--only cluster``): every row spawns real worker
+interpreters, so the dominant cost at quick sizes is process bring-up
+(imports + coordinator handshake), reported as its own row so the mrg
+row can be read against it. Not part of the default CI bench list.
+"""
+from __future__ import annotations
+
+import time
+from typing import Iterator, Tuple
+
+from repro.launch.cluster import run_scenario
+
+_TARGET = "repro.launch.cluster:demo_mrg"
+
+
+def _timed(num_processes: int, n_per: int, k: int) -> Tuple[float, dict]:
+    t0 = time.perf_counter()
+    verdicts = run_scenario(_TARGET, num_processes,
+                            args={"n_per_process": n_per, "k": k},
+                            timeout=600.0)
+    dt = time.perf_counter() - t0
+    first = verdicts[0]
+    agree = all(v.get("centers") == first.get("centers")
+                for v in verdicts[1:])
+    if not agree:  # pragma: no cover - would be a parity regression
+        raise RuntimeError("cluster processes disagree on centers")
+    return dt, first
+
+
+def run(full: bool = False) -> Iterator[Tuple[str, float, str]]:
+    procs = 2
+    # bring-up floor: a near-empty problem is all spawn + initialize
+    dt, _ = _timed(procs, n_per=256, k=2)
+    yield (f"cluster_spawn_p{procs}", dt * 1e6,
+           f"n_per=256;k=2;bringup_s={dt:.2f}")
+
+    n_per = 65_536 if full else 8_192
+    k = 16
+    dt, v = _timed(procs, n_per=n_per, k=k)
+    yield (f"cluster_mrg_p{procs}", dt * 1e6,
+           f"n={v['n']};k={k};radius={v['radius']:.4g};"
+           f"rounds={v['rounds']};wall_s={dt:.2f}")

@@ -27,7 +27,9 @@ def main() -> None:
                          "BENCH_kcenter.json trajectory artifact)")
     ap.add_argument("--only", default=None,
                     help="comma list: tables,runtime,phi,perfcell,kernels,"
-                         "streamedkernels,chunked,serve,outliers,roofline")
+                         "streamedkernels,chunked,serve,outliers,roofline"
+                         " (+ cluster — opt-in only: spawns real"
+                         " multi-process jax.distributed workers)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -122,6 +124,13 @@ def main() -> None:
     if want("outliers"):
         from . import outliers_bench
         for name, us, derived in outliers_bench.run(full=args.full):
+            emit(name, us, derived)
+
+    # opt-in only (never part of the default sweep): real worker
+    # processes + a localhost coordinator per row
+    if only is not None and "cluster" in only:
+        from . import cluster_bench
+        for name, us, derived in cluster_bench.run(full=args.full):
             emit(name, us, derived)
 
     if want("roofline"):

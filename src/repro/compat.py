@@ -23,6 +23,14 @@ Support matrix (verified against the pinned CI versions):
                                                   feature-detects and falls
                                                   back to a sharded
                                                   ``device_put``
+  multi-process init     jax.distributed.         same API; CPU collectives
+                         initialize (CPU          selected the same way
+                         collectives via the      (feature-detected — absent
+                         ``jax_cpu_collectives_   flag is skipped, never an
+                         implementation`` flag)   error)
+  cross-process fetch    jax.experimental.        same API (stable); the
+                         multihost_utils.         wrappers add the single-
+                         process_allgather        process fast paths
   =====================  =======================  =========================
 
 Everything here is feature-detected (``hasattr``), not version-compared:
@@ -44,6 +52,8 @@ HAS_TOP_LEVEL_SHARD_MAP = hasattr(jax, "shard_map")
 HAS_AXIS_TYPE = hasattr(jax.sharding, "AxisType")
 HAS_SET_MESH = hasattr(jax, "set_mesh")
 HAS_GLOBAL_ASSEMBLY = hasattr(jax, "make_array_from_single_device_arrays")
+HAS_DISTRIBUTED = hasattr(jax, "distributed") and hasattr(
+    jax.distributed, "initialize")
 
 
 # ---------------------------------------------------------------------------
@@ -149,17 +159,36 @@ def global_array_from_shards(mesh: jax.sharding.Mesh, pspec,
     still feature-detected, with a host-concatenate + sharded
     ``device_put`` fallback, so this helper can never strand the streamed
     executors on an API-less build.
+
+    **Multi-process:** under ``jax.distributed`` each process addresses
+    only its own devices, so a piece whose shard lives on *another*
+    process may be ``None`` — only the locally-addressable shards'
+    pieces are ``device_put``, and ``make_array_from_single_device_arrays``
+    assembles the global array from local shards alone (every process
+    contributes its own). A ``None`` piece for a *locally addressable*
+    shard is an error, as is any ``None`` on the concatenate fallback
+    (which needs every row on this host).
     """
-    arrs = [np.asarray(p) for p in pieces]
-    rows = arrs[0].shape[0]
+    arrs = [None if p is None else np.asarray(p) for p in pieces]
+    ref = next((a for a in arrs if a is not None), None)
+    if ref is None:
+        raise ValueError(
+            "all pieces are None — at least this process's own shards "
+            "must be provided")
+    rows = ref.shape[0]
     for i, a in enumerate(arrs):
-        if a.shape != arrs[0].shape:
+        if a is not None and a.shape != ref.shape:
             raise ValueError(
-                f"piece {i} has shape {a.shape}, expected {arrs[0].shape} "
+                f"piece {i} has shape {a.shape}, expected {ref.shape} "
                 "(pad every shard's piece to one common block shape)")
-    shape = (rows * len(arrs),) + arrs[0].shape[1:]
+    shape = (rows * len(arrs),) + ref.shape[1:]
     sharding = jax.sharding.NamedSharding(mesh, pspec)
     if not HAS_GLOBAL_ASSEMBLY:  # pragma: no cover - both CI lines have it
+        if any(a is None for a in arrs):
+            raise RuntimeError(
+                "the sharded device_put fallback concatenates on the host "
+                "and needs every piece; None (remote) pieces require "
+                "jax.make_array_from_single_device_arrays")
         return jax.device_put(np.concatenate(arrs, axis=0), sharding)
     shards = []
     for dev, idx in sharding.addressable_devices_indices_map(shape).items():
@@ -170,8 +199,167 @@ def global_array_from_shards(mesh: jax.sharding.Mesh, pspec,
                 f"sharding splits dim 0 into [{start}, {stop}) slices; "
                 f"expected one {rows}-row piece per shard — pass one piece "
                 "per dim-0 shard of the pspec")
-        shards.append(jax.device_put(arrs[start // rows], dev))
+        piece = arrs[start // rows]
+        if piece is None:
+            raise ValueError(
+                f"piece {start // rows} is None but its shard is "
+                f"addressable from this process ({dev}) — only shards "
+                "owned by other processes may omit their data")
+        shards.append(jax.device_put(piece, dev))
     return jax.make_array_from_single_device_arrays(shape, sharding, shards)
+
+
+# ---------------------------------------------------------------------------
+# Multi-process (multi-controller) runtime
+#
+# Everything below is the compat surface for genuine ``jax.distributed``
+# runs (repro/launch/cluster.py): initialization with CPU collectives
+# selected, process topology queries, cross-process value exchange, and
+# the sharding helpers the streamed MeshExecutor needs to know which
+# shards this process feeds. All of it degrades to cheap single-process
+# behavior when no cluster was initialized, so callers never branch on
+# the runtime themselves.
+# ---------------------------------------------------------------------------
+
+
+def enable_cpu_collectives(impl: str = "gloo") -> bool:
+    """Select the CPU cross-process collectives backend (default gloo).
+
+    Must run *before* the CPU backend is first initialized — without it,
+    multi-process programs on CPU fail with "Multiprocess computations
+    aren't implemented on the CPU backend". The flag exists on both
+    supported lines; feature-detected (an absent/renamed flag returns
+    False rather than raising) because it is exactly the kind of
+    config-surface drift this module exists to absorb.
+    """
+    try:
+        jax.config.update("jax_cpu_collectives_implementation", impl)
+        return True
+    except (AttributeError, ValueError):  # pragma: no cover - drift guard
+        return False
+
+
+def distributed_initialize(coordinator_address: str, num_processes: int,
+                           process_id: int, *,
+                           initialization_timeout: float | None = None,
+                           cpu_collectives: str | None = "gloo") -> None:
+    """``jax.distributed.initialize`` with the version drift absorbed.
+
+    Selects the CPU collectives backend first (set ``cpu_collectives=None``
+    on accelerator clusters where XLA's native collectives apply), then
+    initializes the distributed runtime. ``initialization_timeout`` is
+    forwarded only where the jax line supports the kwarg — on lines
+    without it the coordinator default applies.
+    """
+    if not HAS_DISTRIBUTED:  # pragma: no cover - both CI lines have it
+        raise RuntimeError(
+            "this jax build has no jax.distributed.initialize — "
+            "multi-process execution is unavailable")
+    if cpu_collectives is not None:
+        enable_cpu_collectives(cpu_collectives)
+    kwargs = dict(coordinator_address=coordinator_address,
+                  num_processes=int(num_processes),
+                  process_id=int(process_id))
+    if initialization_timeout is not None:
+        params = inspect.signature(jax.distributed.initialize).parameters
+        if "initialization_timeout" in params:
+            kwargs["initialization_timeout"] = int(initialization_timeout)
+    jax.distributed.initialize(**kwargs)
+
+
+def distributed_shutdown() -> None:
+    """Tear down the distributed runtime; a no-op when none is active."""
+    if HAS_DISTRIBUTED and hasattr(jax.distributed, "shutdown"):
+        try:
+            jax.distributed.shutdown()
+        except RuntimeError:  # pragma: no cover - already down
+            pass
+
+
+def process_index() -> int:
+    """This controller's process id (0 on single-process runtimes)."""
+    return int(jax.process_index())
+
+
+def process_count() -> int:
+    """Number of controller processes (1 on single-process runtimes)."""
+    return int(jax.process_count())
+
+
+def fetch_global(arr) -> np.ndarray:
+    """The full host value of a (possibly cross-process sharded) array.
+
+    Single-process: a plain ``np.asarray`` — byte-identical to the
+    pre-multi-process executors, so compiled programs and parity tests
+    are untouched. Multi-process: ``multihost_utils.process_allgather``,
+    which every process must call (it is a collective); the result is
+    the same full value on every process.
+    """
+    if process_count() == 1:
+        return np.asarray(arr)
+    from jax.experimental import multihost_utils
+    return np.asarray(multihost_utils.process_allgather(arr))
+
+
+def exchange_host(x) -> np.ndarray:
+    """All-gather a per-process *host* value: returns ``(P, ...)`` stacked
+    in process order (row p is process p's contribution). Single-process:
+    ``x[None]``. Every process must pass the same shape/dtype and every
+    process must call (collective). This is the O(k) candidate exchange
+    of the paper's MapReduce rounds — centers move, points never do.
+    """
+    x = np.asarray(x)
+    if process_count() == 1:
+        return x[None]
+    from jax.experimental import multihost_utils
+    out = np.asarray(multihost_utils.process_allgather(x, tiled=False))
+    return out.reshape((process_count(),) + x.shape)
+
+
+def replicated_array(mesh: jax.sharding.Mesh, x) -> jax.Array:
+    """``x`` replicated across every device of ``mesh``.
+
+    Single-process this is just ``device_put`` with a replicated
+    ``NamedSharding``. Multi-process, ``device_put`` cannot target
+    non-addressable devices on the 0.4.x line, so the replica set is
+    assembled from per-local-device copies via
+    ``make_array_from_single_device_arrays`` — every process holds the
+    same host value (replicated-by-construction SPMD drivers), so no
+    data crosses processes.
+    """
+    x = np.asarray(x)
+    sharding = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+    if process_count() == 1:
+        return jax.device_put(x, sharding)
+    if not HAS_GLOBAL_ASSEMBLY:  # pragma: no cover - both CI lines have it
+        raise RuntimeError(
+            "multi-process replication requires "
+            "jax.make_array_from_single_device_arrays")
+    local = [d for d in mesh.devices.flat
+             if d.process_index == process_index()]
+    arrs = [jax.device_put(x, d) for d in local]
+    return jax.make_array_from_single_device_arrays(x.shape, sharding, arrs)
+
+
+def local_shard_indices(mesh: jax.sharding.Mesh, pspec,
+                        num_shards: int) -> list:
+    """Which dim-0 shards of ``NamedSharding(mesh, pspec)`` this process
+    addresses, as sorted shard indices in ``range(num_shards)``.
+
+    This is how the streamed ``MeshExecutor`` decides which source shards
+    to actually read in a multi-process run (the others are fed by their
+    owning processes). Computed from the sharding's addressable-device
+    index map over a one-row-per-shard probe shape, so it tracks whatever
+    device order the mesh was built with.
+    """
+    sharding = jax.sharding.NamedSharding(mesh, pspec)
+    shape = (int(num_shards), 1)
+    out = set()
+    for _, idx in sharding.addressable_devices_indices_map(shape).items():
+        start = idx[0].start or 0
+        stop = idx[0].stop if idx[0].stop is not None else num_shards
+        out.update(range(start, stop))
+    return sorted(out)
 
 
 # ---------------------------------------------------------------------------

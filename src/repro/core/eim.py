@@ -61,6 +61,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.data.source import (ArraySource, IndexedSource, as_device_array,
                                as_source, is_source)
 from repro.kernels import engine, ops
@@ -68,8 +69,8 @@ from repro.kernels import engine, ops
 from .executor import Executor, HostStreamExecutor
 from .gonzalez import gonzalez
 
-_NEG = jnp.float32(-3.4e38)
-_BIG = jnp.float32(3.4e38)
+_NEG = np.float32(-3.4e38)
+_BIG = np.float32(3.4e38)
 
 
 class EIMSample(NamedTuple):
@@ -571,7 +572,14 @@ def _stream_loop(source, executor, key, r_mask, s_mask, d_s, threshold,
         if np.float32(live) <= np.float32(threshold):
             break                          # loop is over; skip the re-view
         cur = n if view_idx is None else len(view_idx)
-        if live < compact_threshold * cur and live < cur:
+        # Multi-process, compaction is skipped: an IndexedSource re-view
+        # would route per-shard block reads through the cross-process
+        # ``take`` collective with *different* indices per process — a
+        # protocol mismatch. The sample is bitwise invariant to the knob
+        # (PR 4's contract), so skipping only costs the shrinking-|R|
+        # speedup, never parity.
+        if (live < compact_threshold * cur and live < cur
+                and compat.process_count() == 1):
             if view is not source:
                 # Release per-view executor caches (e.g. SimExecutor's
                 # blocked copy) before the old view is dropped.

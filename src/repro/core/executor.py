@@ -137,8 +137,9 @@ def _is_plain(objective: Objective | None) -> bool:
     return objective is None or (not objective.weighted
                                  and objective.outliers == 0)
 
-_NEG = jnp.float32(-3.4e38)   # Select's invalid-slot sentinel (matches eim)
-_BIG = jnp.float32(3.4e38)
+# np scalars so importing this module never commits the jax backend
+_NEG = np.float32(-3.4e38)   # Select's invalid-slot sentinel (matches eim)
+_BIG = np.float32(3.4e38)
 
 
 # One super-shard's share of EIM Rounds 2–3, fused and jitted: the engine
@@ -829,6 +830,46 @@ class MeshExecutor(Executor):
                                          memory_budget=self.memory_budget,
                                          prefetch=self.prefetch)
 
+    # -- multi-process topology ---------------------------------------------
+
+    def _local_ids(self, sh: ShardedSource):
+        """Shard indices this process feeds, or ``None`` for "all"
+        (single-process — the historical behavior, kept byte-identical).
+
+        Under ``jax.distributed`` each process feeds exactly the shards
+        whose mesh address space it owns (``compat.local_shard_indices``);
+        a ``ProcessShardedSource`` must hold real data for all of them —
+        a mismatch between the data partition and the mesh partition is a
+        launch bug, reported here rather than as a RemoteShard read deep
+        inside a fold."""
+        src_local = getattr(sh, "local_shard_ids", None)
+        if compat.process_count() == 1:
+            if src_local is not None and len(src_local) < sh.num_shards:
+                raise ValueError(
+                    "source has remote shards but the runtime is "
+                    "single-process — no other process exists to feed "
+                    "them (launch via repro.launch.cluster)")
+            return None
+        lids = compat.local_shard_indices(self.mesh, self._pspec(),
+                                          sh.num_shards)
+        if src_local is not None:
+            missing = sorted(set(lids) - set(src_local))
+            if missing:
+                raise ValueError(
+                    f"process {compat.process_index()} owns mesh shards "
+                    f"{lids} but the source holds no data for shards "
+                    f"{missing} — align the data partition with the mesh "
+                    "(ProcessShardedSource.for_process with the launch "
+                    "process id)")
+        return lids
+
+    def _fetch(self, arr) -> np.ndarray:
+        """Host value of a per-step output: plain ``np.asarray`` single-
+        process; the ``process_allgather`` collective when shards span
+        processes (every process then holds every shard's slice — the
+        O(k·S) per-step shuffle, never the points)."""
+        return compat.fetch_global(arr)
+
     # -- per-step sharded streaming -----------------------------------------
 
     def _stream_steps(self, sh: ShardedSource, rows: int):
@@ -838,24 +879,35 @@ class MeshExecutor(Executor):
         The transfer rides the sources' prefetch ring (``stream_device``
         with a sharded ``put``), so up to ``prefetch`` steps' DMAs are in
         flight ahead of the consumed one — the same overlap model as the
-        single-device stream, per shard."""
+        single-device stream, per shard.
+
+        Multi-process, each process reads (and ``device_put``s) only its
+        own shards — the other entries in the piece list are ``None`` and
+        the global array is assembled from local shards alone; masks and
+        step counts are computed arithmetically for every shard, so all
+        processes run the same step sequence in lockstep."""
         mesh, pspec = self.mesh, self._pspec()
+        local = self._local_ids(sh)
 
         def put(step):
-            pts, counts = step                       # (S, rows, d), (S,)
+            pts, counts = step            # (S, rows, d) or [piece|None], (S,)
             mask = np.arange(rows)[None, :] < counts[:, None]
             g_p = compat.global_array_from_shards(mesh, pspec, list(pts))
             g_m = compat.global_array_from_shards(mesh, pspec, list(mask))
             return g_p, g_m, counts
 
-        return stream_device(engine.zip_shard_blocks(sh.shards, rows),
-                             self.prefetch, put=put)
+        return stream_device(
+            engine.zip_shard_blocks(sh.shards, rows, local_ids=local),
+            self.prefetch, put=put)
 
     def _stream_steps_w(self, sh: ShardedSource, rows: int):
         """Weighted sibling of ``_stream_steps``: each step additionally
         ships the shards' per-row weight slices (padded lanes at weight
-        0), yielding ``(pts, mask, w, counts)`` global arrays."""
+        0), yielding ``(pts, mask, w, counts)`` global arrays. No
+        weighted multi-process caller exists, so non-local shards are
+        rejected by ``zip_shard_blocks`` rather than half-supported."""
         mesh, pspec = self.mesh, self._pspec()
+        local = self._local_ids(sh)
 
         def put(step):
             pts, wts, counts = step          # (S, rows, d), (S, rows), (S,)
@@ -866,10 +918,18 @@ class MeshExecutor(Executor):
             return g_p, g_m, g_w, counts
 
         return stream_device(
-            engine.zip_shard_blocks(sh.shards, rows, with_weights=True),
+            engine.zip_shard_blocks(sh.shards, rows, with_weights=True,
+                                    local_ids=local),
             self.prefetch, put=put)
 
     def _replicated(self, arr) -> jnp.ndarray:
+        if compat.process_count() > 1:
+            # device_put to a replicated NamedSharding cannot target the
+            # other processes' devices on the 0.4.x line — assemble the
+            # replica set from per-local-device copies instead (the host
+            # value is identical on every process by SPMD construction).
+            return compat.replicated_array(self.mesh,
+                                           np.asarray(arr, np.float32))
         return jax.device_put(jnp.asarray(arr, jnp.float32),
                               NamedSharding(self.mesh, P()))
 
@@ -961,15 +1021,15 @@ class MeshExecutor(Executor):
             step = self._round1w_step(fn)
             for pts, mask, w, _ in self._stream_steps_w(sh, rows):
                 c, cw, v = step(pts, mask, w)       # (S,k,d), (S,k), (S,)
-                cs.append(np.asarray(c))
-                ws.append(np.asarray(cw))
-                vs.append(np.asarray(v))
+                cs.append(self._fetch(c))
+                ws.append(self._fetch(cw))
+                vs.append(self._fetch(v))
         else:
             step = self._round1_step(fn)
             for pts, mask, _ in self._stream_steps(sh, rows):
                 c, v = step(pts, mask)              # (S, k, d), (S,)
-                cs.append(np.asarray(c))
-                vs.append(np.asarray(v))
+                cs.append(self._fetch(c))
+                vs.append(self._fetch(v))
         if not cs:
             raise ValueError("cannot run round 1 over an empty source")
         cent = np.stack(cs, axis=1)                 # (S, B, k, d) after swap
@@ -1016,6 +1076,27 @@ class MeshExecutor(Executor):
             top = engine.merge_top_k(engine.top_k_init(r), d2, r)
             return jnp.maximum(top[r - 1], jnp.float32(0.0))
         sh = self._sharded(src)
+        local = self._local_ids(sh)
+        if local is not None:
+            if not _is_plain(objective):
+                raise NotImplementedError(
+                    "multi-process radius2 supports only the plain "
+                    "objective (a top-(z+1) cross-process merge is a "
+                    "value fold too, but no caller exists yet)")
+            # Per-process partial max over the *local* shards (same
+            # blocks, same eager fold_min_d2 bits as the global stream —
+            # blocks never cross shard boundaries), then an exact
+            # cross-process max merge: max is invariant to merge order,
+            # so the result is bitwise the single-process fold.
+            rows = self.rows_for(sh)
+            best = np.float32(0.0)       # d² ≥ 0; empty shards fold to 0
+            for s in local:
+                part = engine.fold_min_d2(sh.shards[s], centers, impl=impl,
+                                          chunk=chunk, block_rows=rows,
+                                          prefetch=self.prefetch)
+                best = np.maximum(best, np.asarray(part, np.float32))
+            parts = compat.exchange_host(np.asarray(best, np.float32))
+            return jnp.asarray(np.max(parts), jnp.float32)
         if not _is_plain(objective):
             top = engine.fold_top_k_min_d2(
                 sh, centers, objective.outliers + 1, impl=impl, chunk=chunk,
@@ -1050,6 +1131,7 @@ class MeshExecutor(Executor):
         S = sh.num_shards
         have_s = s_new is not None and len(s_new) > 0
         mesh, pspec = self.mesh, self._pspec()
+        local = self._local_ids(sh)
         pos = sh.offsets[:-1].astype(np.int64)      # per-shard view cursor
 
         def put(step_data):
@@ -1074,8 +1156,9 @@ class MeshExecutor(Executor):
                     compat.global_array_from_shards(mesh, pspec, p_h),
                     counts, starts)
 
-        steps = stream_device(engine.zip_shard_blocks(sh.shards, rows),
-                              self.prefetch, put=put)
+        steps = stream_device(
+            engine.zip_shard_blocks(sh.shards, rows, local_ids=local),
+            self.prefetch, put=put)
         if have_s:
             c = self._replicated(np.asarray(s_new, np.float32))
             fstep = self._filter_step(rank, impl, chunk)
@@ -1085,14 +1168,19 @@ class MeshExecutor(Executor):
         for g_pts, g_d, g_h, counts, starts in steps:
             if have_s:
                 d_upd, tops = fstep(g_pts, g_d, g_h, c)
-                d_np = np.asarray(d_upd).reshape(S, rows)
+                # Multi-process, the fetch is an allgather: every process
+                # writes back *every* shard's slice, keeping the host
+                # d(x, S) relation replicated — the next iteration's state
+                # pieces are then constructible everywhere.
+                d_np = self._fetch(d_upd).reshape(S, rows)
                 for s in range(S):
                     nb = int(counts[s])
                     a = int(starts[s])
                     d_s[a:a + nb] = d_np[s, :nb]
             else:
                 tops = pstep(g_d, g_h)
-            top = engine.merge_top_k(top, jnp.asarray(np.asarray(tops)), rank)
+            top = engine.merge_top_k(top, jnp.asarray(self._fetch(tops)),
+                                     rank)
         return d_s, _pivot_from_top(top, rank)
 
     # -- MRG: fused device program, or the streamed sharded orchestration ---

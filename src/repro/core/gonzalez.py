@@ -27,7 +27,7 @@ import numpy as np
 from repro.data.source import ArraySource, is_source
 from repro.kernels import ops
 
-_NEG = jnp.float32(-3.4e38)  # sentinel: masked-out points can never be farthest
+_NEG = np.float32(-3.4e38)  # sentinel: masked-out points can never be farthest
 
 
 class GonzalezResult(NamedTuple):

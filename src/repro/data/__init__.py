@@ -6,6 +6,8 @@ from .source import (  # noqa: F401
     IndexedSource,
     MemmapSource,
     PointSource,
+    ProcessShardedSource,
+    RemoteShard,
     ShardedSource,
     SliceSource,
     SyntheticSource,

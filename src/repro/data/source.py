@@ -89,6 +89,7 @@ import numpy as np
 # The single home of the ring-depth default is the engine's residency
 # model (kernels/engine.py imports nothing from repro.data, so this
 # direction is cycle-free).
+from repro import compat
 from repro.kernels.engine import DEFAULT_PREFETCH  # noqa: F401
 
 from . import pointsets
@@ -801,6 +802,156 @@ class ShardedSource:
     def materialize(self) -> jnp.ndarray:
         return jnp.concatenate(
             [jnp.asarray(b) for b in self.host_blocks(1 << 20)], axis=0)
+
+
+class RemoteShard:
+    """Metadata stand-in for a shard whose rows live on another process.
+
+    In a genuine ``jax.distributed`` run no process can read another
+    machine's shard, but every process must still know the *global*
+    partition (shard sizes define global row ids, mask shapes, and the
+    lockstep step count). ``RemoteShard`` carries exactly that — ``n``
+    and ``d`` — and raises on any data access, which is what makes the
+    "no process ever materializes more than its own shard" contract
+    structural rather than aspirational: there is simply no code path
+    that can pull a remote row onto this host.
+    """
+
+    is_remote = True
+
+    def __init__(self, n: int, d: int, *, process: int = 0):
+        if n < 0:
+            raise ValueError(f"n must be >= 0, got {n}")
+        if d < 1:
+            raise ValueError(f"d must be >= 1, got {d}")
+        self._n = int(n)
+        self._d = int(d)
+        self._process = int(process)
+
+    @property
+    def n(self) -> int:
+        return self._n
+
+    @property
+    def d(self) -> int:
+        return self._d
+
+    @property
+    def process(self) -> int:
+        """The controller process that owns (and feeds) this shard."""
+        return self._process
+
+    def _no_data(self, op: str):
+        raise RuntimeError(
+            f"shard data lives on process {self._process}; {op} cannot run "
+            "here — multi-process folds read only local shards, and rows "
+            "move between processes only through the O(k) candidate "
+            "exchange (ProcessShardedSource.take)")
+
+    def blocks(self, block_rows: int):
+        self._no_data("blocks()")
+
+    def host_blocks(self, block_rows: int):
+        self._no_data("host_blocks()")
+
+    def row(self, idx: int):
+        self._no_data("row()")
+
+    def take(self, indices):
+        self._no_data("take()")
+
+    def materialize(self):
+        self._no_data("materialize()")
+
+
+class ProcessShardedSource(ShardedSource):
+    """A ``ShardedSource`` whose remote shards are ``RemoteShard`` stubs —
+    the input model of a genuine multi-process run.
+
+    Every process constructs the *same global partition* (same shard
+    sizes, same order — global row ids agree everywhere) but holds real
+    data only for its own shards. Streaming consumers (``MeshExecutor``)
+    read local shards and skip the stubs; random access (``take`` /
+    ``row``) is the paper's O(k) candidate exchange: each process gathers
+    its own rows into a zero-filled buffer, the buffers are all-gathered
+    (``compat.exchange_host``), and each row is *selected* from its
+    owning process's contribution — pure data movement, bitwise exact,
+    with O(|indices| · d) bytes on the wire and never a full shard.
+
+    ``take`` is a collective: every process must call it with identical
+    indices (the SPMD drivers do — their host state is replicated by
+    construction). ``materialize`` stays structurally impossible.
+    """
+
+    def __init__(self, shards: Sequence):
+        super().__init__(shards)
+        self._local_ids = tuple(
+            i for i, s in enumerate(self.shards)
+            if not getattr(s, "is_remote", False))
+        if not self._local_ids:
+            raise ValueError(
+                "ProcessShardedSource needs at least one local shard on "
+                "this process")
+
+    @classmethod
+    def for_process(cls, local, sizes: Sequence[int],
+                    process_id: int) -> "ProcessShardedSource":
+        """The canonical one-shard-per-process layout: ``local`` is this
+        process's source, ``sizes`` the global per-shard row counts (same
+        list on every process), ``process_id`` this shard's position."""
+        local = as_source(local)
+        sizes = [int(s) for s in sizes]
+        if not 0 <= process_id < len(sizes):
+            raise ValueError(
+                f"process_id {process_id} out of range for "
+                f"{len(sizes)} shards")
+        if local.n != sizes[process_id]:
+            raise ValueError(
+                f"local shard has {local.n} rows but sizes[{process_id}] "
+                f"says {sizes[process_id]} — the global partition must "
+                "agree across processes")
+        shards = [local if i == process_id
+                  else RemoteShard(sizes[i], local.d, process=i)
+                  for i in range(len(sizes))]
+        return cls(shards)
+
+    @property
+    def local_shard_ids(self) -> tuple:
+        """Indices of the shards whose data lives on this process."""
+        return self._local_ids
+
+    def _owner_process(self, shard: np.ndarray) -> np.ndarray:
+        me = compat.process_index()
+        owners = np.asarray(
+            [getattr(s, "process", me) if getattr(s, "is_remote", False)
+             else me for s in self.shards], np.int64)
+        return owners[shard]
+
+    def take(self, indices) -> np.ndarray:
+        idx = _check_take_indices(indices, self.n)
+        shard = self._locate(idx)
+        vals = np.zeros((idx.size, self.d), np.float32)
+        for s in self._local_ids:
+            sel = shard == s
+            if sel.any():
+                vals[sel] = np.asarray(
+                    self.shards[s].take(idx[sel] - self._offsets[s]),
+                    np.float32)
+        if compat.process_count() == 1:
+            remote = ~np.isin(shard, np.asarray(self._local_ids))
+            if remote.any():
+                raise RuntimeError(
+                    "take() hit a remote shard but the runtime is "
+                    "single-process — nobody can contribute those rows")
+            return vals
+        gathered = compat.exchange_host(vals)        # (P, |idx|, d)
+        owner = self._owner_process(shard)
+        return gathered[owner, np.arange(idx.size)]
+
+    def row(self, idx: int) -> np.ndarray:
+        if not 0 <= idx < self.n:
+            raise IndexError(f"row {idx} out of range for n={self.n}")
+        return self.take(np.asarray([idx]))[0]
 
 
 class WeightedSource:

@@ -49,8 +49,10 @@ from .pairwise import DEFAULT_BM as _P_BM
 from .pairwise import DEFAULT_BN as _P_BN
 from .pairwise import pairwise_dist2 as _pairwise_pallas
 
-_BIG = jnp.float32(3.4e38)
-_NEG = jnp.float32(-3.4e38)
+# np scalars, not jnp: module import must not commit the jax backend
+# (jax.distributed.initialize refuses to run after any computation).
+_BIG = np.float32(3.4e38)
+_NEG = np.float32(-3.4e38)
 
 
 # ---------------------------------------------------------------------------
@@ -313,7 +315,7 @@ def assign_nearest(x, c, *, impl: str = "auto", chunk: int | None = None,
 # Coordinate-space far sentinel for padded/invalid center rows: distance to
 # a 1e18-coordinate row is ~1e36·d (or +inf past f32 range) — it loses every
 # nearest reduction, so sentinel rows never win an assignment.
-_FAR_CENTER = jnp.float32(1e18)
+_FAR_CENTER = np.float32(1e18)
 
 
 def assign_bucketed(q, c, cmask, *, impl: str = "auto",
@@ -423,10 +425,10 @@ def argmin_dist2_over_rows(x, c, *, impl: str = "auto",
 # driven stream produce bitwise-identical samples.
 # ---------------------------------------------------------------------------
 
-_PHILOX_M0 = jnp.uint32(0xD2511F53)
-_PHILOX_M1 = jnp.uint32(0xCD9E8D57)
-_PHILOX_W0 = jnp.uint32(0x9E3779B9)
-_PHILOX_W1 = jnp.uint32(0xBB67AE85)
+_PHILOX_M0 = np.uint32(0xD2511F53)
+_PHILOX_M1 = np.uint32(0xCD9E8D57)
+_PHILOX_W0 = np.uint32(0x9E3779B9)
+_PHILOX_W1 = np.uint32(0xBB67AE85)
 
 
 def _mulhilo32(a, b):
@@ -662,7 +664,8 @@ def host_blocks_of(source, rows: int):
         yield np.asarray(blk, np.float32)
 
 
-def zip_shard_blocks(shards, rows: int, *, with_weights: bool = False):
+def zip_shard_blocks(shards, rows: int, *, with_weights: bool = False,
+                     local_ids=None):
     """Per-shard fold entry point: align the shards' host streams into
     lockstep steps.
 
@@ -679,21 +682,50 @@ def zip_shard_blocks(shards, rows: int, *, with_weights: bool = False):
     rows at weight 0 — fetched per shard through ``weights_of`` (default
     ones), tracked by per-shard row cursors so the slices stay aligned
     with the blocks.
+
+    ``local_ids`` (a collection of shard indices, or ``None`` for "all")
+    is the multi-process form: shards *not* in it are never read — their
+    data lives on other controller processes — and their slot in ``pts``
+    is ``None``. Their ``counts`` are still exact, computed arithmetically
+    from the shard size and a row cursor (every process knows the global
+    partition), so masks and step counts agree across processes. The
+    yielded ``pts`` is then a list of per-shard ``(rows, d)`` arrays /
+    ``None``, which ``compat.global_array_from_shards`` accepts directly.
     """
     if rows < 1:
         raise ValueError(f"rows must be >= 1, got {rows}")
     shards = list(shards)
     if not shards:
         raise ValueError("zip_shard_blocks needs at least one shard")
+    local = (set(range(len(shards))) if local_ids is None
+             else set(int(i) for i in local_ids))
+    sparse = local_ids is not None
+    if sparse and with_weights:
+        raise NotImplementedError(
+            "weighted lockstep steps are not supported with non-local "
+            "shards (no weighted multi-process caller exists)")
     d = shards[0].d
-    its = [host_blocks_of(s, rows) for s in shards]
+    its = [host_blocks_of(s, rows) if s_i in local else None
+           for s_i, s in enumerate(shards)]
     pos = [0] * len(shards)
     while True:
-        pts = np.zeros((len(shards), rows, d), np.float32)
+        if sparse:
+            pts = [None] * len(shards)
+        else:
+            pts = np.zeros((len(shards), rows, d), np.float32)
         w = np.zeros((len(shards), rows), np.float32) if with_weights else None
         counts = np.zeros((len(shards),), np.int64)
         any_rows = False
         for s, it in enumerate(its):
+            if it is None:
+                # Non-local shard: exact block accounting without a read.
+                nb = min(rows, shards[s].n - pos[s])
+                if nb <= 0:
+                    continue
+                pos[s] += nb
+                counts[s] = nb
+                any_rows = True
+                continue
             blk = next(it, None)
             if blk is None:
                 continue
@@ -702,7 +734,12 @@ def zip_shard_blocks(shards, rows: int, *, with_weights: bool = False):
                 raise ValueError(
                     f"shard {s} yielded a {nb}-row block for "
                     f"block_rows={rows}")
-            pts[s, :nb] = blk
+            if sparse:
+                piece = np.zeros((rows, d), np.float32)
+                piece[:nb] = blk
+                pts[s] = piece
+            else:
+                pts[s, :nb] = blk
             if with_weights:
                 w[s, :nb] = _source_weights(shards[s], pos[s], nb)
             pos[s] += nb

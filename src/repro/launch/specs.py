@@ -3,6 +3,15 @@
 No device allocation anywhere — these are the stand-ins the dry-run
 lowers against. Modality frontends are stubs: frames / patch embeddings
 arrive as precomputed float arrays, exactly as the assignment specifies.
+
+Multi-process: every shape here is a *global* shape (``B`` is the global
+batch), so specs built on one process describe the whole cluster's
+program — they are device-free by construction and never consult
+``jax.devices()``. Partitioning global shapes over processes is the mesh
+layer's job: build the mesh with ``launch.mesh.make_cluster_mesh`` (or
+``make_mesh(devices=jax.devices())``) so the ``repro.sharding`` spec
+rules resolve axis sizes against the global device grid, not this
+process's local subset.
 """
 from __future__ import annotations
 

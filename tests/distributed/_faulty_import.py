@@ -1,0 +1,11 @@
+"""A scenario module that dies at import time — the pre-``initialize``
+fault case for the harness tests.  The worker loads its target *before*
+calling ``jax.distributed.initialize``, so this failure must surface as
+a traceback in the parent without any process ever joining the
+coordination barrier (where it could hang the whole cluster)."""
+
+raise RuntimeError("boom at import (pre-initialize scenario fault)")
+
+
+def never(ctx):  # pragma: no cover - unreachable past the raise above
+    return {}

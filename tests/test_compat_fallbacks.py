@@ -115,3 +115,54 @@ def test_shard_map_replication_kwarg_resolved():
                             out_specs=P(), check_replication=False)
     x = np.ones((3,), np.float32)
     np.testing.assert_array_equal(np.asarray(f(x)), x + 1.0)
+
+
+def test_global_assembly_rejects_none_local_piece():
+    # Multi-process callers may pass None for *remote* shards only; on a
+    # single process every shard is addressable, so any None must raise.
+    # (the addressable-but-None branch needs >= 2 devices and is pinned
+    # by the multi-process assembly scenario in tests/distributed/)
+    mesh = one_device_mesh(canonical)
+    good = np.zeros((4, 3), np.float32)
+    with pytest.raises(ValueError, match="all pieces are None"):
+        canonical.global_array_from_shards(mesh, P("data"), [None])
+    with pytest.raises(ValueError, match="all pieces are None"):
+        canonical.global_array_from_shards(mesh, P("data"), [None] * 4)
+    with pytest.raises(ValueError, match="expected"):
+        canonical.global_array_from_shards(
+            mesh, P("data"), [good, np.zeros((2, 3), np.float32)])
+    # a present piece still assembles when *it* is the only shard
+    out = canonical.global_array_from_shards(mesh, P("data"), [good])
+    np.testing.assert_array_equal(np.asarray(out), good)
+
+
+def test_global_assembly_fallback_rejects_none(monkeypatch):
+    # The host-concatenate fallback needs every row on this host — a
+    # None (remote) piece must be a hard error, not a silent zero-fill.
+    monkeypatch.delattr(jax, "make_array_from_single_device_arrays",
+                        raising=False)
+    mod = load_fresh_compat()
+    assert mod.HAS_GLOBAL_ASSEMBLY is False
+    mesh = one_device_mesh(mod)
+    good = np.zeros((4, 3), np.float32)
+    with pytest.raises(RuntimeError, match="needs every piece"):
+        mod.global_array_from_shards(mesh, P("data"), [good, None])
+
+
+def test_single_process_distributed_helpers():
+    # On a one-process runtime the cross-process primitives degenerate to
+    # identities — these are the exact code paths the single-process
+    # executors keep using after the multi-process refactor.
+    assert canonical.process_count() >= 1
+    assert canonical.process_index() == 0
+    x = np.arange(12, dtype=np.float32).reshape(4, 3)
+    np.testing.assert_array_equal(canonical.fetch_global(x), x)
+    ex = canonical.exchange_host(x)
+    assert ex.shape == (1, 4, 3)
+    np.testing.assert_array_equal(ex[0], x)
+    mesh = one_device_mesh(canonical)
+    rep = canonical.replicated_array(mesh, x)
+    np.testing.assert_array_equal(np.asarray(rep), x)
+    assert canonical.local_shard_indices(mesh, P("data"), 1) == [0]
+    # enable_cpu_collectives is idempotent and reports availability
+    assert canonical.enable_cpu_collectives() in (True, False)

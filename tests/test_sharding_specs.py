@@ -62,3 +62,25 @@ def test_auto_spec_prefers_largest_divisible():
     mesh = Mesh(dev, ("data", "model"))
     got = auto_spec((61, 24, 448), mesh)
     assert len(got) == 3
+
+
+def test_make_mesh_explicit_devices():
+    # launch.mesh.make_mesh must honor an explicit device list (the
+    # multi-process contract: meshes are built over the *global* device
+    # set, which under jax.distributed is a strict superset of what
+    # jax.local_devices() would give a per-process default).
+    from repro.launch.mesh import make_cluster_mesh, make_mesh
+    devs = jax.devices()
+    m = make_mesh((1,), ("data",), devices=devs[:1])
+    assert list(m.devices.flat) == devs[:1]
+    # default is the full jax.devices() set, not a local subset
+    m2 = make_mesh((len(devs),), ("data",))
+    assert list(m2.devices.flat) == devs
+    with pytest.raises(ValueError, match="need 2 devices"):
+        make_mesh((2,), ("data",), devices=devs[:1])
+    # single-process degenerate cluster mesh == make_mesh over all devices
+    cm = make_cluster_mesh()
+    assert list(cm.devices.flat) == devs
+    assert cm.axis_names == ("data",)
+    with pytest.raises(ValueError, match="single sharding axis"):
+        make_cluster_mesh(axes=("data", "model"))

@@ -757,3 +757,73 @@ def test_mesh_executor_sharded_never_materializes_full_n():
     mrg(ShardedSource([spy]), 4, executor=me, impl="ref")
     assert spy.max_read <= rows_me < spy.n
     assert not spy.materialized
+
+
+# ---------------------------------------------------------------------------
+# multi-process shard model (single-process behavior; the cross-process
+# behavior is pinned by tests/distributed/)
+# ---------------------------------------------------------------------------
+
+
+def test_remote_shard_stubs_refuse_all_reads():
+    from repro.data import RemoteShard
+    rs = RemoteShard(128, 3, process=2)
+    assert (rs.n, rs.d, rs.process) == (128, 3, 2)
+    assert rs.is_remote
+    for op in (lambda: next(iter(rs.blocks(32))),
+               lambda: next(iter(rs.host_blocks(32))),
+               lambda: rs.row(0),
+               lambda: rs.take([0, 1]),
+               lambda: rs.materialize()):
+        with pytest.raises(RuntimeError, match="lives on process 2"):
+            op()
+    with pytest.raises(ValueError):
+        RemoteShard(-1, 3)
+    with pytest.raises(ValueError):
+        RemoteShard(4, 0)
+
+
+def test_process_sharded_source_for_process_layout():
+    from repro.data import ProcessShardedSource, RemoteShard
+    x = _pts(n=96, d=4, seed=21)
+    local = HostSource(x[32:64])
+    src = ProcessShardedSource.for_process(local, [32, 32, 32], 1)
+    assert src.n == 96 and src.d == 4
+    assert src.local_shard_ids == (1,)
+    assert getattr(src.shards[0], "is_remote", False)
+    assert getattr(src.shards[2], "is_remote", False)
+    assert src.shards[0].process == 0 and src.shards[2].process == 2
+    # take on locally-owned global rows resolves through the shard offset
+    np.testing.assert_array_equal(src.take([32, 63]), x[[32, 63]])
+    np.testing.assert_array_equal(src.row(40), x[40])
+    # a remote row on a single-process runtime is unservable — hard error
+    with pytest.raises(RuntimeError, match="single-process"):
+        src.take([0])
+    # size mismatch between the local shard and the global partition
+    with pytest.raises(ValueError, match="must agree across processes"):
+        ProcessShardedSource.for_process(local, [32, 16, 32], 1)
+    with pytest.raises(ValueError, match="out of range"):
+        ProcessShardedSource.for_process(local, [32, 32], 2)
+    # all-remote construction can never fold anything locally
+    with pytest.raises(ValueError, match="at least one local shard"):
+        ProcessShardedSource([RemoteShard(8, 4, process=0),
+                              RemoteShard(8, 4, process=1)])
+
+
+def test_process_sharded_source_refused_on_single_process():
+    # A source with remote shards on a single-process runtime is a launch
+    # bug: no other process exists to feed the stubs. MeshExecutor must
+    # report it as a configuration error up front (_local_ids), not as a
+    # RemoteShard read crash deep inside a fold.
+    from repro.core import MeshExecutor
+    from repro.data import ProcessShardedSource
+    from repro.launch.mesh import make_mesh
+    x = _pts(n=64, d=3, seed=5)
+    src = ProcessShardedSource.for_process(HostSource(x[:32]), [32, 32], 0)
+    ex = MeshExecutor(make_mesh((1,), ("data",)), block_rows=16)
+    with pytest.raises(ValueError, match="single-process"):
+        ex._local_ids(src)
+    # and the full driver surfaces a ValueError too (shard/mesh mismatch
+    # or the remote-shard trap, depending on topology) — never a crash
+    with pytest.raises(ValueError):
+        mrg(src, 4, executor=ex)

@@ -2,8 +2,9 @@
 
 Contract: version-drifting jax APIs (``jax.experimental.shard_map``,
 top-level ``jax.shard_map``, ``jax.set_mesh``,
-``jax.make_array_from_single_device_arrays``, ``jax.sharding.AxisType``)
-are used *only* inside ``src/repro/compat.py`` — every other module goes
+``jax.make_array_from_single_device_arrays``, ``jax.sharding.AxisType``,
+``jax.experimental.multihost_utils``, ``jax.distributed``
+initialize/shutdown) are used *only* inside ``src/repro/compat.py`` — every other module goes
 through the feature-detected shim so the tree imports and runs on both
 the jax 0.4.x and 0.6+ CI lines.
 
@@ -19,7 +20,10 @@ from typing import Iterator, List
 from .. import config
 from ..core import Diagnostic, Rule, register
 
-_FORBIDDEN_MODULES = ("jax.experimental.shard_map",)
+_FORBIDDEN_MODULES = (
+    "jax.experimental.shard_map",
+    "jax.experimental.multihost_utils",
+)
 
 _FORBIDDEN_FROM = {
     ("jax", "shard_map"),
@@ -27,6 +31,9 @@ _FORBIDDEN_FROM = {
     ("jax", "make_array_from_single_device_arrays"),
     ("jax.sharding", "AxisType"),
     ("jax.experimental", "shard_map"),
+    ("jax.experimental", "multihost_utils"),
+    ("jax.distributed", "initialize"),
+    ("jax.distributed", "shutdown"),
 }
 
 _FORBIDDEN_ATTRS = {
@@ -35,6 +42,9 @@ _FORBIDDEN_ATTRS = {
     "jax.make_array_from_single_device_arrays",
     "jax.sharding.AxisType",
     "jax.experimental.shard_map",
+    "jax.experimental.multihost_utils",
+    "jax.distributed.initialize",
+    "jax.distributed.shutdown",
 }
 
 _HINT = "route it through repro.compat (extend the shim if missing)"
